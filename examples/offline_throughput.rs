@@ -1,0 +1,88 @@
+//! Offline throughput scenario: batch workload, SJF vs LJF vs FCFS.
+//!
+//! The paper's offline mode targets maximum token throughput. This example
+//! runs the paper-scale simulated cluster (Llama2-13B on 4×A100) over a
+//! heterogeneous Mixed batch and shows the intra-bucket policy trade-off
+//! (§II-B): SJF minimizes queueing latency, LJF maximizes token
+//! throughput. Pass `--engine pjrt` to run a scaled-down version on the
+//! real tiny model instead.
+//!
+//! ```sh
+//! cargo run --release --offline --example offline_throughput -- [--n 256] [--engine sim]
+//! ```
+
+use bucketserve::cluster::sim::SimEngine;
+use bucketserve::cluster::Engine;
+use bucketserve::config::{Policy, SystemConfig};
+use bucketserve::coordinator::BucketServe;
+use bucketserve::metrics::Summary;
+use bucketserve::runtime::{artifacts_available, PjrtEngine, DEFAULT_ARTIFACTS_DIR};
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::util::cli::Args;
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn main() -> anyhow::Result<()> {
+    bucketserve::util::logging::init();
+    let args = Args::from_env();
+    let use_pjrt = args.raw("engine") == Some("pjrt");
+    let n = args.get_or("n", if use_pjrt { 24 } else { 256usize });
+
+    let base_cfg = if use_pjrt {
+        SystemConfig::tiny_pjrt()
+    } else {
+        SystemConfig::default()
+    };
+    let mut trace = Trace::batch(
+        Dataset::Mixed,
+        n,
+        RequestClass::Offline,
+        base_cfg.model.max_seq,
+        base_cfg.seed,
+    );
+    if use_pjrt {
+        for r in trace.requests.iter_mut() {
+            r.output_len = r.output_len.clamp(2, 6);
+        }
+    }
+
+    println!(
+        "offline batch: {} mixed requests, {} total tokens ({})",
+        trace.len(),
+        trace.total_tokens(),
+        if use_pjrt { "real PJRT engine" } else { "simulated 4×A100" }
+    );
+
+    let mut table = Table::new(&[
+        "policy", "tok/s", "makespan s", "mean E2E ms", "p99 E2E ms", "util", "waste",
+    ]);
+    for policy in [Policy::Fcfs, Policy::Sjf, Policy::Ljf] {
+        let mut cfg = base_cfg.clone();
+        cfg.scheduler.policy = policy;
+        let report = if use_pjrt {
+            let dir = args.raw("artifacts").unwrap_or(DEFAULT_ARTIFACTS_DIR);
+            if !artifacts_available(dir) {
+                eprintln!("artifacts missing; run `make artifacts`");
+                std::process::exit(2);
+            }
+            let mut engine = PjrtEngine::load(dir)?;
+            engine.runtime_mut().warm_up()?;
+            BucketServe::new(cfg.clone()).run(&trace, &mut engine)
+        } else {
+            let mut engine = SimEngine::new(&cfg);
+            BucketServe::new(cfg.clone()).run(&trace, &mut engine)
+        };
+        let s = Summary::from_report(policy.name(), &report, &cfg.slo);
+        table.row(vec![
+            policy.name().to_string(),
+            f1(s.throughput_tps),
+            f2(s.makespan_s),
+            f1(s.mean_e2e_ms),
+            f1(s.p99_e2e_ms),
+            f2(s.gpu_util),
+            f2(s.mean_waste_ratio),
+        ]);
+    }
+    table.print("intra-bucket policy sweep (offline, BucketServe)");
+    println!("\noffline_throughput OK");
+    Ok(())
+}

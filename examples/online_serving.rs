@@ -1,0 +1,91 @@
+//! Online serving scenario: latency-SLO-bound traffic on the real engine.
+//!
+//! Replays a Poisson arrival trace (wall-clock pacing!) of chat-style
+//! requests through BucketServe on the PJRT CPU engine, then reports SLO
+//! attainment, TTFT/TBT distributions, and a comparison against the
+//! DistServe-like baseline on the *same* arrivals.
+//!
+//! ```sh
+//! cargo run --release --offline --example online_serving -- [--n 24] [--rps 4]
+//! ```
+
+use bucketserve::baselines::DistServe;
+use bucketserve::config::SystemConfig;
+use bucketserve::coordinator::BucketServe;
+use bucketserve::metrics::Summary;
+use bucketserve::runtime::{artifacts_available, PjrtEngine, DEFAULT_ARTIFACTS_DIR};
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::util::cli::Args;
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn main() -> anyhow::Result<()> {
+    bucketserve::util::logging::init();
+    let args = Args::from_env();
+    let n = args.get_or("n", 24usize);
+    let rps = args.get_or("rps", 4.0f64);
+    let dir = args
+        .raw("artifacts")
+        .unwrap_or(DEFAULT_ARTIFACTS_DIR)
+        .to_string();
+    if !artifacts_available(&dir) {
+        eprintln!("artifacts not found in {dir}; run `make artifacts` first");
+        std::process::exit(2);
+    }
+
+    let mut cfg = SystemConfig::tiny_pjrt();
+    // Tight-but-achievable SLOs for the tiny CPU model.
+    cfg.slo.ttft_us = 2_000_000;
+    cfg.slo.tbt_us = 1_000_000;
+
+    // Short online prompts with a few long stragglers (mixed-lite), small
+    // generations so the wall-clock replay stays quick.
+    let mut trace = Trace::generate(
+        Dataset::Alpaca,
+        n,
+        rps,
+        RequestClass::Online,
+        cfg.model.max_seq,
+        cfg.seed,
+    );
+    for r in trace.requests.iter_mut() {
+        r.output_len = r.output_len.clamp(2, 6);
+        if r.id % 7 == 3 {
+            r.input_len = r.input_len.max(180); // inject long prompts
+        }
+    }
+
+    println!(
+        "replaying {} online requests at {} RPS (wall-clock) on the real model…",
+        n, rps
+    );
+    let mut table = Table::new(&[
+        "system", "SLO", "mean TTFT ms", "p99 TTFT ms", "mean TBT ms", "RPS",
+    ]);
+
+    for which in ["BucketServe", "DistServe"] {
+        let mut engine = PjrtEngine::load(&dir)?;
+        engine.runtime_mut().warm_up()?; // compile outside the timed path
+        let report = match which {
+            "BucketServe" => BucketServe::new(cfg.clone()).run(&trace, &mut engine),
+            _ => DistServe::new(cfg.clone()).run(&trace, &mut engine),
+        };
+        let s = Summary::from_report(which, &report, &cfg.slo);
+        table.row(vec![
+            which.to_string(),
+            f2(s.slo_attainment),
+            f1(s.mean_ttft_ms),
+            f1(s.p99_ttft_ms),
+            f1(s.mean_tbt_ms),
+            f2(s.server_rps),
+        ]);
+        println!(
+            "{which}: served {}/{} requests, wall {:.1}s",
+            s.n_requests,
+            n,
+            s.makespan_s
+        );
+    }
+    table.print("online serving on PJRT-CPU (paired trace)");
+    println!("\nonline_serving OK");
+    Ok(())
+}

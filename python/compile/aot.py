@@ -1,0 +1,164 @@
+"""AOT compiler: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Run once at build time (``make artifacts``); Python is never on the request
+path.  Emits into ``artifacts/``:
+
+* ``prefill_b{B}_s{S}.hlo.txt`` — one prefill executable per
+  (batch-size, bucket-upper-bound) pair.  Bucket bounds ARE the compiled
+  static shapes: BucketServe's pad-to-bucket-bound batching contract maps
+  1:1 onto the AOT executable cache (DESIGN.md §3).
+* ``decode_b{B}.hlo.txt`` — one continuous-batching decode step per batch
+  size, with a fixed KV capacity.
+* ``weights.bin`` — deterministic (seeded) f32 weights, flat little-endian,
+  in the canonical ``model.param_shapes`` order.
+* ``manifest.json`` — model config + weight table (name/shape/offset) +
+  artifact table (file/kind/batch/seq/input-output contract), consumed by
+  ``rust/src/runtime/artifacts.rs``.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Batch sizes and prefill bucket bounds compiled ahead of time.  These are
+# the shape menu the Rust coordinator's BucketManager selects from.
+PREFILL_BATCHES = (1, 2, 4, 8)
+PREFILL_BUCKETS = (32, 64, 128, 256)
+DECODE_BATCHES = (1, 2, 4, 8)
+SEED = 42
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg: M.ModelConfig, batch: int, seq: int) -> str:
+    fn = functools.partial(M.prefill, cfg=cfg)
+    params_spec = tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_shapes(cfg))
+    tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    lengths = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(params_spec, tokens, lengths))
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    fn = functools.partial(M.decode_step, cfg=cfg)
+    params_spec = tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for _, s in M.param_shapes(cfg))
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(
+        (cfg.n_layers, batch, cfg.n_heads, cfg.kv_capacity, cfg.head_dim),
+        jnp.float32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(params_spec, tokens, kv, kv, pos))
+
+
+def write_weights(cfg: M.ModelConfig, out_dir: str):
+    params = M.init_params(cfg, seed=SEED)
+    table = []
+    offset = 0
+    blob = bytearray()
+    for (name, shape), arr in zip(M.param_shapes(cfg), params):
+        import numpy as np
+        data = np.asarray(arr, dtype="<f4").tobytes()
+        table.append({
+            "name": name,
+            "shape": list(shape),
+            "offset": offset,
+            "bytes": len(data),
+        })
+        blob.extend(data)
+        offset += len(data)
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    return table, offset, hashlib.sha256(bytes(blob)).hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--small", action="store_true",
+                    help="compile a reduced shape menu (fast CI mode)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.ModelConfig()
+    prefill_batches = (1, 4) if args.small else PREFILL_BATCHES
+    prefill_buckets = (32, 128) if args.small else PREFILL_BUCKETS
+    decode_batches = (1, 4) if args.small else DECODE_BATCHES
+
+    weight_table, total_bytes, sha = write_weights(cfg, args.out_dir)
+    print(f"weights.bin: {total_bytes} bytes "
+          f"({sum(1 for _ in weight_table)} tensors) sha256={sha[:16]}…")
+
+    pnames = M.param_names(cfg)
+    artifacts = []
+    for b in prefill_batches:
+        for s in prefill_buckets:
+            name = f"prefill_b{b}_s{s}"
+            text = lower_prefill(cfg, b, s)
+            with open(os.path.join(args.out_dir, name + ".hlo.txt"), "w") as f:
+                f.write(text)
+            artifacts.append({
+                "name": name, "kind": "prefill", "batch": b, "seq": s,
+                "file": name + ".hlo.txt",
+                "inputs": pnames + ["tokens", "lengths"],
+                "outputs": ["last_logits", "k_cache", "v_cache"],
+            })
+            print(f"{name}: {len(text)} chars")
+    for b in decode_batches:
+        name = f"decode_b{b}"
+        text = lower_decode(cfg, b)
+        with open(os.path.join(args.out_dir, name + ".hlo.txt"), "w") as f:
+            f.write(text)
+        artifacts.append({
+            "name": name, "kind": "decode", "batch": b,
+            "seq": cfg.kv_capacity, "file": name + ".hlo.txt",
+            "inputs": pnames + ["tokens", "k_cache", "v_cache", "pos"],
+            "outputs": ["logits", "k_cache", "v_cache"],
+        })
+        print(f"{name}: {len(text)} chars")
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "ffn_dim": cfg.ffn_dim,
+            "kv_capacity": cfg.kv_capacity, "max_prefill": cfg.max_prefill,
+            "param_count": int(cfg.param_count()),
+        },
+        "seed": SEED,
+        "weights": {"file": "weights.bin", "total_bytes": total_bytes,
+                    "sha256": sha, "tensors": weight_table},
+        "artifacts": artifacts,
+        "interchange": "hlo-text",
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json: {len(artifacts)} artifacts, "
+          f"{manifest['model']['param_count']} params")
+
+
+if __name__ == "__main__":
+    main()

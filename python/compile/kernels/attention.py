@@ -1,0 +1,216 @@
+"""Layer-1 Pallas attention kernels for BucketServe.
+
+Two kernels cover the two phases of disaggregated serving:
+
+* ``prefill_attention`` — tiled, flash-style causal attention over a whole
+  (padded-to-bucket-bound) prompt.  The grid iterates over
+  (batch, head, query-block); each program streams K/V blocks through VMEM
+  with the running log-sum-exp recurrence, so the S×S score matrix is never
+  materialized.  This is the TPU re-think of FlashAttention's threadblock
+  SRAM tiling (DESIGN.md §8): BlockSpec expresses the HBM→VMEM schedule, and
+  the inner ``jnp.dot`` contractions are MXU-shaped.
+
+* ``decode_attention`` — one query token per sequence against a fixed-capacity
+  KV cache, masked by the current position.  This is the bandwidth-bound
+  kernel (the whole KV cache streams through once per generated token).
+
+Both kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the interpret path is the correctness (and AOT
+lowering) vehicle; real-TPU efficiency is estimated structurally in
+DESIGN.md §7/§8.
+
+Correctness oracle: ``ref.py`` (pure jnp), exercised by hypothesis sweeps in
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  On a real TPU these would be MXU-aligned (128 lanes /
+# 8 sublanes); the tiny e2e model uses shorter sequences, so tiles clamp to
+# the actual extent.  Kept as module constants so tests can sweep them.
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+_NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() NaN-free
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                    seq_len: int, scale: float):
+    """One (batch, head, q-block) program of flash-style causal attention.
+
+    Refs (per BlockSpec; leading singleton block dims retained by pallas):
+      len_ref : (1,)                int32 — valid length of this sequence
+      q_ref   : (1, 1, block_q, d)  queries for this block
+      k_ref   : (1, 1, seq, d)      full K for this (batch, head)
+      v_ref   : (1, 1, seq, d)      full V
+      o_ref   : (1, 1, block_q, d)  output block
+    """
+    block_q = q_ref.shape[2]
+    d = q_ref.shape[3]
+    q_blk = pl.program_id(2)
+    q_off = q_blk * block_q
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (block_q, d)
+    k_full = k_ref[0, 0]                                   # (seq, d)
+    v_full = v_ref[0, 0]
+    length = len_ref[0]
+
+    # Flash recurrence state: running max m, normalizer l, accumulator acc.
+    m = jnp.full((block_q,), _NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, d), dtype=jnp.float32)
+
+    num_kb = pl.cdiv(seq_len, block_k)
+    q_pos = q_off + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_off = kb * block_k
+        k_tile = jax.lax.dynamic_slice_in_dim(k_full, k_off, block_k, axis=0)
+        v_tile = jax.lax.dynamic_slice_in_dim(v_full, k_off, block_k, axis=0)
+        s = jnp.dot(q, k_tile.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)  # (block_q, block_k)
+
+        k_pos = k_off + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (k_pos <= q_pos) & (k_pos < length)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        # Rows that are fully masked keep p≈0 because s==_NEG_INF==m_new only
+        # when the row never saw a real score; guard the degenerate exp(0)=1.
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v_tile.astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m, l, acc))
+
+    # Padded query rows (q_pos >= length) have l == 0; emit zeros for them.
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    out = acc / safe_l[:, None]
+    out = jnp.where((q_off + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, d), 0)) < length, out, 0.0)
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def prefill_attention(q, k, v, lengths, *, block_q: int = DEFAULT_BLOCK_Q,
+                      block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """Causal, length-masked multi-head attention for the prefill phase.
+
+    Args:
+      q, k, v: (B, H, S, D) arrays (any float dtype; accumulates in f32).
+      lengths: (B,) int32 valid lengths; positions >= length are padding and
+        produce zero outputs (they never contribute as keys either).
+      block_q/block_k: VMEM tile extents (clamped to S).
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      (B, H, S, D) attention outputs, same dtype as q.
+    """
+    b, h, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    scale = 1.0 / (d ** 0.5)
+    grid = (b, h, pl.cdiv(s, block_q))
+
+    kernel = functools.partial(_prefill_kernel, block_k=block_k, seq_len=s,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, iq: (ib,)),
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda ib, ih, iq: (ib, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch, head) program: single query vs. the whole KV cache.
+
+    Refs (leading singleton block dims retained by pallas):
+      pos_ref : (1,)            int32 — number of valid cache entries (attend
+                                to positions [0, pos); the current token's K/V
+                                must already be at index pos-1)
+      q_ref   : (1, 1, d)       the query
+      k_ref   : (1, 1, cap, d)  KV-cache keys
+      v_ref   : (1, 1, cap, d)  KV-cache values
+      o_ref   : (1, 1, d)
+    """
+    cap = k_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale            # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (cap, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    n_valid = pos_ref[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, cap)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
+    s = jnp.where(idx < n_valid, s, _NEG_INF)
+
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(idx < n_valid, p, 0.0)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    out = jnp.dot(p, v, preferred_element_type=jnp.float32) / jnp.maximum(l, 1e-30)
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, n_valid, *, interpret: bool = True):
+    """Single-token attention for the decode phase.
+
+    Args:
+      q: (B, H, D) current-step queries.
+      k, v: (B, H, CAP, D) KV cache (CAP = bucket-capacity padding).
+      n_valid: (B,) int32 — entries [0, n_valid) of the cache are live,
+        *including* the current token's K/V at n_valid - 1.
+
+    Returns:
+      (B, H, D) attention outputs.
+    """
+    b, h, d = q.shape
+    cap = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih: (ib,)),
+            pl.BlockSpec((1, 1, d), lambda ib, ih: (ib, ih, 0)),
+            pl.BlockSpec((1, 1, cap, d), lambda ib, ih: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, cap, d), lambda ib, ih: (ib, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda ib, ih: (ib, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(n_valid, q, k, v)
+    return out
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, d: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one prefill program (DESIGN.md §7).
+
+    q tile + k tile + v tile + output tile + flash state (m, l, acc in f32).
+    """
+    tiles = (block_q * d + 2 * block_k * d + block_q * d) * dtype_bytes
+    state = (2 * block_q + block_q * d) * 4
+    return tiles + state

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are deliberately naive (materialize the full score matrix) so they are
+easy to audit; the pytest/hypothesis suite asserts the Pallas kernels match
+them to numerical tolerance across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Naive causal + length-masked attention. Shapes as kernels.prefill."""
+    b, h, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    causal = k_pos <= q_pos                                       # (s, s)
+    valid_k = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    mask = causal[None, None, :, :] & valid_k                     # (b,1,s,s)
+    scores = jnp.where(mask, scores, _NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30), vf)
+
+    valid_q = jnp.arange(s)[None, None, :, None] < lengths[:, None, None, None]
+    out = jnp.where(valid_q, out, 0.0)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, n_valid):
+    """Naive single-token attention. Shapes as kernels.decode_attention."""
+    b, h, d = q.shape
+    cap = k.shape[2]
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    scores = jnp.einsum("bhd,bhkd->bhk", qf, kf)
+    idx = jnp.arange(cap)[None, None, :]
+    mask = idx < n_valid[:, None, None]
+    scores = jnp.where(mask, scores, _NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1)                                       # (b, h)
+    out = jnp.einsum("bhk,bhkd->bhd", p, vf) / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

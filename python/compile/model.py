@@ -1,0 +1,232 @@
+"""Layer-2 JAX model: a LLaMA-style decoder-only transformer.
+
+Build-time only — this module is lowered by ``aot.py`` to HLO text and then
+executed from the Rust runtime; Python never sits on the request path.
+
+Architecture (matching the families the paper serves, scaled tiny for the
+CPU test bed): token embedding → N × [RMSNorm → RoPE multi-head attention →
+residual → RMSNorm → SwiGLU MLP → residual] → RMSNorm → LM head.
+
+Two entry points mirror the disaggregated phases:
+
+* ``prefill(params, tokens[B,S], lengths[B])``
+    → ``(last_logits[B,V], k_cache[L,B,H,CAP,D], v_cache[L,B,H,CAP,D])``
+  Runs the whole (bucket-padded) prompt through the stack, returns the
+  next-token logits at each sequence's true last position plus the KV cache
+  padded to the decode capacity CAP, ready for NVLink-style hand-off.
+
+* ``decode_step(params, tokens[B], k_cache, v_cache, pos[B])``
+    → ``(logits[B,V], k_cache', v_cache')``
+  One continuous-batching iteration: appends each sequence's K/V at its own
+  position and attends over its own valid prefix.
+
+Attention in both phases calls the Layer-1 Pallas kernels
+(``kernels.attention``), so the kernels lower into the same HLO artifact.
+
+Parameters travel as a flat tuple (deterministic jax pytree flattening
+order); ``param_names``/``init_params`` define that order and ``aot.py``
+records it in the artifact manifest for the Rust loader.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Hyper-parameters of the served model (tiny default for CPU e2e)."""
+    vocab: int = 1024
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    ffn_dim: int = 384
+    kv_capacity: int = 320      # decode-phase KV cache capacity (max ctx)
+    max_prefill: int = 256      # largest prefill bucket bound
+    rope_base: float = 10000.0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(self))
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every weight tensor, in the canonical flat order."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wk", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wv", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wo", (cfg.qkv_dim, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.ffn_dim)),
+            (p + "w_up", (cfg.d_model, cfg.ffn_dim)),
+            (p + "w_down", (cfg.ffn_dim, cfg.d_model)),
+        ]
+    shapes += [
+        ("final_norm", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return shapes
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return [n for n, _ in param_shapes(cfg)]
+
+
+def init_params(cfg: ModelConfig, seed: int = 42):
+    """Deterministic random weights (the 'small real model' for e2e runs)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / (fan_in ** 0.5)
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * scale)
+    return tuple(params)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, base: float):
+    """Rotary embedding. x: (..., T, H, D) or (..., H, D); positions matches T."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _unpack(params, cfg: ModelConfig):
+    names = param_names(cfg)
+    return dict(zip(names, params))
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, lengths, cfg: ModelConfig):
+    """Full-prompt forward pass; see module docstring for the contract."""
+    p = _unpack(params, cfg)
+    b, s = tokens.shape
+    h, d = cfg.n_heads, cfg.head_dim
+    cap = cfg.kv_capacity
+
+    x = p["embed"][tokens]                                     # (B, S, M)
+    positions = jnp.arange(s)[None, :].repeat(b, axis=0)       # (B, S)
+
+    k_cache = []
+    v_cache = []
+    for i in range(cfg.n_layers):
+        lp = f"layer{i}."
+        xa = rmsnorm(x, p[lp + "attn_norm"])
+        q = (xa @ p[lp + "wq"]).reshape(b, s, h, d)
+        k = (xa @ p[lp + "wk"]).reshape(b, s, h, d)
+        v = (xa @ p[lp + "wv"]).reshape(b, s, h, d)
+        q = rope(q, positions, cfg.rope_base)
+        k = rope(k, positions, cfg.rope_base)
+
+        # Kernels want (B, H, S, D).
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        attn = kernels.prefill_attention(qt, kt, vt, lengths)  # (B,H,S,D)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, h * d)
+        x = x + attn @ p[lp + "wo"]
+
+        xm = rmsnorm(x, p[lp + "mlp_norm"])
+        x = x + swiglu(xm, p[lp + "w_gate"], p[lp + "w_up"], p[lp + "w_down"])
+
+        # Pad K/V to decode capacity for the phase hand-off.
+        pad = [(0, 0), (0, 0), (0, cap - s), (0, 0)]
+        k_cache.append(jnp.pad(kt, pad))
+        v_cache.append(jnp.pad(vt, pad))
+
+    x = rmsnorm(x, p["final_norm"])
+    # Next-token logits at each sequence's true last position.
+    last_idx = jnp.clip(lengths - 1, 0, s - 1)                 # (B,)
+    last_h = jnp.take_along_axis(
+        x, last_idx[:, None, None].repeat(cfg.d_model, axis=2), axis=1
+    )[:, 0, :]                                                 # (B, M)
+    logits = last_h @ p["lm_head"]                             # (B, V)
+
+    return logits, jnp.stack(k_cache), jnp.stack(v_cache)      # (L,B,H,CAP,D)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params, tokens, k_cache, v_cache, pos, cfg: ModelConfig):
+    """One continuous-batching decode iteration; see module docstring."""
+    p = _unpack(params, cfg)
+    b = tokens.shape[0]
+    h, d = cfg.n_heads, cfg.head_dim
+    cap = cfg.kv_capacity
+
+    x = p["embed"][tokens]                                     # (B, M)
+    # One-hot scatter index for per-sequence insertion position.
+    onehot = jax.nn.one_hot(pos, cap, dtype=jnp.float32)       # (B, CAP)
+
+    new_k = []
+    new_v = []
+    for i in range(cfg.n_layers):
+        lp = f"layer{i}."
+        xa = rmsnorm(x, p[lp + "attn_norm"])
+        q = (xa @ p[lp + "wq"]).reshape(b, h, d)
+        k = (xa @ p[lp + "wk"]).reshape(b, h, d)
+        v = (xa @ p[lp + "wv"]).reshape(b, h, d)
+        q = rope(q, pos, cfg.rope_base)                        # (B, H, D)
+        k = rope(k, pos, cfg.rope_base)
+
+        # Insert this step's K/V at each sequence's own position.
+        ins = onehot[:, None, :, None]                         # (B,1,CAP,1)
+        kc = k_cache[i] * (1.0 - ins) + k[:, :, None, :] * ins
+        vc = v_cache[i] * (1.0 - ins) + v[:, :, None, :] * ins
+        new_k.append(kc)
+        new_v.append(vc)
+
+        attn = kernels.decode_attention(q, kc, vc, pos + 1)    # (B, H, D)
+        x = x + attn.reshape(b, h * d) @ p[lp + "wo"]
+
+        xm = rmsnorm(x, p[lp + "mlp_norm"])
+        x = x + swiglu(xm, p[lp + "w_gate"], p[lp + "w_up"], p[lp + "w_down"])
+
+    x = rmsnorm(x, p["final_norm"])
+    logits = x @ p["lm_head"]                                  # (B, V)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

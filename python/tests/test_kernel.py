@@ -1,0 +1,195 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, lengths, and tile sizes; this is the core
+numerical-correctness signal for everything the Rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    s=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 16]),
+    block=st.sampled_from([8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_prefill_matches_ref(b, h, s, d, block, dtype, seed, data):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, s, d), dtype)
+    k = rand(kk, (b, h, s, d), dtype)
+    v = rand(kv, (b, h, s, d), dtype)
+    lengths = jnp.array(
+        [data.draw(st.integers(1, s)) for _ in range(b)], jnp.int32)
+
+    out = K.prefill_attention(q, k, v, lengths, block_q=block, block_k=block)
+    want = R.prefill_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_prefill_full_length_causality():
+    """Output at position i must not depend on keys at positions > i."""
+    b, h, s, d = 1, 2, 32, 16
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, s, d), jnp.float32)
+    k = rand(kk, (b, h, s, d), jnp.float32)
+    v = rand(kv, (b, h, s, d), jnp.float32)
+    lengths = jnp.full((b,), s, jnp.int32)
+
+    out_full = K.prefill_attention(q, k, v, lengths)
+    # Corrupt the future: change k/v beyond position 10 and check outputs at
+    # positions <= 10 are unchanged.
+    k2 = k.at[:, :, 11:, :].set(99.0)
+    v2 = v.at[:, :, 11:, :].set(-99.0)
+    out_corrupt = K.prefill_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(out_full[:, :, :11], out_corrupt[:, :, :11],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_padding_rows_zero():
+    b, h, s, d = 2, 1, 16, 8
+    key = jax.random.PRNGKey(1)
+    q = rand(key, (b, h, s, d), jnp.float32)
+    lengths = jnp.array([5, 16], jnp.int32)
+    out = K.prefill_attention(q, q, q, lengths)
+    assert np.all(np.asarray(out)[0, :, 5:, :] == 0.0)
+    assert not np.all(np.asarray(out)[1, :, 5:, :] == 0.0)
+
+
+def test_prefill_block_sizes_equivalent():
+    """Tiling must not change the math (flash recurrence invariance)."""
+    b, h, s, d = 2, 2, 64, 16
+    key = jax.random.PRNGKey(2)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, s, d), jnp.float32)
+    k = rand(kk, (b, h, s, d), jnp.float32)
+    v = rand(kv, (b, h, s, d), jnp.float32)
+    lengths = jnp.array([64, 40], jnp.int32)
+    outs = [
+        np.asarray(K.prefill_attention(q, k, v, lengths, block_q=bq, block_k=bk))
+        for bq, bk in [(8, 8), (16, 32), (64, 64), (32, 8)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_length_one():
+    """Degenerate single-token prompt attends only to itself → out == v0."""
+    b, h, s, d = 1, 1, 8, 4
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, s, d), jnp.float32)
+    k = rand(kk, (b, h, s, d), jnp.float32)
+    v = rand(kv, (b, h, s, d), jnp.float32)
+    out = K.prefill_attention(q, k, v, jnp.array([1], jnp.int32))
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Decode kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    cap=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_decode_matches_ref(b, h, cap, d, dtype, seed, data):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, d), dtype)
+    k = rand(kk, (b, h, cap, d), dtype)
+    v = rand(kv, (b, h, cap, d), dtype)
+    n_valid = jnp.array(
+        [data.draw(st.integers(1, cap)) for _ in range(b)], jnp.int32)
+
+    out = K.decode_attention(q, k, v, n_valid)
+    want = R.decode_attention_ref(q, k, v, n_valid)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_decode_ignores_stale_cache():
+    """Entries at positions >= n_valid must not affect the result."""
+    b, h, cap, d = 2, 2, 32, 8
+    key = jax.random.PRNGKey(5)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, d), jnp.float32)
+    k = rand(kk, (b, h, cap, d), jnp.float32)
+    v = rand(kv, (b, h, cap, d), jnp.float32)
+    n_valid = jnp.array([7, 20], jnp.int32)
+    out1 = K.decode_attention(q, k, v, n_valid)
+    k2 = k.at[:, :, 25:, :].set(1e4)
+    v2 = v.at[:, :, 25:, :].set(-1e4)
+    out2 = K.decode_attention(q, k2, v2, n_valid)
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_single_valid_entry():
+    b, h, cap, d = 1, 1, 16, 4
+    key = jax.random.PRNGKey(6)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, d), jnp.float32)
+    k = rand(kk, (b, h, cap, d), jnp.float32)
+    v = rand(kv, (b, h, cap, d), jnp.float32)
+    out = K.decode_attention(q, k, v, jnp.array([1], jnp.int32))
+    np.testing.assert_allclose(out[0, 0], v[0, 0, 0], rtol=1e-6, atol=1e-6)
+
+
+def test_decode_consistent_with_prefill_last_row():
+    """decode(q_last, cache_of_prefix) == prefill's last valid row."""
+    b, h, s, d = 1, 2, 16, 8
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (b, h, s, d), jnp.float32)
+    k = rand(kk, (b, h, s, d), jnp.float32)
+    v = rand(kv, (b, h, s, d), jnp.float32)
+    length = 11
+    lengths = jnp.array([length], jnp.int32)
+
+    pre = K.prefill_attention(q, k, v, lengths)               # (B,H,S,D)
+    dec = K.decode_attention(q[:, :, length - 1, :], k, v,
+                             jnp.array([length], jnp.int32))
+    np.testing.assert_allclose(dec, pre[:, :, length - 1, :],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_reasonable():
+    """Structural perf check: default tiles fit comfortably in 16 MiB VMEM."""
+    bytes_ = K.vmem_footprint_bytes(K.DEFAULT_BLOCK_Q, K.DEFAULT_BLOCK_K, 128)
+    assert bytes_ < 16 * 1024 * 1024 / 4   # << quarter of VMEM

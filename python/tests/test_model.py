@@ -1,0 +1,129 @@
+"""L2 correctness: model shapes, prefill/decode consistency, AOT contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+# A deliberately tiny config so interpret-mode pallas stays fast in CI.
+CFG = M.ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16,
+                    ffn_dim=64, kv_capacity=24, max_prefill=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def test_param_shapes_order_stable():
+    names = M.param_names(CFG)
+    assert names[0] == "embed"
+    assert names[-1] == "lm_head"
+    assert len(names) == 2 + 9 * CFG.n_layers + 1
+    # Canonical order must be deterministic — the Rust loader depends on it.
+    assert names == M.param_names(CFG)
+
+
+def test_init_params_deterministic():
+    a = M.init_params(CFG, seed=7)
+    b = M.init_params(CFG, seed=7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_prefill_shapes(params):
+    b, s = 2, 8
+    tokens = jnp.arange(b * s, dtype=jnp.int32).reshape(b, s) % CFG.vocab
+    lengths = jnp.array([8, 5], jnp.int32)
+    logits, kc, vc = M.prefill(params, tokens, lengths, CFG)
+    assert logits.shape == (b, CFG.vocab)
+    assert kc.shape == (CFG.n_layers, b, CFG.n_heads, CFG.kv_capacity,
+                        CFG.head_dim)
+    assert vc.shape == kc.shape
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_prefill_padding_invariant(params):
+    """Tokens beyond a sequence's length must not change its logits."""
+    b, s = 1, 8
+    tokens = jnp.ones((b, s), jnp.int32) * 3
+    lengths = jnp.array([5], jnp.int32)
+    logits1, _, _ = M.prefill(params, tokens, lengths, CFG)
+    tokens2 = tokens.at[0, 5:].set(61)
+    logits2, _, _ = M.prefill(params, tokens2, lengths, CFG)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_shapes(params):
+    b = 2
+    kv = jnp.zeros((CFG.n_layers, b, CFG.n_heads, CFG.kv_capacity,
+                    CFG.head_dim), jnp.float32)
+    tokens = jnp.array([1, 2], jnp.int32)
+    pos = jnp.array([0, 3], jnp.int32)
+    logits, kc, vc = M.decode_step(params, tokens, kv, kv, pos, CFG)
+    assert logits.shape == (b, CFG.vocab)
+    assert kc.shape == kv.shape
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_decode_writes_kv_at_pos(params):
+    b = 1
+    kv = jnp.zeros((CFG.n_layers, b, CFG.n_heads, CFG.kv_capacity,
+                    CFG.head_dim), jnp.float32)
+    pos = jnp.array([4], jnp.int32)
+    _, kc, _ = M.decode_step(params, jnp.array([9], jnp.int32), kv, kv, pos,
+                             CFG)
+    kc = np.asarray(kc)
+    assert np.any(kc[:, 0, :, 4, :] != 0.0)          # written at pos
+    assert np.all(np.delete(kc, 4, axis=3) == 0.0)   # everywhere else intact
+
+
+def test_prefill_then_decode_matches_longer_prefill(params):
+    """decode_step(prefill(t[:n])) ≈ prefill(t[:n+1]) — phase hand-off."""
+    s = 8
+    tokens = (jnp.arange(s, dtype=jnp.int32) * 7 + 3) % CFG.vocab
+    n = 5
+
+    # Path A: prefill the first n tokens, then decode token n.
+    logits_a, kc, vc = M.prefill(params, tokens[None, :],
+                                 jnp.array([n], jnp.int32), CFG)
+    logits_b, _, _ = M.decode_step(params, tokens[None, n], kc, vc,
+                                   jnp.array([n], jnp.int32), CFG)
+
+    # Path B: prefill the first n+1 tokens directly.
+    logits_full, _, _ = M.prefill(params, tokens[None, :],
+                                  jnp.array([n + 1], jnp.int32), CFG)
+    np.testing.assert_allclose(np.asarray(logits_b), np.asarray(logits_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_greedy_generation_deterministic(params):
+    """End-to-end greedy loop is reproducible (the rust runtime mirrors it)."""
+    s = 4
+    tokens = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    lengths = jnp.array([s], jnp.int32)
+
+    def run():
+        logits, kc, vc = M.prefill(params, tokens, lengths, CFG)
+        out = []
+        pos = s
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for _ in range(4):
+            out.append(int(tok[0]))
+            logits, kc, vc = M.decode_step(params, tok, kc, vc,
+                                           jnp.array([pos], jnp.int32), CFG)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            pos += 1
+        return out
+
+    assert run() == run()
+
+
+def test_param_count_matches_shapes():
+    total = sum(int(np.prod(s)) for _, s in M.param_shapes(CFG))
+    assert CFG.param_count() == total

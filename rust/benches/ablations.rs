@@ -1,0 +1,94 @@
+//! Ablations of the design choices DESIGN.md calls out.
+//!
+//! * θ (split-skew threshold) sweep — Algorithm 1's only tunable.
+//! * Bucketing on/off at fixed memory policy (min_bucket_width = L_max
+//!   disables splitting entirely).
+//! * mem_safety sweep — Eq. 5's 10% reservation vs. none vs. aggressive.
+//! * Intra-bucket policy sweep on offline throughput (SJF vs LJF vs FCFS).
+
+use bucketserve::baselines::System;
+use bucketserve::config::{Policy, SystemConfig};
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn main() {
+    let base = SystemConfig::default();
+    let online = Trace::generate(
+        Dataset::Mixed, 300, 16.0, RequestClass::Online, base.model.max_seq, base.seed,
+    );
+    let offline = Trace::batch(
+        Dataset::Mixed, 256, RequestClass::Offline, base.model.max_seq, base.seed,
+    );
+
+    // --- θ sweep ------------------------------------------------------------
+    let mut t = Table::new(&["theta", "SLO", "tok/s", "max buckets", "waste"]);
+    for &theta in &[0.25, 0.5, 0.75, 0.95] {
+        let mut cfg = base.clone();
+        cfg.scheduler.theta = theta;
+        let r = System::BucketServe.run_sim(&cfg, &online);
+        let waste = r.completions.iter().map(|c| c.waste_ratio()).sum::<f64>()
+            / r.completions.len() as f64;
+        t.row(vec![
+            f2(theta),
+            f2(r.slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us)),
+            f1(r.throughput_tps()),
+            r.max_buckets.to_string(),
+            f2(waste),
+        ]);
+    }
+    t.print("ablation: split threshold θ (online Mixed @16 RPS)");
+
+    // --- bucketing on/off ----------------------------------------------------
+    let mut t = Table::new(&["variant", "tok/s", "SLO", "util", "waste"]);
+    for (label, disable) in [("bucketing ON", false), ("bucketing OFF", true)] {
+        let mut cfg = base.clone();
+        if disable {
+            cfg.scheduler.min_bucket_width = cfg.scheduler.l_max; // never split
+        }
+        let r = System::BucketServe.run_sim(&cfg, &online);
+        let waste = r.completions.iter().map(|c| c.waste_ratio()).sum::<f64>()
+            / r.completions.len() as f64;
+        t.row(vec![
+            label.to_string(),
+            f1(r.throughput_tps()),
+            f2(r.slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us)),
+            f2(r.gpu_util()),
+            f2(waste),
+        ]);
+    }
+    t.print("ablation: adaptive bucketing on/off (same batcher)");
+
+    // --- mem_safety sweep ----------------------------------------------------
+    let mut t = Table::new(&["mem_safety", "tok/s", "peak batch", "SLO"]);
+    for &s in &[0.7, 0.9, 1.0] {
+        let mut cfg = base.clone();
+        cfg.scheduler.mem_safety = s;
+        let r = System::BucketServe.run_sim(&cfg, &online);
+        t.row(vec![
+            f2(s),
+            f1(r.throughput_tps()),
+            r.peak_batch.to_string(),
+            f2(r.slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us)),
+        ]);
+    }
+    t.print("ablation: Eq. 5 memory reservation");
+
+    // --- policy sweep (offline) ----------------------------------------------
+    let mut t = Table::new(&["policy", "tok/s", "mean E2E ms", "p99 E2E ms"]);
+    for policy in [Policy::Fcfs, Policy::Sjf, Policy::Ljf] {
+        let mut cfg = base.clone();
+        cfg.scheduler.policy = policy;
+        let r = System::BucketServe.run_sim(&cfg, &offline);
+        let mut e2e: Vec<f64> =
+            r.completions.iter().map(|c| c.e2e() as f64 / 1e3).collect();
+        e2e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = e2e[(e2e.len() as f64 * 0.99) as usize - 1];
+        t.row(vec![
+            policy.name().to_string(),
+            f1(r.throughput_tps()),
+            f1(e2e.iter().sum::<f64>() / e2e.len() as f64),
+            f1(p99),
+        ]);
+    }
+    t.print("ablation: intra-bucket policy (offline Mixed batch)");
+}

@@ -1,0 +1,44 @@
+//! Fig. 5a — Offline throughput (tokens/s) vs. request count, 3 systems.
+//!
+//! Paper claims at high load: BucketServe ≈ 3.58× UELLM and ≈ 1.31×
+//! DistServe. We sweep the offered batch size on the simulated 4×A100
+//! testbed (Llama2-13B, Mixed workload) and print tokens/s per system plus
+//! the achieved ratios.
+
+use bucketserve::baselines::System;
+use bucketserve::config::SystemConfig;
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    println!("Fig. 5a — offline throughput, Mixed workload, 2P+2D A100 node\n");
+
+    let mut t = Table::new(&[
+        "requests", "BucketServe tok/s", "DistServe tok/s", "UELLM tok/s",
+        "vs DS", "vs UELLM",
+    ]);
+    let mut last = (0.0, 0.0);
+    for &n in &[64usize, 128, 256, 512] {
+        let trace = Trace::batch(
+            Dataset::Mixed, n, RequestClass::Offline, cfg.model.max_seq, cfg.seed,
+        );
+        let tb = System::BucketServe.run_sim(&cfg, &trace).throughput_tps();
+        let td = System::DistServe.run_sim(&cfg, &trace).throughput_tps();
+        let tu = System::Uellm.run_sim(&cfg, &trace).throughput_tps();
+        last = (tb / td, tb / tu);
+        t.row(vec![
+            n.to_string(),
+            f1(tb),
+            f1(td),
+            f1(tu),
+            f2(tb / td),
+            f2(tb / tu),
+        ]);
+    }
+    t.print("offline throughput sweep");
+    println!(
+        "\nhigh-load ratios: {:.2}× DistServe (paper 1.31×), {:.2}× UELLM (paper 3.58×)",
+        last.0, last.1
+    );
+}

@@ -1,0 +1,33 @@
+//! Fig. 5b — Average GPU utilization vs. request count, 3 systems.
+//!
+//! Paper claim: BucketServe's dynamic batching lifts average GPU
+//! utilization to ≈ 81.66%, the highest of the three systems, with the gap
+//! widening under more requests.
+
+use bucketserve::baselines::System;
+use bucketserve::config::SystemConfig;
+use bucketserve::util::bench::{f2, Table};
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    println!("Fig. 5b — average GPU utilization, Mixed offline workload\n");
+
+    let mut t = Table::new(&["requests", "BucketServe", "DistServe", "UELLM"]);
+    let mut peak = 0.0f64;
+    for &n in &[64usize, 128, 256, 512] {
+        let trace = Trace::batch(
+            Dataset::Mixed, n, RequestClass::Offline, cfg.model.max_seq, cfg.seed,
+        );
+        let ub = System::BucketServe.run_sim(&cfg, &trace).gpu_util();
+        let ud = System::DistServe.run_sim(&cfg, &trace).gpu_util();
+        let uu = System::Uellm.run_sim(&cfg, &trace).gpu_util();
+        peak = peak.max(ub);
+        t.row(vec![n.to_string(), f2(ub), f2(ud), f2(uu)]);
+    }
+    t.print("average GPU utilization");
+    println!(
+        "\nBucketServe peak util {:.1}% (paper: 81.66%); ordering BucketServe > DistServe > UELLM expected.",
+        peak * 100.0
+    );
+}

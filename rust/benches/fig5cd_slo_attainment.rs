@@ -1,0 +1,84 @@
+//! Fig. 5c/5d — SLO attainment vs. server RPS (Alpaca / Mixed),
+//! BucketServe vs. DistServe.
+//!
+//! Paper claim: at the 80% attainment level BucketServe sustains ≈ 1.37×
+//! (Alpaca) and ≈ 1.93× (Mixed) the server RPS of DistServe. We sweep the
+//! offered load on paired traces, print the attainment curves, and
+//! interpolate each system's RPS at 80%.
+
+use bucketserve::baselines::System;
+use bucketserve::config::SystemConfig;
+use bucketserve::util::bench::{f2, Table};
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn rps_at_80(curve: &[(f64, f64)]) -> f64 {
+    // Highest load whose attainment ≥ 0.8, with linear interpolation into
+    // the first point below.
+    let mut best = 0.0;
+    for w in curve.windows(2) {
+        let (r0, a0) = w[0];
+        let (r1, a1) = w[1];
+        if a0 >= 0.8 {
+            best = r0;
+            if a1 < 0.8 && a0 > a1 {
+                best = r0 + (r1 - r0) * (a0 - 0.8) / (a0 - a1);
+            }
+        }
+    }
+    if let Some(&(r, a)) = curve.last() {
+        if a >= 0.8 {
+            best = r;
+        }
+    }
+    best
+}
+
+fn main() {
+    let n = 300;
+    let loads = [1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0];
+
+    for (fig, dataset) in [("5c", Dataset::Alpaca), ("5d", Dataset::Mixed)] {
+        let mut cfg = SystemConfig::default();
+        if dataset == Dataset::Mixed {
+            // Long-prompt prefill alone is ~0.7 s on this testbed; the
+            // paper's Mixed SLO must be achievable, so scale TTFT to the
+            // workload (DistServe does the same per-workload SLO scaling).
+            cfg.slo.ttft_us = 1_500_000;
+            cfg.slo.tbt_us = 150_000;
+        }
+        println!("\nFig. {fig} — SLO attainment vs server RPS ({})", dataset.name());
+        let mut t = Table::new(&[
+            "client RPS", "BS server RPS", "BS SLO", "DS server RPS", "DS SLO",
+        ]);
+        let mut curve_b = Vec::new();
+        let mut curve_d = Vec::new();
+        for &rps in &loads {
+            let trace = Trace::generate(
+                dataset, n, rps, RequestClass::Online, cfg.model.max_seq, cfg.seed,
+            );
+            let rb = System::BucketServe.run_sim(&cfg, &trace);
+            let rd = System::DistServe.run_sim(&cfg, &trace);
+            let ab = rb.slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us);
+            let ad = rd.slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us);
+            curve_b.push((rb.server_rps(), ab));
+            curve_d.push((rd.server_rps(), ad));
+            t.row(vec![
+                f2(rps),
+                f2(rb.server_rps()),
+                f2(ab),
+                f2(rd.server_rps()),
+                f2(ad),
+            ]);
+        }
+        t.print(&format!("attainment curves ({})", dataset.name()));
+        let cb = rps_at_80(&curve_b);
+        let cd = rps_at_80(&curve_d);
+        let paper = if dataset == Dataset::Alpaca { 1.37 } else { 1.93 };
+        println!(
+            "server RPS at 80% SLO: BucketServe {:.2}, DistServe {:.2} → ratio {:.2}× (paper {paper}×)",
+            cb,
+            cd,
+            if cd > 0.0 { cb / cd } else { f64::INFINITY }
+        );
+    }
+}

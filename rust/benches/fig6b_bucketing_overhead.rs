@@ -1,0 +1,68 @@
+//! Fig. 6b — Bucketing overhead vs. number of buckets.
+//!
+//! Paper claim: as the bucket count grows the algorithmic overhead stays
+//! flat and negligible. We drive the BucketManager directly with synthetic
+//! workloads shaped to stabilize at k buckets (uniform mass over k
+//! length ranges) and measure wall-clock assign+adjust cost per request.
+
+use bucketserve::coordinator::bucket::{BucketManager, QueuedReq};
+use bucketserve::util::bench::Table;
+use bucketserve::util::rng::Pcg;
+use bucketserve::workload::RequestClass;
+
+fn drive(k_target: u32, n_requests: usize, linear: bool) -> (usize, f64) {
+    let l_max = 4096u32;
+    let mut mgr = BucketManager::new(l_max, 0.5, 1);
+    mgr.linear_scan = linear;
+    let mut rng = Pcg::seeded(7);
+    // Keep per-bucket load high and skewed so splitting proceeds to depth
+    // log2(k); n_max small to allow splits.
+    let n_max = 8usize;
+    for i in 0..n_requests {
+        // Sample predominantly short-within-range so skew > θ persists.
+        let range = rng.range(0, k_target as usize - 1) as u32;
+        let width = l_max / k_target;
+        let off = (rng.f64().powi(3) * width as f64) as u32; // skew low
+        let len = (range * width + off).min(l_max - 1);
+        mgr.assign(QueuedReq {
+            id: i as u64,
+            len,
+            output_len: 1,
+            arrival: i as u64,
+            class: RequestClass::Offline,
+        });
+        if i % 16 == 15 {
+            mgr.adjust(n_max);
+        }
+        // Keep the queue from growing unboundedly: drain old entries.
+        if mgr.total() > 512 {
+            for b in mgr.buckets_mut() {
+                let keep = b.requests.len() / 2;
+                b.requests.truncate(keep);
+            }
+        }
+    }
+    let per_request_ns = mgr.overhead_ns as f64 / n_requests as f64;
+    (mgr.n_buckets(), per_request_ns)
+}
+
+fn main() {
+    println!("Fig. 6b — bucketing overhead vs bucket count\n");
+    let n = 200_000;
+    let mut t = Table::new(&[
+        "target buckets", "observed buckets", "binary ns/req", "linear ns/req",
+    ]);
+    for &k in &[1u32, 2, 4, 8, 16, 32, 64] {
+        let (kb, tb) = drive(k.max(1), n, false);
+        let (_, tl) = drive(k.max(1), n, true);
+        t.row(vec![
+            k.to_string(),
+            kb.to_string(),
+            format!("{tb:.1}"),
+            format!("{tl:.1}"),
+        ]);
+    }
+    t.print(&format!("per-request bucketing cost ({n} requests/level)"));
+    println!("\npaper shape: overhead flat in bucket count; absolute cost ≪ 1% of any batch time.");
+    println!("(binary = boundary binary-search; linear = the O(n·k) scan from the paper's analysis)");
+}

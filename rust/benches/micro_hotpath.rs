@@ -1,0 +1,126 @@
+//! Hot-path micro-benchmarks (the §Perf iteration loop's instrument).
+//!
+//! Times the coordinator's per-request-path operations: bucket assignment
+//! (binary vs. linear), AdjustBuckets, batch formation, the Eq. 1–6
+//! memory model, the cost model, and JSON parsing (gateway protocol).
+
+use bucketserve::config::{Policy, SystemConfig};
+use bucketserve::coordinator::batcher::{DynamicBatcher, KvMemoryModel};
+use bucketserve::coordinator::bucket::{BucketManager, QueuedReq};
+use bucketserve::cluster::gpu::CostModel;
+use bucketserve::util::bench::time_it;
+use bucketserve::util::json::Json;
+use bucketserve::util::rng::Pcg;
+use bucketserve::workload::RequestClass;
+
+fn filled_manager(n: usize, buckets: bool) -> BucketManager {
+    let mut mgr = BucketManager::new(4096, 0.5, 16);
+    let mut rng = Pcg::seeded(3);
+    for i in 0..n {
+        mgr.assign(QueuedReq {
+            id: i as u64,
+            len: rng.range(1, 4000) as u32,
+            output_len: rng.range(1, 400) as u32,
+            arrival: i as u64,
+            class: RequestClass::Online,
+        });
+    }
+    if buckets {
+        for _ in 0..6 {
+            mgr.adjust(16);
+        }
+    }
+    mgr
+}
+
+fn main() {
+    println!("micro_hotpath — coordinator hot-path timings\n");
+    let cfg = SystemConfig::default();
+
+    // Bucket assignment at realistic bucket counts.
+    for &(label, linear) in &[("binary", false), ("linear", true)] {
+        let mut mgr = filled_manager(256, true);
+        mgr.linear_scan = linear;
+        let mut rng = Pcg::seeded(9);
+        let mut id = 10_000u64;
+        let k = mgr.n_buckets();
+        time_it(&format!("assign/{label} (k={k})"), || {
+            let len = rng.range(1, 4000) as u32;
+            id += 1;
+            mgr.assign(QueuedReq {
+                id,
+                len,
+                output_len: 10,
+                arrival: id,
+                class: RequestClass::Online,
+            });
+            // Bound queue growth.
+            if mgr.total() > 4096 {
+                for b in mgr.buckets_mut() {
+                    b.requests.clear();
+                }
+            }
+        })
+        .print();
+    }
+
+    // AdjustBuckets on a loaded manager.
+    {
+        let mgr0 = filled_manager(512, false);
+        time_it("adjust_buckets (512 queued)", || {
+            let mut m = mgr0.clone();
+            m.adjust(16);
+            m.n_buckets()
+        })
+        .print();
+    }
+
+    // Batch formation.
+    {
+        let mgr0 = filled_manager(512, true);
+        let batcher = DynamicBatcher::new(cfg.model.clone(), &cfg.scheduler);
+        time_it("form_batch (512 queued)", || {
+            let mut m = mgr0.clone();
+            batcher.form_batch(&mut m, 8192)
+        })
+        .print();
+        // Isolate the clone cost to subtract mentally.
+        time_it("  (manager clone baseline)", || mgr0.clone().total()).print();
+    }
+
+    // Eq. 1–6 memory model.
+    {
+        let mm = KvMemoryModel::new(cfg.model.clone(), 0.9);
+        let lens: Vec<u32> = (0..64).map(|i| 100 + i * 13).collect();
+        time_it("kv memory model n_max (64 lens)", || {
+            mm.n_max(lens.iter().copied(), 1_000_000)
+        })
+        .print();
+    }
+
+    // Cost model (the simulator's inner loop).
+    {
+        let cm = CostModel::new(cfg.model.clone(), cfg.gpu.clone(), 1);
+        time_it("cost: prefill_time", || cm.prefill_time(8, 1024)).print();
+        time_it("cost: decode_step_time", || cm.decode_step_time(16, 16 * 512)).print();
+    }
+
+    // Intra-bucket policy sort (the per-plan cost at depth).
+    {
+        let mut sched = cfg.scheduler.clone();
+        sched.policy = Policy::Sjf;
+        let batcher = DynamicBatcher::new(cfg.model.clone(), &sched);
+        let mgr0 = filled_manager(1024, false);
+        time_it("form_batch SJF (1024 queued, 1 bucket)", || {
+            let mut m = mgr0.clone();
+            batcher.form_batch(&mut m, 16_384)
+        })
+        .print();
+    }
+
+    // Gateway JSON parse (TCP protocol hot path).
+    {
+        let line = r#"{"op":"req","input_len":182,"output_len":96,"class":"online","arrival":123456}"#;
+        time_it("json parse gateway line", || Json::parse(line).unwrap()).print();
+    }
+}

@@ -1,0 +1,69 @@
+//! Baseline systems the paper compares against.
+//!
+//! Both are implemented over the same [`crate::cluster::Engine`] and
+//! metrics plumbing as BucketServe, so every figure bench is a paired
+//! comparison on identical traces:
+//!
+//! * [`distserve`] — disaggregated FCFS serving (prefill/decode split,
+//!   continuous decode batching) **without bucketing**: the planner is a
+//!   plain FIFO queue, so heterogeneous batches pad to their longest
+//!   member. Isolates exactly the delta the paper attributes to
+//!   BucketServe.
+//! * [`uellm`] — aggregated serving with profile-predicted **static**
+//!   batching: prefill and decode run coupled on every GPU, batches are
+//!   request-level (a batch occupies its instance until *all* members
+//!   finish decoding), and the batch size is a fixed profile estimate
+//!   with no runtime adaptation.
+
+pub mod distserve;
+pub mod uellm;
+
+pub use distserve::DistServe;
+pub use uellm::Uellm;
+
+/// Which serving system to run (CLI/bench selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    BucketServe,
+    DistServe,
+    Uellm,
+}
+
+impl System {
+    pub fn parse(s: &str) -> System {
+        match s.to_ascii_lowercase().as_str() {
+            "distserve" => System::DistServe,
+            "uellm" => System::Uellm,
+            _ => System::BucketServe,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::BucketServe => "BucketServe",
+            System::DistServe => "DistServe",
+            System::Uellm => "UELLM",
+        }
+    }
+
+    pub const ALL: [System; 3] =
+        [System::BucketServe, System::DistServe, System::Uellm];
+
+    /// Run this system on a trace with a fresh simulated engine.
+    pub fn run_sim(
+        &self,
+        cfg: &crate::config::SystemConfig,
+        trace: &crate::workload::Trace,
+    ) -> crate::coordinator::RunReport {
+        use crate::cluster::sim::SimEngine;
+        let mut engine = SimEngine::new(cfg);
+        match self {
+            System::BucketServe => {
+                crate::coordinator::BucketServe::new(cfg.clone())
+                    .run(trace, &mut engine)
+            }
+            System::DistServe => DistServe::new(cfg.clone()).run(trace, &mut engine),
+            System::Uellm => Uellm::new(cfg.clone()).run(trace, &mut engine),
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! UELLM-like baseline: aggregated serving with profile-predicted static
+//! batching.
+//!
+//! Models the properties the paper attributes to UELLM (§V Baselines):
+//!
+//! * **Coupled phases** — every GPU instance runs a request's prefill *and*
+//!   its whole decode; there is no P/D specialization and no NVLink
+//!   hand-off.
+//! * **Profile-predicted batching** — the batch size is fixed up front
+//!   from a resource-demand prediction (we emulate the "fine-tuned LLM
+//!   predictor" with the trace's observable mean footprint), then never
+//!   adapted to workload fluctuations.
+//! * **Request-level batching** — a batch holds its instance until *every*
+//!   member finishes decoding; early finishers leave dead slots (the
+//!   classic pre-Orca inefficiency), which is where the low GPU
+//!   utilization in Fig. 3b/5b comes from.
+
+use crate::cluster::{DecodeBatch, DecodeSeq, Engine, PrefillBatch, PrefillItem};
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::KvMemoryModel;
+use crate::coordinator::scheduler::RunReport;
+use crate::workload::request::Completion;
+use crate::workload::Trace;
+use crate::Micros;
+use std::collections::VecDeque;
+
+/// The UELLM-like system.
+pub struct Uellm {
+    cfg: SystemConfig,
+}
+
+/// One aggregated instance's in-flight request-level batch.
+struct AggBatch {
+    seqs: Vec<AggSeq>,
+    /// When the current phase (prefill or the running decode iteration)
+    /// completes.
+    phase_end: Micros,
+    in_prefill: bool,
+    prefill_duration: Micros,
+    padded_len: u32,
+}
+
+struct AggSeq {
+    id: u64,
+    class: crate::workload::RequestClass,
+    arrival: Micros,
+    input_len: u32,
+    output_len: u32,
+    generated: u32,
+    first_token: Micros,
+    done: bool,
+}
+
+impl Uellm {
+    pub fn new(cfg: SystemConfig) -> Uellm {
+        Uellm { cfg }
+    }
+
+    /// Static profile-predicted batch size: token budget over the mean
+    /// footprint of the first profiling window (no runtime adaptation —
+    /// the deficiency the paper highlights).
+    fn predict_batch_size(&self, trace: &Trace, budget_tokens: u64) -> usize {
+        let window = trace.requests.iter().take(32);
+        let (mut sum, mut n) = (0u64, 0u64);
+        for r in window {
+            sum += (r.input_len + r.output_len) as u64;
+            n += 1;
+        }
+        if n == 0 {
+            return 1;
+        }
+        let mean = (sum / n).max(1);
+        ((budget_tokens / mean) as usize).clamp(1, 64)
+    }
+
+    pub fn run(&self, trace: &Trace, engine: &mut dyn Engine) -> RunReport {
+        let n_inst =
+            (self.cfg.fleet.n_prefill + self.cfg.fleet.n_decode).max(1) as usize;
+        let mem = KvMemoryModel::new(
+            self.cfg.model.clone(),
+            self.cfg.scheduler.mem_safety,
+        );
+        let budget = mem.token_budget(engine.decode_mem_budget());
+        let static_batch = self.predict_batch_size(trace, budget);
+
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut next_arrival = 0usize;
+        let mut clock: Micros = 0;
+        let total = trace.len();
+        let mut instances: Vec<Option<AggBatch>> =
+            (0..n_inst).map(|_| None).collect();
+        let mut report = RunReport {
+            n_prefill: 0,
+            n_decode: n_inst,
+            ..Default::default()
+        };
+        let weight_bytes = engine.model().weight_bytes() as f64;
+        let kv_per_token = engine.model().kv_bytes_per_token() as f64;
+
+        while report.completions.len() < total {
+            // Next event: arrival or any instance phase end.
+            let mut next_event = Micros::MAX;
+            if next_arrival < total {
+                next_event = next_event.min(trace.requests[next_arrival].arrival);
+            }
+            for inst in instances.iter().flatten() {
+                next_event = next_event.min(inst.phase_end);
+            }
+            assert!(
+                next_event != Micros::MAX || !queue.is_empty(),
+                "uellm: stalled with {} incomplete",
+                total - report.completions.len()
+            );
+            if next_event != Micros::MAX {
+                clock = clock.max(next_event);
+            }
+
+            // Admit arrivals.
+            while next_arrival < total
+                && trace.requests[next_arrival].arrival <= clock
+            {
+                queue.push_back(next_arrival);
+                next_arrival += 1;
+            }
+
+            // Advance instances.
+            for slot in instances.iter_mut() {
+                let ready = matches!(slot, Some(b) if b.phase_end <= clock);
+                if !ready {
+                    continue;
+                }
+                let b = slot.as_mut().unwrap();
+                if b.in_prefill {
+                    // Prefill finished → first tokens; start decode.
+                    report.prefill_batches += 1;
+                    report.prefill_busy_us += b.prefill_duration;
+                    let batch = PrefillBatch {
+                        items: b
+                            .seqs
+                            .iter()
+                            .map(|s| PrefillItem {
+                                id: s.id,
+                                len: s.input_len,
+                                tokens: vec![],
+                            })
+                            .collect(),
+                        padded_len: b.padded_len,
+                    };
+                    report.prefill_useful_us +=
+                        b.prefill_duration as f64 * batch.efficiency();
+                    report.prefill_exec_request_us +=
+                        b.prefill_duration * b.seqs.len() as u64;
+                    for s in &mut b.seqs {
+                        s.first_token = clock;
+                        s.generated = 1;
+                        if s.generated >= s.output_len {
+                            // Single-token request: completes at prefill.
+                            s.done = true;
+                            report.completions.push(Completion {
+                                id: s.id,
+                                class: s.class,
+                                input_len: s.input_len,
+                                output_len: s.output_len,
+                                arrival: s.arrival,
+                                first_token: clock,
+                                finished: clock,
+                                padded_len: b.padded_len,
+                            });
+                            engine.release(s.id);
+                        }
+                    }
+                    b.in_prefill = false;
+                } else {
+                    // One decode iteration ended.
+                    for s in b.seqs.iter_mut().filter(|s| !s.done) {
+                        s.generated += 1;
+                        if s.generated >= s.output_len {
+                            s.done = true;
+                            report.completions.push(Completion {
+                                id: s.id,
+                                class: s.class,
+                                input_len: s.input_len,
+                                output_len: s.output_len,
+                                arrival: s.arrival,
+                                first_token: s.first_token,
+                                finished: clock,
+                                padded_len: b.padded_len,
+                            });
+                            engine.release(s.id);
+                        }
+                    }
+                }
+
+                // Request-level batching: the batch holds the instance
+                // until ALL members are done.
+                if b.seqs.iter().all(|s| s.done) {
+                    *slot = None;
+                } else if !b.in_prefill {
+                    // Launch the next decode iteration: finished sequences
+                    // still occupy their slots (static batching), so the
+                    // engine steps the full batch width with frozen ctx.
+                    let batch = DecodeBatch {
+                        seqs: b
+                            .seqs
+                            .iter()
+                            .map(|s| DecodeSeq {
+                                id: s.id,
+                                ctx_len: s.input_len + s.generated.min(s.output_len),
+                            })
+                            .collect(),
+                    };
+                    let duration =
+                        engine.decode_step(&batch).expect("uellm decode");
+                    b.phase_end = clock + duration;
+                    report.decode_iters += 1;
+                    report.decode_busy_us += duration;
+                    let active =
+                        b.seqs.iter().filter(|s| !s.done).count() as f64;
+                    let kv_bytes = batch.total_ctx() as f64 * kv_per_token;
+                    let amort = kv_bytes / (kv_bytes + weight_bytes);
+                    // Dead slots scale useful work down further.
+                    let eff = amort * active / b.seqs.len().max(1) as f64;
+                    report.decode_useful_us += duration as f64 * eff;
+                }
+            }
+
+            // Form new static batches on idle instances.
+            for slot in instances.iter_mut() {
+                if slot.is_some() || queue.is_empty() {
+                    continue;
+                }
+                let mut seqs = Vec::new();
+                let mut acc = 0u64;
+                while let Some(&idx) = queue.front() {
+                    if seqs.len() >= static_batch {
+                        break;
+                    }
+                    let r = &trace.requests[idx];
+                    let footprint = (r.input_len + r.output_len) as u64;
+                    if !seqs.is_empty() && acc + footprint > budget {
+                        break;
+                    }
+                    acc += footprint;
+                    queue.pop_front();
+                    seqs.push(AggSeq {
+                        id: r.id,
+                        class: r.class,
+                        arrival: r.arrival,
+                        input_len: r.input_len,
+                        output_len: r.output_len,
+                        generated: 0,
+                        first_token: 0,
+                        done: false,
+                    });
+                }
+                if seqs.is_empty() {
+                    break;
+                }
+                let padded_len =
+                    seqs.iter().map(|s| s.input_len).max().unwrap_or(1).max(1);
+                let batch = PrefillBatch {
+                    items: seqs
+                        .iter()
+                        .map(|s| PrefillItem {
+                            id: s.id,
+                            len: s.input_len,
+                            tokens: vec![],
+                        })
+                        .collect(),
+                    padded_len,
+                };
+                let duration = engine.prefill(&batch).expect("uellm prefill");
+                report.peak_batch = report.peak_batch.max(seqs.len());
+                for s in &seqs {
+                    report.queue_wait_us +=
+                        clock.saturating_sub(s.arrival);
+                }
+                *slot = Some(AggBatch {
+                    seqs,
+                    phase_end: clock + duration,
+                    in_prefill: true,
+                    prefill_duration: duration,
+                    padded_len,
+                });
+            }
+
+            report.makespan_us = report.makespan_us.max(clock);
+        }
+
+        if let Some(last) = report.completions.iter().map(|c| c.finished).max() {
+            report.makespan_us = report.makespan_us.max(last);
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::System;
+    use crate::cluster::sim::SimEngine;
+    use crate::workload::{Dataset, RequestClass};
+
+    #[test]
+    fn completes_all_requests() {
+        let cfg = SystemConfig::default();
+        let trace = Trace::generate(
+            Dataset::Alpaca, 50, 8.0, RequestClass::Online, cfg.model.max_seq, 1,
+        );
+        let mut engine = SimEngine::new(&cfg);
+        let report = Uellm::new(cfg).run(&trace, &mut engine);
+        assert_eq!(report.completions.len(), 50);
+        let mut ids: Vec<_> = report.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 50, "no duplicate completions");
+    }
+
+    #[test]
+    fn timestamps_causal() {
+        let cfg = SystemConfig::default();
+        let trace = Trace::generate(
+            Dataset::Mixed, 40, 4.0, RequestClass::Online, cfg.model.max_seq, 2,
+        );
+        let mut engine = SimEngine::new(&cfg);
+        let report = Uellm::new(cfg).run(&trace, &mut engine);
+        for c in &report.completions {
+            assert!(c.first_token >= c.arrival);
+            assert!(c.finished >= c.first_token);
+        }
+    }
+
+    #[test]
+    fn bucketserve_beats_uellm_on_heterogeneous_offline_load() {
+        // The headline comparison (Fig. 5a direction).
+        let cfg = SystemConfig::default();
+        let trace =
+            Trace::batch(Dataset::Mixed, 120, RequestClass::Offline, 4096, 42);
+        let rb = System::BucketServe.run_sim(&cfg, &trace);
+        let ru = System::Uellm.run_sim(&cfg, &trace);
+        assert!(
+            rb.throughput_tps() > ru.throughput_tps(),
+            "bucketserve {} <= uellm {}",
+            rb.throughput_tps(),
+            ru.throughput_tps()
+        );
+    }
+
+    #[test]
+    fn uellm_gpu_util_lower_than_bucketserve() {
+        let cfg = SystemConfig::default();
+        let trace =
+            Trace::batch(Dataset::Mixed, 120, RequestClass::Offline, 4096, 42);
+        let rb = System::BucketServe.run_sim(&cfg, &trace);
+        let ru = System::Uellm.run_sim(&cfg, &trace);
+        assert!(rb.gpu_util() > ru.gpu_util());
+    }
+}

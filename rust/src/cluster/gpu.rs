@@ -1,0 +1,185 @@
+//! A100 roofline cost model: the simulated-GPU substrate.
+//!
+//! The paper's scheduling decisions depend on two phase-level facts the
+//! model must reproduce (paper §II-A1):
+//!
+//! * **Prefill is compute-bound** — time scales with padded batch FLOPs
+//!   (linear projections ∝ N·S_pad·P plus quadratic attention), so padding
+//!   waste translates directly into wasted GPU time.
+//! * **Decode is bandwidth-bound** — each iteration streams the weights
+//!   once plus every active sequence's KV cache, so batching amortizes the
+//!   weight reads and utilization rises with batch size.
+//!
+//! Constants default to A100-40GB SXM (312 TFLOP/s BF16, 1.555 TB/s HBM,
+//! 300 GB/s NVLink) with achievable-efficiency derates; the *shape* of
+//! every figure depends only on these scaling laws, not the absolute
+//! constants (DESIGN.md §2).
+
+use crate::config::{GpuSpec, ModelSpec};
+use crate::Micros;
+
+/// Analytic phase-cost model for one GPU instance.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    /// Tensor-parallel degree (weights and work sharded across TP peers).
+    pub tp: u32,
+}
+
+impl CostModel {
+    pub fn new(model: ModelSpec, gpu: GpuSpec, tp: u32) -> CostModel {
+        assert!(tp >= 1);
+        CostModel { model, gpu, tp }
+    }
+
+    /// FLOPs of prefilling one sequence of `s` (padded) tokens:
+    /// 2·P per token for the dense projections + 4·L·(H·D)·s² attention.
+    pub fn prefill_flops(&self, s: u32) -> f64 {
+        let s = s as f64;
+        let dense = 2.0 * self.model.n_params * s;
+        let hidden = (self.model.n_heads * self.model.head_dim) as f64;
+        let attn = 4.0 * self.model.n_layers as f64 * hidden * s * s;
+        dense + attn
+    }
+
+    /// Duration of a prefill batch: N sequences all padded to `s_pad`.
+    pub fn prefill_time(&self, n: usize, s_pad: u32) -> Micros {
+        let flops = self.prefill_flops(s_pad) * n as f64;
+        let rate = self.gpu.flops * self.gpu.compute_eff * self.tp as f64;
+        let us = flops / rate * 1e6;
+        us as Micros + self.gpu.step_overhead_us
+    }
+
+    /// Duration of one decode iteration over sequences with context lengths
+    /// summing to `total_ctx` tokens (N = `n` sequences).
+    ///
+    /// Bandwidth side: weights are read once per iteration (amortized over
+    /// the batch) plus every live KV byte. Compute side: 2·P FLOPs/token.
+    pub fn decode_step_time(&self, n: usize, total_ctx: u64) -> Micros {
+        if n == 0 {
+            return 0;
+        }
+        let weight_bytes = self.model.weight_bytes() as f64 / self.tp as f64;
+        let kv_bytes = (total_ctx * self.model.kv_bytes_per_token()) as f64;
+        let t_mem =
+            (weight_bytes + kv_bytes) / (self.gpu.membw * self.gpu.membw_eff * self.tp as f64);
+        let t_comp = 2.0 * self.model.n_params * n as f64
+            / (self.gpu.flops * self.gpu.compute_eff * self.tp as f64);
+        let us = t_mem.max(t_comp) * 1e6;
+        us as Micros + self.gpu.step_overhead_us
+    }
+
+    /// NVLink hand-off of a `tokens`-token KV cache (paper §III: prefill →
+    /// decode transfer), plus a fixed coordination latency.
+    pub fn kv_transfer_time(&self, tokens: u64) -> Micros {
+        let bytes = (tokens * self.model.kv_bytes_per_token()) as f64;
+        let us = bytes / self.gpu.nvlink * 1e6;
+        us as Micros + 20
+    }
+
+    /// M_remain (Eq. 5 input): GPU memory left after weights + a fixed
+    /// activation reservation.
+    pub fn mem_remaining(&self) -> u64 {
+        let weights = self.model.weight_bytes() / self.tp as u64;
+        let activations = 2 * (1u64 << 30); // 2 GiB working set
+        self.gpu.mem_bytes.saturating_sub(weights + activations)
+    }
+
+    /// Tokens/second of decode at batch size `n` with mean context `ctx`
+    /// (for roofline sanity checks).
+    pub fn decode_tokens_per_sec(&self, n: usize, ctx: u32) -> f64 {
+        let dur = self.decode_step_time(n, n as u64 * ctx as u64);
+        n as f64 / (dur as f64 / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn cm() -> CostModel {
+        let c = SystemConfig::default();
+        CostModel::new(c.model, c.gpu, 1)
+    }
+
+    #[test]
+    fn prefill_scales_linearly_with_batch() {
+        let m = cm();
+        let t1 = m.prefill_time(1, 512) - m.gpu.step_overhead_us;
+        let t4 = m.prefill_time(4, 512) - m.gpu.step_overhead_us;
+        let ratio = t4 as f64 / t1 as f64;
+        assert!((ratio - 4.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn prefill_superlinear_in_seq_len() {
+        // Attention's s² term: doubling s should more than double time.
+        let m = cm();
+        let t1 = m.prefill_time(1, 1024) - m.gpu.step_overhead_us;
+        let t2 = m.prefill_time(1, 2048) - m.gpu.step_overhead_us;
+        assert!(t2 as f64 > 2.0 * t1 as f64);
+        assert!((t2 as f64) < 4.0 * t1 as f64);
+    }
+
+    #[test]
+    fn prefill_magnitude_sane_for_13b() {
+        // ~512-token prompt on A100 at 55% of 312 TF: ~80–200 ms.
+        let m = cm();
+        let t = m.prefill_time(1, 512);
+        assert!(t > 50_000 && t < 300_000, "prefill 512 = {t} µs");
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound_and_batching_amortizes() {
+        let m = cm();
+        // Per-token cost must fall as batch size grows (weight reads shared).
+        let t1 = m.decode_step_time(1, 512);
+        let t8 = m.decode_step_time(8, 8 * 512);
+        let per1 = t1 as f64;
+        let per8 = t8 as f64 / 8.0;
+        assert!(per8 < per1 * 0.5, "per1 {per1} per8 {per8}");
+    }
+
+    #[test]
+    fn decode_magnitude_sane_for_13b() {
+        // Single-seq decode step ≈ weights 26 GB / ~1.1 TB/s ≈ 24 ms.
+        let m = cm();
+        let t = m.decode_step_time(1, 512);
+        assert!(t > 10_000 && t < 60_000, "decode = {t} µs");
+    }
+
+    #[test]
+    fn decode_time_grows_with_context() {
+        let m = cm();
+        let short = m.decode_step_time(16, 16 * 128);
+        let long = m.decode_step_time(16, 16 * 4096);
+        assert!(long > short);
+    }
+
+    #[test]
+    fn kv_transfer_reasonable() {
+        // 1024 tokens · 0.8 MB/token ≈ 0.82 GB over 300 GB/s ≈ 2.8 ms.
+        let m = cm();
+        let t = m.kv_transfer_time(1024);
+        assert!(t > 1_000 && t < 10_000, "transfer {t} µs");
+    }
+
+    #[test]
+    fn mem_remaining_positive_for_13b_on_40g() {
+        let m = cm();
+        let rem = m.mem_remaining();
+        // 40 GB − 26 GB weights − 2 GB activations ≈ 12 GB.
+        assert!(rem > 10 * (1u64 << 30) && rem < 14 * (1u64 << 30));
+    }
+
+    #[test]
+    fn tp_shards_weights_and_speeds_up() {
+        let c = SystemConfig::default();
+        let m1 = CostModel::new(c.model.clone(), c.gpu.clone(), 1);
+        let m2 = CostModel::new(c.model, c.gpu, 2);
+        assert!(m2.decode_step_time(4, 2048) < m1.decode_step_time(4, 2048));
+        assert!(m2.mem_remaining() > m1.mem_remaining());
+    }
+}

@@ -1,0 +1,176 @@
+//! Execution substrates: the engine abstraction and the simulated cluster.
+//!
+//! The paper's testbed (4× A100-40GB + NVLink serving Llama2-13B on vLLM)
+//! is unavailable here, so the coordinator runs against one of two
+//! implementations of [`Engine`]:
+//!
+//! * [`sim::SimEngine`] — an analytic A100 roofline cost model
+//!   ([`gpu::CostModel`]) driven in virtual time; used for every
+//!   paper-scale figure.
+//! * [`crate::runtime::PjrtEngine`] — real execution of the AOT-compiled
+//!   JAX+Pallas artifacts on the PJRT CPU client, in wall time; used by the
+//!   end-to-end examples.
+//!
+//! The scheduler is engine-agnostic: it plans batches, asks the engine for
+//! durations (simulated or measured), and owns all queueing/timeline logic.
+
+pub mod gpu;
+pub mod sim;
+
+use crate::config::ModelSpec;
+use crate::workload::RequestId;
+use crate::Micros;
+
+/// One request's slot in a prefill batch.
+#[derive(Debug, Clone)]
+pub struct PrefillItem {
+    pub id: RequestId,
+    /// True prompt length (≤ `PrefillBatch::padded_len`).
+    pub len: u32,
+    /// Prompt token ids (real-engine runs only; empty in simulation).
+    pub tokens: Vec<u32>,
+}
+
+/// A formed prefill batch: every sequence padded to `padded_len`
+/// (the bucket upper bound — and, on the real engine, the compiled
+/// executable's static shape).
+#[derive(Debug, Clone)]
+pub struct PrefillBatch {
+    pub items: Vec<PrefillItem>,
+    pub padded_len: u32,
+}
+
+impl PrefillBatch {
+    pub fn n(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Σ true lengths (useful tokens).
+    pub fn useful_tokens(&self) -> u64 {
+        self.items.iter().map(|i| i.len as u64).sum()
+    }
+
+    /// N · S_pad (slot tokens actually computed).
+    pub fn padded_tokens(&self) -> u64 {
+        self.items.len() as u64 * self.padded_len as u64
+    }
+
+    /// Eq. 2: (S_max − S_avg) / S_max over the *padded* batch.
+    pub fn waste_ratio(&self) -> f64 {
+        if self.items.is_empty() || self.padded_len == 0 {
+            return 0.0;
+        }
+        let avg = self.useful_tokens() as f64 / self.items.len() as f64;
+        (self.padded_len as f64 - avg) / self.padded_len as f64
+    }
+
+    /// Fraction of prefill compute spent on real tokens.
+    pub fn efficiency(&self) -> f64 {
+        if self.padded_tokens() == 0 {
+            return 1.0;
+        }
+        self.useful_tokens() as f64 / self.padded_tokens() as f64
+    }
+}
+
+/// One active sequence in a decode iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeSeq {
+    pub id: RequestId,
+    /// Current context length (prompt + generated so far).
+    pub ctx_len: u32,
+}
+
+/// One continuous-batching decode iteration.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeBatch {
+    pub seqs: Vec<DecodeSeq>,
+}
+
+impl DecodeBatch {
+    pub fn n(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn total_ctx(&self) -> u64 {
+        self.seqs.iter().map(|s| s.ctx_len as u64).sum()
+    }
+}
+
+/// Execution substrate the coordinator schedules onto.
+pub trait Engine {
+    /// Cost-model parameters of the served model (Eq. 1 constants).
+    fn model(&self) -> &ModelSpec;
+
+    /// True when durations come from wall-clock blocking execution (the
+    /// serving loop then waits in real time for arrivals).
+    fn realtime(&self) -> bool {
+        false
+    }
+
+    /// Execute (or cost) one prefill batch; returns its duration.
+    fn prefill(&mut self, batch: &PrefillBatch) -> anyhow::Result<Micros>;
+
+    /// Execute (or cost) one decode iteration; returns its duration.
+    fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros>;
+
+    /// Duration of the prefill→decode KV hand-off for `tokens` cache tokens.
+    fn kv_transfer(&mut self, tokens: u64) -> Micros;
+
+    /// Per-decode-instance KV memory budget, bytes (M_remain of Eq. 5 —
+    /// the scheduler applies the 0.9 safety factor itself).
+    fn decode_mem_budget(&self) -> u64;
+
+    /// Drop any per-request engine state (KV cache) for a finished request.
+    fn release(&mut self, _id: RequestId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(lens: &[u32], pad: u32) -> PrefillBatch {
+        PrefillBatch {
+            items: lens
+                .iter()
+                .enumerate()
+                .map(|(i, &len)| PrefillItem { id: i as u64, len, tokens: vec![] })
+                .collect(),
+            padded_len: pad,
+        }
+    }
+
+    #[test]
+    fn waste_ratio_matches_eq2() {
+        // S_max = 128, lengths 64 and 128 → S_avg = 96, waste = 32/128.
+        let b = batch(&[64, 128], 128);
+        assert!((b.waste_ratio() - 0.25).abs() < 1e-12);
+        assert!((b.efficiency() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_batch_zero_waste() {
+        let b = batch(&[128, 128, 128], 128);
+        assert_eq!(b.waste_ratio(), 0.0);
+        assert_eq!(b.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn empty_batch_safe() {
+        let b = batch(&[], 128);
+        assert_eq!(b.waste_ratio(), 0.0);
+        assert_eq!(b.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn decode_batch_totals() {
+        let d = DecodeBatch {
+            seqs: vec![
+                DecodeSeq { id: 1, ctx_len: 100 },
+                DecodeSeq { id: 2, ctx_len: 50 },
+            ],
+        };
+        assert_eq!(d.total_ctx(), 150);
+        assert_eq!(d.n(), 2);
+    }
+}

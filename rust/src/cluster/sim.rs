@@ -1,0 +1,88 @@
+//! `SimEngine`: the virtual-time execution substrate.
+//!
+//! Wraps [`super::gpu::CostModel`] behind the [`Engine`] trait. All state a
+//! discrete-event run needs beyond durations (instance timelines, queues)
+//! lives in the scheduler; the engine is a pure cost oracle plus release
+//! bookkeeping, which keeps simulated and real runs on the identical
+//! scheduling code path.
+
+use super::gpu::CostModel;
+use super::{DecodeBatch, Engine, PrefillBatch};
+use crate::config::{ModelSpec, SystemConfig};
+use crate::Micros;
+
+/// Simulated engine (virtual time).
+#[derive(Debug, Clone)]
+pub struct SimEngine {
+    cost: CostModel,
+    /// Counts engine calls for overhead-accounting asserts in tests.
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+impl SimEngine {
+    pub fn new(cfg: &SystemConfig) -> SimEngine {
+        SimEngine {
+            cost: CostModel::new(cfg.model.clone(), cfg.gpu.clone(), cfg.fleet.tp),
+            prefill_calls: 0,
+            decode_calls: 0,
+        }
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+}
+
+impl Engine for SimEngine {
+    fn model(&self) -> &ModelSpec {
+        &self.cost.model
+    }
+
+    fn prefill(&mut self, batch: &PrefillBatch) -> anyhow::Result<Micros> {
+        self.prefill_calls += 1;
+        Ok(self.cost.prefill_time(batch.n(), batch.padded_len))
+    }
+
+    fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros> {
+        self.decode_calls += 1;
+        Ok(self.cost.decode_step_time(batch.n(), batch.total_ctx()))
+    }
+
+    fn kv_transfer(&mut self, tokens: u64) -> Micros {
+        self.cost.kv_transfer_time(tokens)
+    }
+
+    fn decode_mem_budget(&self) -> u64 {
+        self.cost.mem_remaining()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{DecodeSeq, PrefillItem};
+
+    #[test]
+    fn engine_delegates_to_cost_model() {
+        let cfg = SystemConfig::default();
+        let mut e = SimEngine::new(&cfg);
+        let b = PrefillBatch {
+            items: vec![PrefillItem { id: 0, len: 100, tokens: vec![] }],
+            padded_len: 128,
+        };
+        let t = e.prefill(&b).unwrap();
+        assert_eq!(t, e.cost_model().prefill_time(1, 128));
+        let d = DecodeBatch { seqs: vec![DecodeSeq { id: 0, ctx_len: 128 }] };
+        let td = e.decode_step(&d).unwrap();
+        assert_eq!(td, e.cost_model().decode_step_time(1, 128));
+        assert_eq!(e.prefill_calls, 1);
+        assert_eq!(e.decode_calls, 1);
+    }
+
+    #[test]
+    fn not_realtime() {
+        let e = SimEngine::new(&SystemConfig::default());
+        assert!(!e.realtime());
+    }
+}

@@ -1,0 +1,424 @@
+//! Typed configuration system.
+//!
+//! A [`SystemConfig`] describes everything a run needs: the served model's
+//! cost parameters, the GPU fleet, the scheduler knobs (bucketing θ, memory
+//! reserve, policies), and SLO targets. Configs load from JSON files and
+//! accept `--key value` CLI overrides (dotted paths, e.g.
+//! `--scheduler.theta 0.6`).
+//!
+//! Defaults reproduce the paper's testbed: Llama2-13B-class model on
+//! 4× A100-40GB (2 prefill + 2 decode instances), FP16 KV cache.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Cost-model description of the served model (Eq. 1 parameters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Total parameter count (weights), used by the compute/bandwidth model.
+    pub n_params: f64,
+    /// L in Eq. 1.
+    pub n_layers: u32,
+    /// H in Eq. 1.
+    pub n_heads: u32,
+    /// D in Eq. 1.
+    pub head_dim: u32,
+    /// B in Eq. 1 (2 = FP16).
+    pub bytes_per_el: u32,
+    /// Context limit; LongBench-style requests are truncated to this.
+    pub max_seq: u32,
+}
+
+impl ModelSpec {
+    /// Llama2-13B (the paper's main offline model).
+    pub fn llama2_13b() -> ModelSpec {
+        ModelSpec {
+            n_params: 13e9,
+            n_layers: 40,
+            n_heads: 40,
+            head_dim: 128,
+            bytes_per_el: 2,
+            max_seq: 4096,
+        }
+    }
+
+    /// The tiny AOT-compiled model actually executed on PJRT-CPU
+    /// (mirrors python/compile/model.py's ModelConfig defaults).
+    pub fn tiny_pjrt() -> ModelSpec {
+        ModelSpec {
+            n_params: 1_115_264.0,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 32,
+            bytes_per_el: 4, // f32 on CPU
+            max_seq: 256,
+        }
+    }
+
+    /// KV-cache bytes per token (Eq. 1 without S·N): `2·L·H·D·B`.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        2 * self.n_layers as u64
+            * self.n_heads as u64
+            * self.head_dim as u64
+            * self.bytes_per_el as u64
+    }
+
+    /// Weight bytes (for residency accounting).
+    pub fn weight_bytes(&self) -> u64 {
+        (self.n_params * self.bytes_per_el as f64) as u64
+    }
+}
+
+/// One GPU's capability envelope (A100-40GB defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub mem_bytes: u64,
+    /// Peak dense FP16/BF16 throughput.
+    pub flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub membw: f64,
+    /// NVLink bandwidth to peers, bytes/s.
+    pub nvlink: f64,
+    /// Fixed per-kernel-launch/step overhead, µs.
+    pub step_overhead_us: u64,
+    /// Achievable fraction of peak compute (prefill).
+    pub compute_eff: f64,
+    /// Achievable fraction of peak bandwidth (decode).
+    pub membw_eff: f64,
+}
+
+impl GpuSpec {
+    pub fn a100_40g() -> GpuSpec {
+        GpuSpec {
+            mem_bytes: 40 * (1u64 << 30),
+            flops: 312e12,
+            membw: 1.555e12,
+            nvlink: 300e9,
+            step_overhead_us: 150,
+            compute_eff: 0.55,
+            membw_eff: 0.70,
+        }
+    }
+}
+
+/// Fleet topology: disaggregated prefill/decode instances.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub n_prefill: u32,
+    pub n_decode: u32,
+    /// Tensor-parallel degree per instance (weights are sharded across it).
+    pub tp: u32,
+}
+
+impl FleetSpec {
+    /// The paper's 4-GPU node: 2 prefill + 2 decode (DistServe-recommended
+    /// split for 13B, which the paper says it adopts).
+    pub fn paper_node() -> FleetSpec {
+        FleetSpec { n_prefill: 2, n_decode: 2, tp: 1 }
+    }
+}
+
+/// Intra-bucket ordering policy (paper §II-B / §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// First-come-first-served (online default).
+    Fcfs,
+    /// Shortest-job-first (offline, RPS-oriented).
+    Sjf,
+    /// Longest-job-first (offline, token-throughput-oriented).
+    Ljf,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Policy {
+        match s.to_ascii_lowercase().as_str() {
+            "sjf" => Policy::Sjf,
+            "ljf" => Policy::Ljf,
+            _ => Policy::Fcfs,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::Sjf => "sjf",
+            Policy::Ljf => "ljf",
+        }
+    }
+}
+
+/// Scheduler knobs (Algorithm 1 + Eqs. 5–6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedulerSpec {
+    /// Split threshold θ (fraction of a bucket's requests below midpoint).
+    pub theta: f64,
+    /// Fraction of remaining memory reserved for system overheads (Eq. 5
+    /// keeps 10% → safe factor 0.9).
+    pub mem_safety: f64,
+    /// L_max: upper bound of the initial single bucket.
+    pub l_max: u32,
+    /// Hard cap on requests per formed batch (0 = only memory-limited).
+    pub max_batch: u32,
+    /// Intra-bucket ordering for offline tasks.
+    pub policy: Policy,
+    /// Minimum bucket width; bisection stops below this.
+    pub min_bucket_width: u32,
+}
+
+impl Default for SchedulerSpec {
+    fn default() -> Self {
+        SchedulerSpec {
+            theta: 0.5,
+            mem_safety: 0.9,
+            l_max: 4096,
+            max_batch: 0,
+            policy: Policy::Fcfs,
+            min_bucket_width: 16,
+        }
+    }
+}
+
+/// SLO targets for online requests (DistServe-style TTFT + TBT).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token budget, µs.
+    pub ttft_us: u64,
+    /// Per-output-token budget (time between tokens), µs.
+    pub tbt_us: u64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        // 400 ms TTFT, 100 ms TBT — typical interactive chat targets used
+        // by DistServe-class evaluations.
+        SloSpec { ttft_us: 400_000, tbt_us: 100_000 }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub model: ModelSpec,
+    pub gpu: GpuSpec,
+    pub fleet: FleetSpec,
+    pub scheduler: SchedulerSpec,
+    pub slo: SloSpec,
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            model: ModelSpec::llama2_13b(),
+            gpu: GpuSpec::a100_40g(),
+            fleet: FleetSpec::paper_node(),
+            scheduler: SchedulerSpec::default(),
+            slo: SloSpec::default(),
+            seed: 42,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Config matched to the tiny PJRT-CPU model (for end-to-end examples):
+    /// bucket bounds clamp to the compiled shape menu.
+    pub fn tiny_pjrt() -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.model = ModelSpec::tiny_pjrt();
+        c.fleet = FleetSpec { n_prefill: 1, n_decode: 1, tp: 1 };
+        c.scheduler.l_max = 256;
+        c.scheduler.max_batch = 8;
+        c.scheduler.min_bucket_width = 32;
+        c
+    }
+
+    /// Load from a JSON file, then apply CLI overrides.
+    pub fn load(path: &str, args: &Args) -> anyhow::Result<SystemConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut cfg = SystemConfig::from_json(&json);
+        cfg.apply_overrides(args);
+        Ok(cfg)
+    }
+
+    /// Construct from parsed JSON; missing fields keep defaults.
+    pub fn from_json(j: &Json) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        let m = j.get("model");
+        if !m.is_null() {
+            let d = &mut c.model;
+            if let Some(v) = m.get("n_params").as_f64() { d.n_params = v; }
+            if let Some(v) = m.get("n_layers").as_u64() { d.n_layers = v as u32; }
+            if let Some(v) = m.get("n_heads").as_u64() { d.n_heads = v as u32; }
+            if let Some(v) = m.get("head_dim").as_u64() { d.head_dim = v as u32; }
+            if let Some(v) = m.get("bytes_per_el").as_u64() { d.bytes_per_el = v as u32; }
+            if let Some(v) = m.get("max_seq").as_u64() { d.max_seq = v as u32; }
+        }
+        let g = j.get("gpu");
+        if !g.is_null() {
+            let d = &mut c.gpu;
+            if let Some(v) = g.get("mem_bytes").as_u64() { d.mem_bytes = v; }
+            if let Some(v) = g.get("flops").as_f64() { d.flops = v; }
+            if let Some(v) = g.get("membw").as_f64() { d.membw = v; }
+            if let Some(v) = g.get("nvlink").as_f64() { d.nvlink = v; }
+            if let Some(v) = g.get("step_overhead_us").as_u64() { d.step_overhead_us = v; }
+            if let Some(v) = g.get("compute_eff").as_f64() { d.compute_eff = v; }
+            if let Some(v) = g.get("membw_eff").as_f64() { d.membw_eff = v; }
+        }
+        let f = j.get("fleet");
+        if !f.is_null() {
+            if let Some(v) = f.get("n_prefill").as_u64() { c.fleet.n_prefill = v as u32; }
+            if let Some(v) = f.get("n_decode").as_u64() { c.fleet.n_decode = v as u32; }
+            if let Some(v) = f.get("tp").as_u64() { c.fleet.tp = v as u32; }
+        }
+        let s = j.get("scheduler");
+        if !s.is_null() {
+            let d = &mut c.scheduler;
+            if let Some(v) = s.get("theta").as_f64() { d.theta = v; }
+            if let Some(v) = s.get("mem_safety").as_f64() { d.mem_safety = v; }
+            if let Some(v) = s.get("l_max").as_u64() { d.l_max = v as u32; }
+            if let Some(v) = s.get("max_batch").as_u64() { d.max_batch = v as u32; }
+            if let Some(v) = s.get("policy").as_str() { d.policy = Policy::parse(v); }
+            if let Some(v) = s.get("min_bucket_width").as_u64() { d.min_bucket_width = v as u32; }
+        }
+        let o = j.get("slo");
+        if !o.is_null() {
+            if let Some(v) = o.get("ttft_us").as_u64() { c.slo.ttft_us = v; }
+            if let Some(v) = o.get("tbt_us").as_u64() { c.slo.tbt_us = v; }
+        }
+        if let Some(v) = j.get("seed").as_u64() { c.seed = v; }
+        c
+    }
+
+    /// Apply dotted CLI overrides (`--scheduler.theta 0.6`, `--seed 7`, ...).
+    pub fn apply_overrides(&mut self, args: &Args) {
+        for (k, v) in args.overrides() {
+            match k {
+                "scheduler.theta" => set_f64(&mut self.scheduler.theta, v),
+                "scheduler.mem_safety" => set_f64(&mut self.scheduler.mem_safety, v),
+                "scheduler.l_max" => set_u32(&mut self.scheduler.l_max, v),
+                "scheduler.max_batch" => set_u32(&mut self.scheduler.max_batch, v),
+                "scheduler.min_bucket_width" => set_u32(&mut self.scheduler.min_bucket_width, v),
+                "scheduler.policy" => self.scheduler.policy = Policy::parse(v),
+                "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
+                "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
+                "slo.ttft_us" => { if let Ok(x) = v.parse() { self.slo.ttft_us = x; } }
+                "slo.tbt_us" => { if let Ok(x) = v.parse() { self.slo.tbt_us = x; } }
+                "seed" => { if let Ok(x) = v.parse() { self.seed = x; } }
+                _ => {}
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::obj(vec![
+                ("n_params", Json::num(self.model.n_params)),
+                ("n_layers", Json::from(self.model.n_layers as u64)),
+                ("n_heads", Json::from(self.model.n_heads as u64)),
+                ("head_dim", Json::from(self.model.head_dim as u64)),
+                ("bytes_per_el", Json::from(self.model.bytes_per_el as u64)),
+                ("max_seq", Json::from(self.model.max_seq as u64)),
+            ])),
+            ("gpu", Json::obj(vec![
+                ("mem_bytes", Json::from(self.gpu.mem_bytes)),
+                ("flops", Json::num(self.gpu.flops)),
+                ("membw", Json::num(self.gpu.membw)),
+                ("nvlink", Json::num(self.gpu.nvlink)),
+                ("step_overhead_us", Json::from(self.gpu.step_overhead_us)),
+                ("compute_eff", Json::num(self.gpu.compute_eff)),
+                ("membw_eff", Json::num(self.gpu.membw_eff)),
+            ])),
+            ("fleet", Json::obj(vec![
+                ("n_prefill", Json::from(self.fleet.n_prefill as u64)),
+                ("n_decode", Json::from(self.fleet.n_decode as u64)),
+                ("tp", Json::from(self.fleet.tp as u64)),
+            ])),
+            ("scheduler", Json::obj(vec![
+                ("theta", Json::num(self.scheduler.theta)),
+                ("mem_safety", Json::num(self.scheduler.mem_safety)),
+                ("l_max", Json::from(self.scheduler.l_max as u64)),
+                ("max_batch", Json::from(self.scheduler.max_batch as u64)),
+                ("policy", Json::from(self.scheduler.policy.name())),
+                ("min_bucket_width", Json::from(self.scheduler.min_bucket_width as u64)),
+            ])),
+            ("slo", Json::obj(vec![
+                ("ttft_us", Json::from(self.slo.ttft_us)),
+                ("tbt_us", Json::from(self.slo.tbt_us)),
+            ])),
+            ("seed", Json::from(self.seed)),
+        ])
+    }
+}
+
+fn set_f64(slot: &mut f64, v: &str) {
+    if let Ok(x) = v.parse() {
+        *slot = x;
+    }
+}
+
+fn set_u32(slot: &mut u32, v: &str) {
+    if let Ok(x) = v.parse() {
+        *slot = x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_testbed() {
+        let c = SystemConfig::default();
+        assert_eq!(c.fleet.n_prefill + c.fleet.n_decode, 4);
+        assert_eq!(c.model.n_layers, 40);
+        assert_eq!(c.scheduler.theta, 0.5);
+        assert_eq!(c.scheduler.mem_safety, 0.9);
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama13b() {
+        // 2 * 40 * 40 * 128 * 2 = 819,200 bytes/token.
+        assert_eq!(ModelSpec::llama2_13b().kv_bytes_per_token(), 819_200);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = SystemConfig::default();
+        let j = c.to_json();
+        let c2 = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap());
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"scheduler":{"theta":0.75}}"#).unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert_eq!(c.scheduler.theta, 0.75);
+        assert_eq!(c.scheduler.mem_safety, 0.9);
+        assert_eq!(c.model.n_layers, 40);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["--scheduler.theta", "0.6", "--fleet.n_prefill", "3",
+             "--scheduler.policy", "ljf", "--seed", "7"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert_eq!(c.scheduler.theta, 0.6);
+        assert_eq!(c.fleet.n_prefill, 3);
+        assert_eq!(c.scheduler.policy, Policy::Ljf);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(Policy::parse("SJF"), Policy::Sjf);
+        assert_eq!(Policy::parse("weird"), Policy::Fcfs);
+    }
+}

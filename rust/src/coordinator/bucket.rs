@@ -1,0 +1,525 @@
+//! Request Bucketing Manager — Algorithm 1 of the paper.
+//!
+//! Requests are grouped into contiguous sequence-length buckets
+//! `[low, up)` that always partition `[0, L_max)`:
+//!
+//! * **Assign** (Alg. 1 lines 2–9): each arriving request lands in the
+//!   bucket covering its prompt length (binary search over the sorted
+//!   boundary array — the "binary tree" optimization the paper lists as
+//!   future work; the linear scan it analyses as `O(n·k)` is kept for the
+//!   ablation bench).
+//! * **AdjustBuckets** (lines 10–31): when the total queued count is below
+//!   `N_max`, all buckets merge back into the single `[0, L_max)` bucket
+//!   (minimal scheduling overhead). Otherwise any bucket where more than
+//!   θ = 0.5 of requests sit below the midpoint *and* which holds more
+//!   than `m = N_max` requests is bisected, approximating the optimal
+//!   conditional-expectation boundary of Eq. 4.
+//!
+//! Every call's wall-clock cost is accumulated in [`BucketManager::overhead_ns`]
+//! — that is the red "bucketing overhead" bar of Fig. 6.
+
+use crate::workload::{RequestClass, RequestId};
+use crate::Micros;
+use std::time::Instant;
+
+/// A queued request as the bucketing layer sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedReq {
+    pub id: RequestId,
+    pub len: u32,
+    pub output_len: u32,
+    pub arrival: Micros,
+    pub class: RequestClass,
+}
+
+/// One sequence-length bucket `[low, up)`.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub low: u32,
+    pub up: u32,
+    pub requests: Vec<QueuedReq>,
+}
+
+impl Bucket {
+    pub fn new(low: u32, up: u32) -> Bucket {
+        assert!(low < up, "bucket [{low},{up}) empty range");
+        Bucket { low, up, requests: Vec::new() }
+    }
+
+    pub fn covers(&self, len: u32) -> bool {
+        self.low <= len && len < self.up
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn midpoint(&self) -> u32 {
+        self.low + (self.up - self.low) / 2
+    }
+
+    /// Earliest arrival among queued requests (for online bucket priority).
+    pub fn earliest_arrival(&self) -> Option<Micros> {
+        self.requests.iter().map(|r| r.arrival).min()
+    }
+}
+
+/// The adaptive bucketing manager.
+#[derive(Debug, Clone)]
+pub struct BucketManager {
+    /// Sorted by `low`; always a contiguous partition of [0, l_max).
+    buckets: Vec<Bucket>,
+    l_max: u32,
+    theta: f64,
+    min_width: u32,
+    /// Cumulative wall-clock nanoseconds spent in assign + adjust — the
+    /// paper's "bucketing overhead" (Fig. 6).
+    pub overhead_ns: u64,
+    /// Number of adjust() invocations that split at least one bucket.
+    pub splits: u64,
+    /// Number of adjust() invocations that merged back to one bucket.
+    pub merges: u64,
+    /// Use the O(k) linear scan from the paper's complexity analysis
+    /// instead of binary search (ablation knob).
+    pub linear_scan: bool,
+}
+
+impl BucketManager {
+    pub fn new(l_max: u32, theta: f64, min_width: u32) -> BucketManager {
+        assert!(l_max > 0);
+        BucketManager {
+            buckets: vec![Bucket::new(0, l_max)],
+            l_max,
+            theta,
+            min_width: min_width.max(1),
+            overhead_ns: 0,
+            splits: 0,
+            merges: 0,
+            linear_scan: false,
+        }
+    }
+
+    /// Assign one request to its covering bucket (Alg. 1 lines 2–9).
+    /// Lengths ≥ L_max clamp into the last bucket.
+    pub fn assign(&mut self, req: QueuedReq) {
+        let t0 = Instant::now();
+        let len = req.len.min(self.l_max - 1);
+        let idx = if self.linear_scan {
+            self.buckets
+                .iter()
+                .position(|b| b.covers(len))
+                .expect("buckets partition [0, l_max)")
+        } else {
+            // Binary search on lower bounds: last bucket with low <= len.
+            match self.buckets.binary_search_by(|b| b.low.cmp(&len)) {
+                Ok(i) => i,
+                Err(i) => i - 1, // i >= 1 because buckets[0].low == 0
+            }
+        };
+        debug_assert!(self.buckets[idx].covers(len));
+        self.buckets[idx].requests.push(req);
+        self.overhead_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    /// AdjustBuckets (Alg. 1 lines 10–31). `n_max` is the current
+    /// memory-safe batch size from Eq. 6 (both the merge threshold and the
+    /// minimum split size `m`).
+    pub fn adjust(&mut self, n_max: usize) {
+        let t0 = Instant::now();
+        let total = self.total();
+        if total < n_max.max(1) {
+            // Lines 11–13: merge everything back into [0, L_max).
+            if self.buckets.len() > 1 {
+                let mut all: Vec<QueuedReq> = Vec::with_capacity(total);
+                for b in &mut self.buckets {
+                    all.append(&mut b.requests);
+                }
+                all.sort_by_key(|r| r.arrival); // preserve FCFS order
+                self.buckets = vec![Bucket::new(0, self.l_max)];
+                self.buckets[0].requests = all;
+                self.merges += 1;
+            }
+        } else {
+            // Lines 15–29: bisect skewed, oversized buckets.
+            let mut split_any = false;
+            let mut next: Vec<Bucket> = Vec::with_capacity(self.buckets.len() + 4);
+            for bucket in self.buckets.drain(..) {
+                let width = bucket.up - bucket.low;
+                let mid = bucket.midpoint();
+                let n = bucket.len();
+                let c_s = bucket
+                    .requests
+                    .iter()
+                    .filter(|r| r.len.min(self.l_max - 1) < mid)
+                    .count();
+                let skewed = n > 0 && (c_s as f64 / n as f64) > self.theta;
+                if skewed && n > n_max && width >= 2 * self.min_width {
+                    let mut lo = Bucket::new(bucket.low, mid);
+                    let mut hi = Bucket::new(mid, bucket.up);
+                    for r in bucket.requests {
+                        if r.len.min(self.l_max - 1) < mid {
+                            lo.requests.push(r);
+                        } else {
+                            hi.requests.push(r);
+                        }
+                    }
+                    next.push(lo);
+                    next.push(hi);
+                    split_any = true;
+                } else {
+                    next.push(bucket);
+                }
+            }
+            self.buckets = next;
+            if split_any {
+                self.splits += 1;
+            }
+        }
+        self.overhead_ns += t0.elapsed().as_nanos() as u64;
+    }
+
+    pub fn total(&self) -> usize {
+        self.buckets.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn buckets_mut(&mut self) -> &mut [Bucket] {
+        &mut self.buckets
+    }
+
+    pub fn l_max(&self) -> u32 {
+        self.l_max
+    }
+
+    /// Expected waste rate (Eq. 3) over the currently queued requests,
+    /// treating the queue as the empirical length distribution f(S):
+    /// each request in bucket b wastes (1 − S/U_b).
+    pub fn expected_waste(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for b in &self.buckets {
+            for r in &b.requests {
+                let s = r.len.min(b.up - 1) as f64;
+                acc += 1.0 - s / b.up as f64;
+            }
+        }
+        acc / total as f64
+    }
+
+    /// Check the structural invariant: buckets sorted, contiguous, and
+    /// exactly covering [0, l_max); every request inside its bucket range.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.buckets.is_empty() {
+            return Err("no buckets".into());
+        }
+        if self.buckets[0].low != 0 {
+            return Err("first bucket must start at 0".into());
+        }
+        if self.buckets.last().unwrap().up != self.l_max {
+            return Err("last bucket must end at l_max".into());
+        }
+        for w in self.buckets.windows(2) {
+            if w[0].up != w[1].low {
+                return Err(format!(
+                    "gap/overlap between [{},{}) and [{},{})",
+                    w[0].low, w[0].up, w[1].low, w[1].up
+                ));
+            }
+        }
+        for b in &self.buckets {
+            for r in &b.requests {
+                if !b.covers(r.len.min(self.l_max - 1)) {
+                    return Err(format!(
+                        "request len {} outside bucket [{},{})",
+                        r.len, b.low, b.up
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain every queued request (used on shutdown paths and by tests).
+    pub fn drain_all(&mut self) -> Vec<QueuedReq> {
+        let mut all = Vec::with_capacity(self.total());
+        for b in &mut self.buckets {
+            all.append(&mut b.requests);
+        }
+        all.sort_by_key(|r| r.arrival);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn req(id: u64, len: u32) -> QueuedReq {
+        QueuedReq {
+            id,
+            len,
+            output_len: 10,
+            arrival: id * 10,
+            class: RequestClass::Online,
+        }
+    }
+
+    #[test]
+    fn starts_with_single_full_bucket() {
+        let m = BucketManager::new(4096, 0.5, 16);
+        assert_eq!(m.n_buckets(), 1);
+        assert_eq!(m.buckets()[0].low, 0);
+        assert_eq!(m.buckets()[0].up, 4096);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn assign_routes_by_length() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        // Force a split so there are multiple buckets.
+        for i in 0..20 {
+            m.assign(req(i, 10)); // all short → skewed
+        }
+        for i in 20..24 {
+            m.assign(req(i, 900));
+        }
+        m.adjust(8); // total 24 >= 8 → split [0,1024) at 512
+        assert!(m.n_buckets() >= 2);
+        m.check_invariants().unwrap();
+        m.assign(req(100, 700));
+        let b = m
+            .buckets()
+            .iter()
+            .find(|b| b.covers(700))
+            .unwrap();
+        assert!(b.requests.iter().any(|r| r.id == 100));
+    }
+
+    #[test]
+    fn clamps_overlong_requests_into_last_bucket() {
+        let mut m = BucketManager::new(256, 0.5, 16);
+        m.assign(req(1, 10_000));
+        assert_eq!(m.total(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn merges_below_n_max() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        // Skewed: 30 short + 10 long so the split condition (> θ) holds.
+        for i in 0..40 {
+            m.assign(req(i, if i % 4 != 0 { 10 } else { 800 }));
+        }
+        m.adjust(8);
+        assert!(m.n_buckets() > 1, "split should have happened");
+        // Drain most requests, then adjust again → must merge to 1 bucket.
+        for b in m.buckets_mut() {
+            b.requests.truncate(1);
+        }
+        m.adjust(8);
+        assert_eq!(m.n_buckets(), 1);
+        m.check_invariants().unwrap();
+        assert!(m.merges >= 1);
+    }
+
+    #[test]
+    fn splits_skewed_bucket_at_midpoint() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        // 10 requests, 8 below midpoint 512 → skew 0.8 > θ=0.5, n=10 > n_max=4.
+        for i in 0..8 {
+            m.assign(req(i, 100));
+        }
+        for i in 8..10 {
+            m.assign(req(i, 800));
+        }
+        m.adjust(4);
+        assert_eq!(m.n_buckets(), 2);
+        assert_eq!(m.buckets()[0].up, 512);
+        assert_eq!(m.buckets()[0].len(), 8);
+        assert_eq!(m.buckets()[1].len(), 2);
+        assert!(m.splits >= 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn does_not_split_balanced_bucket() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        // Exactly half below midpoint → C_s/n == 0.5, NOT > θ → no split.
+        for i in 0..5 {
+            m.assign(req(i, 100));
+        }
+        for i in 5..10 {
+            m.assign(req(i, 800));
+        }
+        m.adjust(4);
+        assert_eq!(m.n_buckets(), 1);
+    }
+
+    #[test]
+    fn does_not_split_small_bucket() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        for i in 0..4 {
+            m.assign(req(i, 100));
+        }
+        // total 4 >= n_max 2, but each bucket must hold > n_max=4 → no.
+        m.adjust(4);
+        assert_eq!(m.n_buckets(), 1);
+    }
+
+    #[test]
+    fn respects_min_width() {
+        let mut m = BucketManager::new(64, 0.5, 32);
+        for i in 0..50 {
+            m.assign(req(i, 1));
+        }
+        m.adjust(4); // [0,64) splits to [0,32),[32,64)
+        m.adjust(4); // [0,32) width 32 < 2*min_width → stop
+        assert_eq!(m.n_buckets(), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn repeated_adjust_converges() {
+        let mut m = BucketManager::new(4096, 0.5, 16);
+        let mut id = 0;
+        for &len in &[10u32, 20, 50, 80, 120, 300, 700, 1500, 3000] {
+            for _ in 0..30 {
+                m.assign(req(id, len));
+                id += 1;
+            }
+        }
+        let mut prev = 0;
+        for _ in 0..20 {
+            m.adjust(16);
+            m.check_invariants().unwrap();
+            let n = m.n_buckets();
+            if n == prev {
+                break;
+            }
+            prev = n;
+        }
+        // Converged to a stable partition with several buckets.
+        assert!(m.n_buckets() > 2);
+        let before = m.n_buckets();
+        m.adjust(16);
+        assert_eq!(m.n_buckets(), before, "fixed point reached");
+    }
+
+    #[test]
+    fn expected_waste_decreases_after_split() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        for i in 0..20 {
+            m.assign(req(i, 50));
+        }
+        for i in 20..28 {
+            m.assign(req(i, 1000));
+        }
+        let before = m.expected_waste();
+        m.adjust(8);
+        let after = m.expected_waste();
+        assert!(
+            after < before,
+            "waste should drop: before {before} after {after}"
+        );
+    }
+
+    #[test]
+    fn merge_restores_fcfs_order() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        for i in 0..10 {
+            m.assign(req(i, 100));
+        }
+        for i in 10..20 {
+            m.assign(req(i, 900));
+        }
+        m.adjust(4); // split
+        for b in m.buckets_mut() {
+            b.requests.truncate(1);
+        }
+        m.adjust(100); // merge
+        let arrivals: Vec<_> =
+            m.buckets()[0].requests.iter().map(|r| r.arrival).collect();
+        let mut sorted = arrivals.clone();
+        sorted.sort();
+        assert_eq!(arrivals, sorted);
+    }
+
+    #[test]
+    fn overhead_is_tracked() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        for i in 0..100 {
+            m.assign(req(i, (i * 7 % 1000) as u32));
+        }
+        m.adjust(8);
+        assert!(m.overhead_ns > 0);
+    }
+
+    #[test]
+    fn linear_and_binary_assignment_agree() {
+        let mut a = BucketManager::new(2048, 0.5, 16);
+        let mut b = BucketManager::new(2048, 0.5, 16);
+        b.linear_scan = true;
+        for i in 0..200 {
+            let r = req(i, (i * 37 % 2500) as u32);
+            a.assign(r);
+            b.assign(r);
+            if i % 50 == 49 {
+                a.adjust(16);
+                b.adjust(16);
+            }
+        }
+        assert_eq!(a.n_buckets(), b.n_buckets());
+        for (x, y) in a.buckets().iter().zip(b.buckets()) {
+            assert_eq!(x.low, y.low);
+            assert_eq!(x.len(), y.len());
+        }
+    }
+
+    #[test]
+    fn prop_invariants_hold_under_random_workloads() {
+        prop::check("bucket invariants", 200, |g| {
+            let l_max = *g.pick(&[64u32, 256, 1024, 4096]);
+            let mut m = BucketManager::new(l_max, 0.5, 16);
+            let n_ops = g.usize(1, 120);
+            let mut id = 0u64;
+            for _ in 0..n_ops {
+                if g.chance(0.8) {
+                    let len = g.u64(0, l_max as u64 * 2) as u32;
+                    m.assign(QueuedReq {
+                        id,
+                        len,
+                        output_len: 1,
+                        arrival: id,
+                        class: RequestClass::Offline,
+                    });
+                    id += 1;
+                } else {
+                    let n_max = g.usize(1, 64);
+                    m.adjust(n_max);
+                }
+                m.check_invariants().unwrap();
+            }
+            // Conservation: nothing lost or duplicated.
+            assert_eq!(m.total(), id as usize);
+            let drained = m.drain_all();
+            let mut ids: Vec<_> = drained.iter().map(|r| r.id).collect();
+            ids.sort();
+            assert_eq!(ids, (0..id).collect::<Vec<_>>());
+        });
+    }
+}

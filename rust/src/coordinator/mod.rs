@@ -1,0 +1,50 @@
+//! The paper's contribution: bucket-based dynamic batching.
+//!
+//! * [`bucket`] — the Request Bucketing Manager (Algorithm 1): adaptive
+//!   split/merge of sequence-length buckets.
+//! * [`batcher`] — the Dynamic Batching Controller (Eqs. 1–6): memory-safe
+//!   batch sizing and longest-wait prioritization.
+//! * [`monitor`] — the Global Monitor: sliding-window system metrics that
+//!   feed the batcher and scheduler.
+//! * [`scheduler`] — the P/D serving loop shared by BucketServe and the
+//!   disaggregated baseline: FCFS prefill workers, NVLink hand-off, and
+//!   continuous-batching decode instances.
+//!
+//! [`BucketServe`] ties them together behind a single façade used by the
+//! CLI, the examples, and every figure bench.
+
+pub mod bucket;
+pub mod batcher;
+pub mod monitor;
+pub mod scheduler;
+
+pub use bucket::{Bucket, BucketManager};
+pub use batcher::{DynamicBatcher, KvMemoryModel};
+pub use monitor::GlobalMonitor;
+pub use scheduler::{PdScheduler, RunReport, PrefillPlanner};
+
+use crate::cluster::Engine;
+use crate::config::SystemConfig;
+use crate::workload::Trace;
+
+/// The BucketServe system façade: bucket planner + P/D serving loop.
+pub struct BucketServe {
+    cfg: SystemConfig,
+}
+
+impl BucketServe {
+    pub fn new(cfg: SystemConfig) -> BucketServe {
+        BucketServe { cfg }
+    }
+
+    /// Serve a trace on `engine`, returning the full run report.
+    pub fn run(&self, trace: &Trace, engine: &mut dyn Engine) -> RunReport {
+        let planner = scheduler::BucketPlanner::new(&self.cfg);
+        let mut sched = PdScheduler::new(&self.cfg, Box::new(planner));
+        sched.run(trace, engine)
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+}

@@ -1,0 +1,60 @@
+//! # BucketServe
+//!
+//! A reproduction of *BucketServe: Bucket-Based Dynamic Batching for Smart and
+//! Efficient LLM Inference Serving* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas serving framework.
+//!
+//! The crate is organized as:
+//!
+//! * [`util`] — zero-dependency substrates built for the offline image:
+//!   JSON, PRNG + distributions, statistics, CLI parsing, logging, and a
+//!   mini property-testing framework.
+//! * [`config`] — the typed configuration system (JSON files + CLI overrides).
+//! * [`workload`] — synthetic Alpaca / LongBench / Mixed request generators
+//!   and arrival processes (the paper's datasets are substituted per
+//!   DESIGN.md §2).
+//! * [`cluster`] — the simulated GPU cluster substrate: an A100 roofline
+//!   cost model, NVLink transfer model, and the discrete-event engine.
+//! * [`coordinator`] — **the paper's contribution**: the Request Bucketing
+//!   Manager (Algorithm 1), the Dynamic Batching Controller (Eqs. 1–6), the
+//!   P/D scheduler, and the Global Monitor.
+//! * [`runtime`] — the PJRT runtime that loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered JAX + Pallas) and serves them from the request path.
+//! * [`baselines`] — UELLM-like (aggregated, static batching) and
+//!   DistServe-like (disaggregated FCFS, no bucketing) comparators.
+//! * [`server`] — the gateway: threaded admission/routing plus a
+//!   newline-delimited-JSON TCP front end.
+//! * [`metrics`] — throughput/latency/SLO/utilization accounting shared by
+//!   every system and bench.
+//!
+//! Python (JAX + Pallas) appears only at build time; see `python/compile/`.
+
+pub mod util;
+pub mod config;
+pub mod workload;
+pub mod cluster;
+pub mod coordinator;
+pub mod runtime;
+pub mod baselines;
+pub mod server;
+pub mod metrics;
+
+pub use config::SystemConfig;
+pub use coordinator::BucketServe;
+pub use workload::{Request, RequestClass};
+
+/// Microsecond-resolution timestamp/duration used across virtual and wall
+/// clocks (u64 µs ≈ 584k years of range — enough for any trace).
+pub type Micros = u64;
+
+/// Convert microseconds to (fractional) seconds.
+#[inline]
+pub fn secs(us: Micros) -> f64 {
+    us as f64 / 1e6
+}
+
+/// Convert (fractional) seconds to microseconds.
+#[inline]
+pub fn micros(s: f64) -> Micros {
+    (s * 1e6).round() as Micros
+}

@@ -1,0 +1,232 @@
+//! `bucketserve` CLI: the leader entrypoint.
+//!
+//! ```text
+//! bucketserve run     --system bucketserve|distserve|uellm --dataset alpaca|longbench|mixed
+//!                     [--n 200] [--rps 8] [--offline] [--engine sim|pjrt]
+//!                     [--config cfg.json] [--scheduler.theta 0.5] [--json]
+//! bucketserve serve   --addr 127.0.0.1:7777 [--system ...]      (TCP gateway)
+//! bucketserve compare --dataset mixed --n 200 [--rps 8]          (3 systems, one trace)
+//! bucketserve info                                               (config + artifact dump)
+//! ```
+
+use bucketserve::baselines::System;
+use bucketserve::cluster::sim::SimEngine;
+use bucketserve::cluster::Engine;
+use bucketserve::config::SystemConfig;
+use bucketserve::metrics::Summary;
+use bucketserve::server::Server;
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::util::cli::Args;
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+use bucketserve::{log_info, runtime};
+
+fn main() {
+    bucketserve::util::logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "compare" => cmd_compare(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> SystemConfig {
+    let mut cfg = match args.raw("config") {
+        Some(path) => SystemConfig::load(path, args).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => {
+            let mut c = if args.raw("engine") == Some("pjrt") {
+                SystemConfig::tiny_pjrt()
+            } else {
+                SystemConfig::default()
+            };
+            c.apply_overrides(args);
+            c
+        }
+    };
+    if let Some(seed) = args.get::<u64>("seed") {
+        cfg.seed = seed;
+    }
+    cfg
+}
+
+fn make_trace(args: &Args, cfg: &SystemConfig) -> Trace {
+    let dataset = Dataset::parse(args.raw("dataset").unwrap_or("alpaca"));
+    let n = args.get_or("n", 100usize);
+    let class = if args.flag("offline") {
+        RequestClass::Offline
+    } else {
+        RequestClass::Online
+    };
+    if args.flag("offline") && args.get::<f64>("rps").is_none() {
+        Trace::batch(dataset, n, class, cfg.model.max_seq, cfg.seed)
+    } else {
+        let rps = args.get_or("rps", 8.0f64);
+        Trace::generate(dataset, n, rps, class, cfg.model.max_seq, cfg.seed)
+    }
+}
+
+fn run_system(
+    system: System,
+    cfg: &SystemConfig,
+    trace: &Trace,
+    engine: &mut dyn Engine,
+) -> bucketserve::coordinator::RunReport {
+    match system {
+        System::BucketServe => {
+            bucketserve::BucketServe::new(cfg.clone()).run(trace, engine)
+        }
+        System::DistServe => {
+            bucketserve::baselines::DistServe::new(cfg.clone()).run(trace, engine)
+        }
+        System::Uellm => {
+            bucketserve::baselines::Uellm::new(cfg.clone()).run(trace, engine)
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let system = System::parse(args.raw("system").unwrap_or("bucketserve"));
+    let trace = make_trace(args, &cfg);
+    log_info!(
+        "running {} on {} requests ({} engine)",
+        system.name(),
+        trace.len(),
+        args.raw("engine").unwrap_or("sim")
+    );
+
+    let report = if args.raw("engine") == Some("pjrt") {
+        let dir = args.raw("artifacts").unwrap_or(runtime::DEFAULT_ARTIFACTS_DIR);
+        if !runtime::artifacts_available(dir) {
+            eprintln!("artifacts not found in {dir}; run `make artifacts`");
+            return 2;
+        }
+        let mut engine = match runtime::PjrtEngine::load(dir) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("pjrt engine: {e}");
+                return 2;
+            }
+        };
+        run_system(system, &cfg, &trace, &mut engine)
+    } else {
+        let mut engine = SimEngine::new(&cfg);
+        run_system(system, &cfg, &trace, &mut engine)
+    };
+
+    let summary = Summary::from_report(system.name(), &report, &cfg.slo);
+    if args.flag("json") {
+        println!("{}", summary.to_json());
+    } else {
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(vec!["requests".into(), summary.n_requests.to_string()]);
+        t.row(vec!["makespan (s)".into(), f2(summary.makespan_s)]);
+        t.row(vec!["throughput (tok/s)".into(), f1(summary.throughput_tps)]);
+        t.row(vec!["output tok/s".into(), f1(summary.output_tps)]);
+        t.row(vec!["server RPS".into(), f2(summary.server_rps)]);
+        t.row(vec!["GPU util".into(), f2(summary.gpu_util)]);
+        t.row(vec!["SLO attainment".into(), f2(summary.slo_attainment)]);
+        t.row(vec!["mean TTFT (ms)".into(), f1(summary.mean_ttft_ms)]);
+        t.row(vec!["p99 TTFT (ms)".into(), f1(summary.p99_ttft_ms)]);
+        t.row(vec!["mean E2E (ms)".into(), f1(summary.mean_e2e_ms)]);
+        t.row(vec!["mean waste ratio".into(), f2(summary.mean_waste_ratio)]);
+        t.row(vec!["peak batch".into(), summary.peak_batch.to_string()]);
+        t.row(vec!["max buckets".into(), summary.max_buckets.to_string()]);
+        t.row(vec![
+            "bucketing overhead (ms)".into(),
+            f2(summary.bucket_overhead_ms),
+        ]);
+        t.print(&format!("{} / {}", system.name(), args.raw("dataset").unwrap_or("alpaca")));
+    }
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let trace = make_trace(args, &cfg);
+    let mut t = Table::new(&[
+        "system", "tok/s", "RPS", "util", "SLO", "TTFT ms", "E2E ms", "waste",
+    ]);
+    for system in System::ALL {
+        let report = system.run_sim(&cfg, &trace);
+        let s = Summary::from_report(system.name(), &report, &cfg.slo);
+        t.row(vec![
+            s.system.clone(),
+            f1(s.throughput_tps),
+            f2(s.server_rps),
+            f2(s.gpu_util),
+            f2(s.slo_attainment),
+            f1(s.mean_ttft_ms),
+            f1(s.mean_e2e_ms),
+            f2(s.mean_waste_ratio),
+        ]);
+    }
+    t.print(&format!(
+        "compare — {} × {} requests",
+        args.raw("dataset").unwrap_or("alpaca"),
+        trace.len()
+    ));
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let system = System::parse(args.raw("system").unwrap_or("bucketserve"));
+    let addr = args.raw("addr").unwrap_or("127.0.0.1:7777").to_string();
+    let server = Server::new(cfg, system);
+    log_info!("gateway listening on {addr} ({})", system.name());
+    if let Err(e) = server.serve(&addr, |a| println!("listening on {a}")) {
+        eprintln!("serve: {e}");
+        return 2;
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    println!("{}", cfg.to_json());
+    let dir = args.raw("artifacts").unwrap_or(runtime::DEFAULT_ARTIFACTS_DIR);
+    if runtime::artifacts_available(dir) {
+        match runtime::Manifest::load(dir) {
+            Ok(m) => {
+                println!(
+                    "artifacts: {} compiled shapes, model {} params, buckets {:?}",
+                    m.artifacts.len(),
+                    m.model.param_count,
+                    m.bucket_bounds()
+                );
+            }
+            Err(e) => println!("artifacts: manifest error: {e}"),
+        }
+    } else {
+        println!("artifacts: not built (run `make artifacts`)");
+    }
+    0
+}
+
+fn print_help() {
+    println!(
+        "bucketserve — bucket-based dynamic batching for LLM serving (paper reproduction)
+
+USAGE:
+  bucketserve run     --system bucketserve|distserve|uellm --dataset alpaca|longbench|mixed
+                      [--n 200] [--rps 8] [--offline] [--engine sim|pjrt] [--json]
+  bucketserve compare --dataset mixed --n 200 [--rps 8 | --offline]
+  bucketserve serve   --addr 127.0.0.1:7777 [--system bucketserve]
+  bucketserve info    [--config cfg.json]
+
+Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
+                  --fleet.n_prefill 2 --fleet.n_decode 2 --seed 42
+                  --slo.ttft_us 400000 --slo.tbt_us 100000"
+    );
+}

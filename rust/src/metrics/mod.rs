@@ -1,0 +1,111 @@
+//! Metrics: run-report summarization shared by the CLI, examples, and the
+//! figure benches.
+
+use crate::coordinator::RunReport;
+use crate::config::SloSpec;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// A flattened summary of one run (one row of a figure bench).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub system: String,
+    pub n_requests: usize,
+    pub makespan_s: f64,
+    pub throughput_tps: f64,
+    pub output_tps: f64,
+    pub server_rps: f64,
+    pub gpu_util: f64,
+    pub slo_attainment: f64,
+    pub mean_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    pub mean_e2e_ms: f64,
+    pub p99_e2e_ms: f64,
+    pub mean_tbt_ms: f64,
+    pub mean_waste_ratio: f64,
+    pub peak_batch: usize,
+    pub max_buckets: usize,
+    pub bucket_overhead_ms: f64,
+}
+
+impl Summary {
+    pub fn from_report(system: &str, r: &RunReport, slo: &SloSpec) -> Summary {
+        let mut ttft = Samples::new();
+        let mut e2e = Samples::new();
+        let mut tbt = Samples::new();
+        let mut waste = Samples::new();
+        for c in &r.completions {
+            ttft.push(c.ttft() as f64 / 1e3);
+            e2e.push(c.e2e() as f64 / 1e3);
+            tbt.push(c.tbt() / 1e3);
+            waste.push(c.waste_ratio());
+        }
+        Summary {
+            system: system.to_string(),
+            n_requests: r.completions.len(),
+            makespan_s: r.makespan_us as f64 / 1e6,
+            throughput_tps: r.throughput_tps(),
+            output_tps: r.output_tps(),
+            server_rps: r.server_rps(),
+            gpu_util: r.gpu_util(),
+            slo_attainment: r.slo_attainment(slo.ttft_us, slo.tbt_us),
+            mean_ttft_ms: ttft.mean(),
+            p99_ttft_ms: ttft.percentile(99.0),
+            mean_e2e_ms: e2e.mean(),
+            p99_e2e_ms: e2e.percentile(99.0),
+            mean_tbt_ms: tbt.mean(),
+            mean_waste_ratio: waste.mean(),
+            peak_batch: r.peak_batch,
+            max_buckets: r.max_buckets,
+            bucket_overhead_ms: r.bucket_overhead_ns as f64 / 1e6,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("system", Json::from(self.system.as_str())),
+            ("n_requests", Json::from(self.n_requests)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("throughput_tps", Json::num(self.throughput_tps)),
+            ("output_tps", Json::num(self.output_tps)),
+            ("server_rps", Json::num(self.server_rps)),
+            ("gpu_util", Json::num(self.gpu_util)),
+            ("slo_attainment", Json::num(self.slo_attainment)),
+            ("mean_ttft_ms", Json::num(self.mean_ttft_ms)),
+            ("p99_ttft_ms", Json::num(self.p99_ttft_ms)),
+            ("mean_e2e_ms", Json::num(self.mean_e2e_ms)),
+            ("p99_e2e_ms", Json::num(self.p99_e2e_ms)),
+            ("mean_tbt_ms", Json::num(self.mean_tbt_ms)),
+            ("mean_waste_ratio", Json::num(self.mean_waste_ratio)),
+            ("peak_batch", Json::from(self.peak_batch)),
+            ("max_buckets", Json::from(self.max_buckets)),
+            ("bucket_overhead_ms", Json::num(self.bucket_overhead_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::System;
+    use crate::config::SystemConfig;
+    use crate::workload::{Dataset, RequestClass, Trace};
+
+    #[test]
+    fn summary_fields_consistent() {
+        let cfg = SystemConfig::default();
+        let trace =
+            Trace::batch(Dataset::Alpaca, 40, RequestClass::Offline, 4096, 1);
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        assert_eq!(s.n_requests, 40);
+        assert!(s.throughput_tps > 0.0);
+        assert!(s.gpu_util > 0.0 && s.gpu_util <= 1.0);
+        assert!(s.p99_e2e_ms >= s.mean_e2e_ms * 0.5);
+        assert!((0.0..=1.0).contains(&s.slo_attainment));
+        // JSON serialization parses back.
+        let j = s.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("n_requests").as_usize(), Some(40));
+    }
+}

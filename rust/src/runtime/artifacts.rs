@@ -1,0 +1,312 @@
+//! Artifact manifest + weights: the build-time contract with
+//! `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Model hyper-parameters recorded in the manifest (mirrors
+/// `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub head_dim: u32,
+    pub ffn_dim: u32,
+    pub kv_capacity: u32,
+    pub max_prefill: u32,
+    pub param_count: u64,
+}
+
+/// One weight tensor's layout inside `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// One compiled executable's description.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub batch: u32,
+    /// Prefill: the bucket bound (padded sequence length).
+    /// Decode: the KV capacity.
+    pub seq: u32,
+    pub file: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Prefill,
+    Decode,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub weights_file: String,
+    pub weights_total_bytes: usize,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> anyhow::Result<Manifest> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+
+        let m = j.get("model");
+        let model = ModelInfo {
+            vocab: need_u32(m, "vocab")?,
+            d_model: need_u32(m, "d_model")?,
+            n_layers: need_u32(m, "n_layers")?,
+            n_heads: need_u32(m, "n_heads")?,
+            head_dim: need_u32(m, "head_dim")?,
+            ffn_dim: need_u32(m, "ffn_dim")?,
+            kv_capacity: need_u32(m, "kv_capacity")?,
+            max_prefill: need_u32(m, "max_prefill")?,
+            param_count: m.get("param_count").as_u64().unwrap_or(0),
+        };
+
+        let w = j.get("weights");
+        let weights = w
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest: weights.tensors missing"))?
+            .iter()
+            .map(|t| {
+                Ok(WeightEntry {
+                    name: t
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("weight name"))?
+                        .to_string(),
+                    shape: t
+                        .get("shape")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_usize())
+                        .collect(),
+                    offset: t.get("offset").as_usize().unwrap_or(0),
+                    bytes: t.get("bytes").as_usize().unwrap_or(0),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest: artifacts missing"))?
+            .iter()
+            .map(|a| {
+                let kind = match a.get("kind").as_str() {
+                    Some("prefill") => ArtifactKind::Prefill,
+                    Some("decode") => ArtifactKind::Decode,
+                    other => anyhow::bail!("unknown artifact kind {other:?}"),
+                };
+                Ok(ArtifactEntry {
+                    name: a
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("artifact name"))?
+                        .to_string(),
+                    kind,
+                    batch: a.get("batch").as_u64().unwrap_or(1) as u32,
+                    seq: a.get("seq").as_u64().unwrap_or(0) as u32,
+                    file: a
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("artifact file"))?
+                        .to_string(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: PathBuf::from(dir),
+            model,
+            weights_file: w
+                .get("file")
+                .as_str()
+                .unwrap_or("weights.bin")
+                .to_string(),
+            weights_total_bytes: w.get("total_bytes").as_usize().unwrap_or(0),
+            weights,
+            artifacts,
+        })
+    }
+
+    /// Read the raw weights blob.
+    pub fn read_weights(&self) -> anyhow::Result<Vec<u8>> {
+        let path = self.dir.join(&self.weights_file);
+        let blob = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        if self.weights_total_bytes != 0 && blob.len() != self.weights_total_bytes {
+            anyhow::bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                blob.len(),
+                self.weights_total_bytes
+            );
+        }
+        Ok(blob)
+    }
+
+    /// Available prefill shapes, sorted: (batch, seq).
+    pub fn prefill_shapes(&self) -> Vec<(u32, u32)> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Prefill)
+            .map(|a| (a.batch, a.seq))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Available decode batch sizes, sorted.
+    pub fn decode_batches(&self) -> Vec<u32> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode)
+            .map(|a| a.batch)
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Smallest compiled prefill shape covering (n, seq_len), if any.
+    pub fn pick_prefill(&self, n: u32, seq_len: u32) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Prefill && a.batch >= n && a.seq >= seq_len
+            })
+            .min_by_key(|a| (a.batch, a.seq))
+    }
+
+    /// Smallest compiled decode batch covering n, if any.
+    pub fn pick_decode(&self, n: u32) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.batch >= n)
+            .min_by_key(|a| a.batch)
+    }
+
+    /// Prefill bucket bounds (the shape menu the scheduler buckets onto).
+    pub fn bucket_bounds(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Prefill)
+            .map(|a| a.seq)
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+fn need_u32(j: &Json, key: &str) -> anyhow::Result<u32> {
+    j.get(key)
+        .as_u64()
+        .map(|v| v as u32)
+        .ok_or_else(|| anyhow::anyhow!("manifest: model.{key} missing"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<String> {
+        // Tests run from the crate root; artifacts may not exist in CI.
+        let dir = "artifacts";
+        if crate::runtime::artifacts_available(dir) {
+            Some(dir.to_string())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.vocab > 0);
+        assert!(!m.weights.is_empty());
+        assert!(!m.artifacts.is_empty());
+        // Weight layout is contiguous and ordered.
+        let mut expect = 0usize;
+        for w in &m.weights {
+            assert_eq!(w.offset, expect, "weight {} offset", w.name);
+            let numel: usize = w.shape.iter().product();
+            assert_eq!(w.bytes, numel * 4, "weight {} is f32", w.name);
+            expect += w.bytes;
+        }
+        assert_eq!(expect, m.weights_total_bytes);
+        let blob = m.read_weights().unwrap();
+        assert_eq!(blob.len(), m.weights_total_bytes);
+    }
+
+    #[test]
+    fn shape_selection_picks_smallest_cover() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let shapes = m.prefill_shapes();
+        assert!(!shapes.is_empty());
+        let a = m.pick_prefill(3, 100).unwrap();
+        assert!(a.batch >= 3 && a.seq >= 100);
+        // No strictly smaller covering artifact exists.
+        for s in &shapes {
+            if s.0 >= 3 && s.1 >= 100 {
+                assert!((a.batch, a.seq) <= *s);
+            }
+        }
+        assert!(m.pick_prefill(1000, 100).is_none());
+        let d = m.pick_decode(3).unwrap();
+        assert!(d.batch >= 3);
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("bs_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "model": {"vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 1,
+                      "head_dim": 4, "ffn_dim": 8, "kv_capacity": 16,
+                      "max_prefill": 8, "param_count": 100},
+            "weights": {"file": "weights.bin", "total_bytes": 8,
+                        "tensors": [{"name": "w", "shape": [2], "offset": 0, "bytes": 8}]},
+            "artifacts": [
+                {"name": "prefill_b1_s8", "kind": "prefill", "batch": 1,
+                 "seq": 8, "file": "prefill_b1_s8.hlo.txt"},
+                {"name": "decode_b1", "kind": "decode", "batch": 1,
+                 "seq": 16, "file": "decode_b1.hlo.txt"}
+            ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(dir.to_str().unwrap()).unwrap();
+        assert_eq!(m.model.vocab, 8);
+        assert_eq!(m.bucket_bounds(), vec![8]);
+        assert_eq!(m.decode_batches(), vec![1]);
+        assert_eq!(m.read_weights().unwrap().len(), 8);
+    }
+}

@@ -1,0 +1,351 @@
+//! `PjrtEngine`: real execution of the AOT artifacts behind the
+//! [`Engine`](crate::cluster::Engine) trait.
+//!
+//! The scheduler's bucket bounds map directly onto the compiled prefill
+//! shapes (`prefill_b{B}_s{S}`): a formed batch is rounded up to the
+//! smallest covering artifact, dummy rows/columns are masked out by the
+//! `lengths` input, and the KV cache comes back padded to the decode
+//! capacity so any decode artifact can consume it. Per-request KV lives
+//! host-side between steps (the CPU analogue of the paper's NVLink
+//! hand-off between prefill and decode instances).
+
+use super::pjrt::PjrtRuntime;
+use crate::cluster::{DecodeBatch, Engine, PrefillBatch};
+use crate::config::ModelSpec;
+use crate::workload::RequestId;
+use crate::Micros;
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Host-side per-request KV state between engine calls.
+struct KvState {
+    /// (L, H, CAP, D) flattened, per layer contiguous.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Valid cache entries (prompt + generated-so-far − 1).
+    kv_valid: u32,
+    last_token: i32,
+    generated: Vec<i32>,
+}
+
+/// Real-execution engine over the PJRT CPU client.
+pub struct PjrtEngine {
+    rt: PjrtRuntime,
+    spec: ModelSpec,
+    states: HashMap<RequestId, KvState>,
+    /// Per-layer KV chunk (H·CAP·D) and total per-request KV length.
+    layer_chunk: usize,
+    kv_len: usize,
+    pub prefill_calls: u64,
+    pub decode_calls: u64,
+}
+
+impl PjrtEngine {
+    /// Load artifacts from `dir` and stand the engine up.
+    pub fn load(dir: &str) -> anyhow::Result<PjrtEngine> {
+        let rt = PjrtRuntime::load(dir)?;
+        let m = &rt.manifest.model;
+        let spec = ModelSpec {
+            n_params: m.param_count as f64,
+            n_layers: m.n_layers,
+            n_heads: m.n_heads,
+            head_dim: m.head_dim,
+            bytes_per_el: 4,
+            max_seq: m.max_prefill,
+        };
+        let layer_chunk =
+            (m.n_heads * m.kv_capacity * m.head_dim) as usize;
+        let kv_len = m.n_layers as usize * layer_chunk;
+        Ok(PjrtEngine {
+            rt,
+            spec,
+            states: HashMap::new(),
+            layer_chunk,
+            kv_len,
+            prefill_calls: 0,
+            decode_calls: 0,
+        })
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut PjrtRuntime {
+        &mut self.rt
+    }
+
+    /// Tokens generated so far for a live request.
+    pub fn generated(&self, id: RequestId) -> Option<&[i32]> {
+        self.states.get(&id).map(|s| s.generated.as_slice())
+    }
+
+    /// Deterministic filler prompt for requests without real tokens.
+    fn synth_tokens(&self, id: RequestId, len: usize) -> Vec<i32> {
+        let vocab = self.rt.manifest.model.vocab as u64;
+        (0..len)
+            .map(|j| {
+                ((id.wrapping_mul(1315423911) ^ (j as u64).wrapping_mul(2654435761))
+                    % vocab) as i32
+            })
+            .collect()
+    }
+
+    fn argmax_rows(logits: &[f32], rows: usize, cols: usize) -> Vec<i32> {
+        (0..rows)
+            .map(|r| {
+                let row = &logits[r * cols..(r + 1) * cols];
+                let mut best = 0usize;
+                for (i, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = i;
+                    }
+                }
+                best as i32
+            })
+            .collect()
+    }
+
+    /// Run one compiled prefill for up to `artifact.batch` items.
+    fn prefill_chunk(
+        &mut self,
+        items: &[crate::cluster::PrefillItem],
+        padded_len: u32,
+    ) -> anyhow::Result<()> {
+        let n = items.len() as u32;
+        let max_len = items.iter().map(|i| i.len).max().unwrap_or(1);
+        let want_seq = padded_len.max(max_len);
+        let entry = self
+            .rt
+            .manifest
+            .pick_prefill(n, want_seq)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no prefill artifact covers batch {n} seq {want_seq}"
+                )
+            })?
+            .clone();
+        let (bsz, seq) = (entry.batch as usize, entry.seq as usize);
+        let m = self.rt.manifest.model.clone();
+
+        let mut tokens = vec![0i32; bsz * seq];
+        let mut lengths = vec![1i32; bsz];
+        for (i, item) in items.iter().enumerate() {
+            let len = (item.len as usize).min(seq).max(1);
+            lengths[i] = len as i32;
+            let toks: Vec<i32> = if item.tokens.is_empty() {
+                self.synth_tokens(item.id, len)
+            } else {
+                item.tokens.iter().map(|&t| t as i32).collect()
+            };
+            for (j, &t) in toks.iter().take(len).enumerate() {
+                tokens[i * seq + j] = t % m.vocab as i32;
+            }
+        }
+
+        self.rt.ensure_compiled(&entry)?;
+        let tok_buf = self.rt.buffer_i32(&tokens, &[bsz, seq])?;
+        let len_buf = self.rt.buffer_i32(&lengths, &[bsz])?;
+        let exe = self.rt.get_executable(&entry.name).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = self.rt.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("prefill execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("prefill fetch: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("prefill untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "prefill output arity");
+        let logits: Vec<f32> = parts[0]
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let kall: Vec<f32> =
+            parts[1].to_vec().map_err(|e| anyhow::anyhow!("k: {e:?}"))?;
+        let vall: Vec<f32> =
+            parts[2].to_vec().map_err(|e| anyhow::anyhow!("v: {e:?}"))?;
+
+        let first = Self::argmax_rows(&logits, bsz, m.vocab as usize);
+        // kall shape: (L, B, H, CAP, D) → per request (L, H, CAP, D).
+        for (i, item) in items.iter().enumerate() {
+            let mut k = vec![0f32; self.kv_len];
+            let mut v = vec![0f32; self.kv_len];
+            for l in 0..m.n_layers as usize {
+                let src = (l * bsz + i) * self.layer_chunk;
+                let dst = l * self.layer_chunk;
+                k[dst..dst + self.layer_chunk]
+                    .copy_from_slice(&kall[src..src + self.layer_chunk]);
+                v[dst..dst + self.layer_chunk]
+                    .copy_from_slice(&vall[src..src + self.layer_chunk]);
+            }
+            self.states.insert(
+                item.id,
+                KvState {
+                    k,
+                    v,
+                    kv_valid: lengths[i] as u32,
+                    last_token: first[i],
+                    generated: vec![first[i]],
+                },
+            );
+        }
+        Ok(())
+    }
+
+    /// Run one compiled decode iteration for up to `artifact.batch` seqs.
+    fn decode_chunk(&mut self, ids: &[RequestId]) -> anyhow::Result<()> {
+        let n = ids.len() as u32;
+        let entry = self
+            .rt
+            .manifest
+            .pick_decode(n)
+            .ok_or_else(|| anyhow::anyhow!("no decode artifact covers {n}"))?
+            .clone();
+        let bsz = entry.batch as usize;
+        let m = self.rt.manifest.model.clone();
+        let cap = m.kv_capacity;
+
+        let mut kall = vec![0f32; m.n_layers as usize * bsz * self.layer_chunk];
+        let mut vall = vec![0f32; m.n_layers as usize * bsz * self.layer_chunk];
+        let mut tokens = vec![0i32; bsz];
+        let mut pos = vec![0i32; bsz];
+        for (i, id) in ids.iter().enumerate() {
+            let st = self
+                .states
+                .get(id)
+                .ok_or_else(|| anyhow::anyhow!("decode of unknown request {id}"))?;
+            anyhow::ensure!(
+                st.kv_valid < cap,
+                "request {id} exceeded KV capacity {cap}"
+            );
+            tokens[i] = st.last_token;
+            pos[i] = st.kv_valid as i32;
+            for l in 0..m.n_layers as usize {
+                let dst = (l * bsz + i) * self.layer_chunk;
+                let src = l * self.layer_chunk;
+                kall[dst..dst + self.layer_chunk]
+                    .copy_from_slice(&st.k[src..src + self.layer_chunk]);
+                vall[dst..dst + self.layer_chunk]
+                    .copy_from_slice(&st.v[src..src + self.layer_chunk]);
+            }
+        }
+
+        let kv_dims = [
+            m.n_layers as usize,
+            bsz,
+            m.n_heads as usize,
+            cap as usize,
+            m.head_dim as usize,
+        ];
+        self.rt.ensure_compiled(&entry)?;
+        let tok_buf = self.rt.buffer_i32(&tokens, &[bsz])?;
+        let k_buf = self.rt.buffer_f32(&kall, &kv_dims)?;
+        let v_buf = self.rt.buffer_f32(&vall, &kv_dims)?;
+        let pos_buf = self.rt.buffer_i32(&pos, &[bsz])?;
+        let exe = self.rt.get_executable(&entry.name).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = self.rt.weights.iter().collect();
+        args.push(&tok_buf);
+        args.push(&k_buf);
+        args.push(&v_buf);
+        args.push(&pos_buf);
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("decode execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("decode fetch: {e:?}"))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decode untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "decode output arity");
+        let logits: Vec<f32> = parts[0]
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("logits: {e:?}"))?;
+        let knew: Vec<f32> =
+            parts[1].to_vec().map_err(|e| anyhow::anyhow!("k': {e:?}"))?;
+        let vnew: Vec<f32> =
+            parts[2].to_vec().map_err(|e| anyhow::anyhow!("v': {e:?}"))?;
+
+        let next = Self::argmax_rows(&logits, bsz, m.vocab as usize);
+        for (i, id) in ids.iter().enumerate() {
+            let st = self.states.get_mut(id).unwrap();
+            for l in 0..m.n_layers as usize {
+                let src = (l * bsz + i) * self.layer_chunk;
+                let dst = l * self.layer_chunk;
+                st.k[dst..dst + self.layer_chunk]
+                    .copy_from_slice(&knew[src..src + self.layer_chunk]);
+                st.v[dst..dst + self.layer_chunk]
+                    .copy_from_slice(&vnew[src..src + self.layer_chunk]);
+            }
+            st.kv_valid += 1;
+            st.last_token = next[i];
+            st.generated.push(next[i]);
+        }
+        Ok(())
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn model(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn prefill(&mut self, batch: &PrefillBatch) -> anyhow::Result<Micros> {
+        let t0 = Instant::now();
+        self.prefill_calls += 1;
+        let max_b = *self
+            .rt
+            .manifest
+            .prefill_shapes()
+            .iter()
+            .map(|(b, _)| b)
+            .max()
+            .ok_or_else(|| anyhow::anyhow!("no prefill artifacts"))?
+            as usize;
+        for chunk in batch.items.chunks(max_b) {
+            self.prefill_chunk(chunk, batch.padded_len)?;
+        }
+        Ok(t0.elapsed().as_micros() as Micros)
+    }
+
+    fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros> {
+        let t0 = Instant::now();
+        self.decode_calls += 1;
+        let max_b = *self
+            .rt
+            .manifest
+            .decode_batches()
+            .iter()
+            .max()
+            .ok_or_else(|| anyhow::anyhow!("no decode artifacts"))?
+            as usize;
+        let ids: Vec<RequestId> = batch.seqs.iter().map(|s| s.id).collect();
+        for chunk in ids.chunks(max_b) {
+            self.decode_chunk(chunk)?;
+        }
+        Ok(t0.elapsed().as_micros() as Micros)
+    }
+
+    fn kv_transfer(&mut self, _tokens: u64) -> Micros {
+        // Same-process hand-off: KV is already host-resident.
+        0
+    }
+
+    fn decode_mem_budget(&self) -> u64 {
+        // Host-side KV budget for the tiny model: cap concurrent context at
+        // 64 full-length sequences' worth of cache.
+        let m = &self.rt.manifest.model;
+        64 * m.kv_capacity as u64 * self.spec.kv_bytes_per_token()
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.states.remove(&id);
+    }
+}

@@ -1,0 +1,29 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX + Pallas artifacts.
+//!
+//! * [`artifacts`] — manifest + weights loader (the contract emitted by
+//!   `python/compile/aot.py`).
+//! * [`pjrt`] — the PJRT CPU client wrapper: HLO-text → compiled executable
+//!   cache, weight device buffers.
+//! * [`engine`] — [`engine::PjrtEngine`], the real-execution implementation
+//!   of [`crate::cluster::Engine`]: bucket bounds select compiled shapes,
+//!   prefill outputs feed per-request KV state, decode steps run true
+//!   continuous batching on the compiled decode executables.
+//!
+//! Python never appears here: the artifacts directory is the entire
+//! build-time → request-path interface.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::PjrtEngine;
+pub use pjrt::PjrtRuntime;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True when an artifacts directory looks complete (manifest present).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,0 +1,127 @@
+//! PJRT client wrapper: compiled-executable cache + device-resident weights.
+//!
+//! HLO **text** is the interchange format (`HloModuleProto::from_text_file`
+//! reassigns instruction ids, which is what makes jax ≥ 0.5 output loadable
+//! on xla_extension 0.5.1 — see DESIGN.md and /opt/xla-example/README.md).
+//!
+//! Weights are uploaded to device buffers once at startup and shared by
+//! every executable via `execute_b`; the request path never re-uploads
+//! them. Executables compile lazily on first use and are cached by
+//! artifact name — the bucket → static-shape mapping means a warmed server
+//! touches each shape once.
+
+use super::artifacts::{ArtifactEntry, Manifest};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// The runtime: client + manifest + weights + executable cache.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// Device-resident weight buffers, in manifest order.
+    pub weights: Vec<xla::PjRtBuffer>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative compile time (startup cost, reported by examples).
+    pub compile_us: u64,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client, load the manifest, upload weights.
+    pub fn load(dir: &str) -> anyhow::Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        let blob = manifest.read_weights()?;
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            // NB: decode little-endian f32 and use the *typed* upload path;
+            // the crate's raw-bytes path passes the ElementType discriminant
+            // where XLA expects a PrimitiveType (F32 → F16), corrupting the
+            // buffer size.
+            let bytes = &blob[w.offset..w.offset + w.bytes];
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer(&data, &w.shape, None)
+                .map_err(|e| anyhow::anyhow!("upload {}: {e:?}", w.name))?;
+            weights.push(buf);
+        }
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            weights,
+            executables: HashMap::new(),
+            compile_us: 0,
+        })
+    }
+
+    /// Compile (once) the executable for an artifact.
+    pub fn ensure_compiled(&mut self, entry: &ArtifactEntry) -> anyhow::Result<()> {
+        if !self.executables.contains_key(&entry.name) {
+            let path = self.manifest.dir.join(&entry.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", entry.name))?;
+            self.compile_us += t0.elapsed().as_micros() as u64;
+            self.executables.insert(entry.name.clone(), exe);
+        }
+        Ok(())
+    }
+
+    /// Fetch a previously compiled executable by artifact name.
+    pub fn get_executable(&self, name: &str) -> Option<&xla::PjRtLoadedExecutable> {
+        self.executables.get(name)
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn executable(
+        &mut self,
+        entry: &ArtifactEntry,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        self.ensure_compiled(entry)?;
+        Ok(&self.executables[&entry.name])
+    }
+
+    /// Eagerly compile every artifact (server warm-up).
+    pub fn warm_up(&mut self) -> anyhow::Result<()> {
+        let entries: Vec<ArtifactEntry> = self.manifest.artifacts.clone();
+        for e in &entries {
+            self.ensure_compiled(e)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.executables.len()
+    }
+
+    /// Upload an i32 tensor.
+    pub fn buffer_i32(
+        &self,
+        data: &[i32],
+        dims: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
+    }
+
+    /// Upload an f32 tensor.
+    pub fn buffer_f32(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))
+    }
+}

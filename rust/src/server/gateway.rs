@@ -1,0 +1,166 @@
+//! In-process gateway: request admission, class routing, and run dispatch.
+//!
+//! The gateway is the "application layer → middleware" boundary of the
+//! paper's three-tier architecture (Fig. 4): it stamps arrivals, routes by
+//! task class, and hands the accumulated trace to a serving system. Online
+//! and offline requests keep their class so the scheduler can apply
+//! SLO-oriented vs. throughput-oriented policies.
+
+use crate::baselines::System;
+use crate::cluster::Engine;
+use crate::config::SystemConfig;
+use crate::coordinator::RunReport;
+use crate::workload::{Request, RequestClass, Trace};
+use crate::Micros;
+use std::time::Instant;
+
+/// Collects requests and dispatches runs.
+pub struct Gateway {
+    cfg: SystemConfig,
+    system: System,
+    started: Instant,
+    pending: Vec<Request>,
+    next_id: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl Gateway {
+    pub fn new(cfg: SystemConfig, system: System) -> Gateway {
+        Gateway {
+            cfg,
+            system,
+            started: Instant::now(),
+            pending: Vec::new(),
+            next_id: 0,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Wall-clock arrival timestamp relative to gateway start.
+    pub fn now(&self) -> Micros {
+        self.started.elapsed().as_micros() as Micros
+    }
+
+    /// Admit one request; returns its assigned id, or None if rejected
+    /// (zero-length prompt or prompt beyond the context limit budget).
+    pub fn submit(
+        &mut self,
+        class: RequestClass,
+        input_len: u32,
+        output_len: u32,
+        arrival: Option<Micros>,
+    ) -> Option<u64> {
+        if input_len == 0 || output_len == 0 {
+            self.rejected += 1;
+            return None;
+        }
+        let max = self.cfg.model.max_seq;
+        if input_len > max {
+            self.rejected += 1;
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.accepted += 1;
+        let output_len = output_len.min(max.saturating_sub(input_len).max(1));
+        self.pending.push(Request::new(
+            id,
+            class,
+            input_len,
+            output_len,
+            arrival.unwrap_or_else(|| self.now()),
+        ));
+        Some(id)
+    }
+
+    /// Number of requests waiting for the next run.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drain the accumulated requests as a replayable trace.
+    pub fn drain_trace(&mut self) -> Trace {
+        let mut requests = std::mem::take(&mut self.pending);
+        requests.sort_by_key(|r| r.arrival);
+        Trace { requests }
+    }
+
+    /// Run the configured system over the accumulated requests.
+    pub fn run(&mut self, engine: &mut dyn Engine) -> RunReport {
+        let trace = self.drain_trace();
+        match self.system {
+            System::BucketServe => crate::coordinator::BucketServe::new(
+                self.cfg.clone(),
+            )
+            .run(&trace, engine),
+            System::DistServe => {
+                crate::baselines::DistServe::new(self.cfg.clone())
+                    .run(&trace, engine)
+            }
+            System::Uellm => {
+                crate::baselines::Uellm::new(self.cfg.clone()).run(&trace, engine)
+            }
+        }
+    }
+
+    pub fn system(&self) -> System {
+        self.system
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::sim::SimEngine;
+
+    #[test]
+    fn submit_assigns_monotonic_ids() {
+        let mut g = Gateway::new(SystemConfig::default(), System::BucketServe);
+        let a = g.submit(RequestClass::Online, 100, 10, Some(0)).unwrap();
+        let b = g.submit(RequestClass::Online, 200, 10, Some(1)).unwrap();
+        assert!(b > a);
+        assert_eq!(g.pending(), 2);
+        assert_eq!(g.accepted, 2);
+    }
+
+    #[test]
+    fn rejects_invalid_requests() {
+        let mut g = Gateway::new(SystemConfig::default(), System::BucketServe);
+        assert!(g.submit(RequestClass::Online, 0, 10, Some(0)).is_none());
+        assert!(g.submit(RequestClass::Online, 10, 0, Some(0)).is_none());
+        assert!(g
+            .submit(RequestClass::Online, 100_000, 10, Some(0))
+            .is_none());
+        assert_eq!(g.rejected, 3);
+        assert_eq!(g.pending(), 0);
+    }
+
+    #[test]
+    fn run_serves_pending_requests() {
+        let cfg = SystemConfig::default();
+        let mut g = Gateway::new(cfg.clone(), System::BucketServe);
+        for i in 0..10 {
+            g.submit(RequestClass::Online, 100 + i, 20, Some(i as u64 * 1000))
+                .unwrap();
+        }
+        let mut engine = SimEngine::new(&cfg);
+        let report = g.run(&mut engine);
+        assert_eq!(report.completions.len(), 10);
+        assert_eq!(g.pending(), 0);
+    }
+
+    #[test]
+    fn trace_sorted_by_arrival() {
+        let mut g = Gateway::new(SystemConfig::default(), System::DistServe);
+        g.submit(RequestClass::Offline, 10, 5, Some(500)).unwrap();
+        g.submit(RequestClass::Offline, 10, 5, Some(100)).unwrap();
+        let t = g.drain_trace();
+        assert!(t.requests[0].arrival <= t.requests[1].arrival);
+    }
+}

@@ -1,0 +1,15 @@
+//! Serving front end.
+//!
+//! * [`gateway`] — in-process gateway: collects requests (wall-clock
+//!   arrival stamping, class routing) into a replayable [`Trace`] and runs
+//!   a chosen system over a chosen engine.
+//! * [`tcp`] — newline-delimited-JSON TCP protocol over the gateway: the
+//!   `bucketserve serve` subcommand and its client.
+//!
+//! [`Trace`]: crate::workload::Trace
+
+pub mod gateway;
+pub mod tcp;
+
+pub use gateway::Gateway;
+pub use tcp::{Server, TcpClient};

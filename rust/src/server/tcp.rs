@@ -1,0 +1,276 @@
+//! Newline-delimited-JSON TCP front end.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"op":"ping"}                                   ← {"ok":true,"op":"pong"}
+//! → {"op":"req","input_len":N,"output_len":M,
+//!    "class":"online"|"offline"}                    ← {"ok":true,"id":K}
+//! → {"op":"run"}                                    ← one {"id":..,"ttft_ms":..,
+//!                                                       "e2e_ms":..} per
+//!                                                      completion, then
+//!                                                      {"ok":true,"summary":{...}}
+//! → {"op":"quit"}                                   ← {"ok":true} and close
+//! ```
+//!
+//! The server replays accumulated arrivals through the configured system
+//! (a replay gateway: requests are stamped on receipt, scheduled exactly
+//! as the live arrival sequence).
+
+use super::gateway::Gateway;
+use crate::baselines::System;
+use crate::cluster::sim::SimEngine;
+use crate::config::SystemConfig;
+use crate::metrics::Summary;
+use crate::util::json::Json;
+use crate::workload::RequestClass;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// The TCP server.
+pub struct Server {
+    cfg: SystemConfig,
+    system: System,
+}
+
+impl Server {
+    pub fn new(cfg: SystemConfig, system: System) -> Server {
+        Server { cfg, system }
+    }
+
+    /// Bind and serve until a client sends `{"op":"shutdown"}`.
+    /// Returns the bound address via the callback before blocking.
+    pub fn serve(&self, addr: &str, mut on_bound: impl FnMut(String)) -> anyhow::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        on_bound(listener.local_addr()?.to_string());
+        for stream in listener.incoming() {
+            let stream = stream?;
+            match self.handle(stream) {
+                Ok(shutdown) => {
+                    if shutdown {
+                        break;
+                    }
+                }
+                Err(e) => crate::log_warn!("client error: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Handle one connection; Ok(true) = shutdown requested.
+    fn handle(&self, stream: TcpStream) -> anyhow::Result<bool> {
+        let mut gateway = Gateway::new(self.cfg.clone(), self.system);
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let msg = match Json::parse(&line) {
+                Ok(j) => j,
+                Err(e) => {
+                    send(&mut writer, &err_json(&format!("bad json: {e}")))?;
+                    continue;
+                }
+            };
+            match msg.get("op").as_str() {
+                Some("ping") => send(
+                    &mut writer,
+                    &Json::obj(vec![
+                        ("ok", Json::from(true)),
+                        ("op", Json::from("pong")),
+                        ("system", Json::from(self.system.name())),
+                    ]),
+                )?,
+                Some("req") => {
+                    let class = match msg.get("class").as_str() {
+                        Some("offline") => RequestClass::Offline,
+                        _ => RequestClass::Online,
+                    };
+                    let input = msg.get("input_len").as_u64().unwrap_or(0) as u32;
+                    let output = msg.get("output_len").as_u64().unwrap_or(0) as u32;
+                    let arrival = msg.get("arrival").as_u64();
+                    match gateway.submit(class, input, output, arrival) {
+                        Some(id) => send(
+                            &mut writer,
+                            &Json::obj(vec![
+                                ("ok", Json::from(true)),
+                                ("id", Json::from(id)),
+                            ]),
+                        )?,
+                        None => {
+                            send(&mut writer, &err_json("rejected"))?
+                        }
+                    }
+                }
+                Some("run") => {
+                    let mut engine = SimEngine::new(&self.cfg);
+                    let report = gateway.run(&mut engine);
+                    for c in &report.completions {
+                        send(
+                            &mut writer,
+                            &Json::obj(vec![
+                                ("id", Json::from(c.id)),
+                                ("ttft_ms", Json::num(c.ttft() as f64 / 1e3)),
+                                ("e2e_ms", Json::num(c.e2e() as f64 / 1e3)),
+                                ("output_len", Json::from(c.output_len as u64)),
+                            ]),
+                        )?;
+                    }
+                    let summary =
+                        Summary::from_report(self.system.name(), &report, &self.cfg.slo);
+                    send(
+                        &mut writer,
+                        &Json::obj(vec![
+                            ("ok", Json::from(true)),
+                            ("summary", summary.to_json()),
+                        ]),
+                    )?;
+                }
+                Some("quit") => {
+                    send(&mut writer, &Json::obj(vec![("ok", Json::from(true))]))?;
+                    return Ok(false);
+                }
+                Some("shutdown") => {
+                    send(&mut writer, &Json::obj(vec![("ok", Json::from(true))]))?;
+                    return Ok(true);
+                }
+                other => send(
+                    &mut writer,
+                    &err_json(&format!("unknown op {other:?}")),
+                )?,
+            }
+        }
+        Ok(false)
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::from(false)), ("error", Json::from(msg))])
+}
+
+fn send(w: &mut TcpStream, j: &Json) -> anyhow::Result<()> {
+    writeln!(w, "{j}")?;
+    Ok(())
+}
+
+/// A line-protocol client (used by tests and the CLI's `client` command).
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &str) -> anyhow::Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(TcpClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Send one message, read one reply.
+    pub fn call(&mut self, msg: &Json) -> anyhow::Result<Json> {
+        writeln!(self.writer, "{msg}")?;
+        self.read_line()
+    }
+
+    /// Read a single reply line.
+    pub fn read_line(&mut self) -> anyhow::Result<Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed connection");
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("reply: {e}"))
+    }
+
+    pub fn send_only(&mut self, msg: &Json) -> anyhow::Result<()> {
+        writeln!(self.writer, "{msg}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_server(system: System) -> (String, std::thread::JoinHandle<()>) {
+        let cfg = SystemConfig::default();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let server = Server::new(cfg, system);
+            server
+                .serve("127.0.0.1:0", move |addr| {
+                    let _ = tx.send(addr);
+                })
+                .unwrap();
+        });
+        let addr = rx.recv().unwrap();
+        (addr, handle)
+    }
+
+    #[test]
+    fn ping_and_request_round_trip() {
+        let (addr, handle) = spawn_server(System::BucketServe);
+        let mut c = TcpClient::connect(&addr).unwrap();
+
+        let pong = c
+            .call(&Json::obj(vec![("op", Json::from("ping"))]))
+            .unwrap();
+        assert_eq!(pong.get("ok").as_bool(), Some(true));
+        assert_eq!(pong.get("op").as_str(), Some("pong"));
+
+        for i in 0..5u64 {
+            let reply = c
+                .call(&Json::obj(vec![
+                    ("op", Json::from("req")),
+                    ("input_len", Json::from(100 + i)),
+                    ("output_len", Json::from(10u64)),
+                    ("class", Json::from("online")),
+                    ("arrival", Json::from(i * 1000)),
+                ]))
+                .unwrap();
+            assert_eq!(reply.get("ok").as_bool(), Some(true), "{reply}");
+        }
+
+        // Run: 5 completion lines + summary.
+        c.send_only(&Json::obj(vec![("op", Json::from("run"))])).unwrap();
+        let mut lines = Vec::new();
+        loop {
+            let j = c.read_line().unwrap();
+            let done = !j.get("summary").is_null();
+            lines.push(j);
+            if done {
+                break;
+            }
+        }
+        assert_eq!(lines.len(), 6);
+        let summary = lines.last().unwrap().get("summary");
+        assert_eq!(summary.get("n_requests").as_usize(), Some(5));
+
+        // Shutdown.
+        let bye = c
+            .call(&Json::obj(vec![("op", Json::from("shutdown"))]))
+            .unwrap();
+        assert_eq!(bye.get("ok").as_bool(), Some(true));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let (addr, handle) = spawn_server(System::DistServe);
+        let mut c = TcpClient::connect(&addr).unwrap();
+        let reply = c
+            .call(&Json::obj(vec![
+                ("op", Json::from("req")),
+                ("input_len", Json::from(0u64)),
+                ("output_len", Json::from(1u64)),
+            ]))
+            .unwrap();
+        assert_eq!(reply.get("ok").as_bool(), Some(false));
+        let bad = c.call(&Json::str("not an op")).unwrap();
+        assert_eq!(bad.get("ok").as_bool(), Some(false));
+        c.call(&Json::obj(vec![("op", Json::from("shutdown"))])).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,172 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Two pieces:
+//! * [`time_it`] / [`Bencher`] — wall-clock micro-benchmarks with warmup,
+//!   repetitions, and mean/p50/p99 reporting, used by `micro_hotpath`.
+//! * [`Table`] — aligned-column experiment tables so every figure bench
+//!   prints the same rows/series the paper reports.
+
+use std::time::Instant;
+
+/// One micro-benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns)
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time a closure: auto-calibrated iteration count, `reps` timed samples.
+pub fn time_it<R>(name: &str, mut f: impl FnMut() -> R) -> Measurement {
+    // Warmup + calibration: aim for ~2 ms per sample.
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        let el = t0.elapsed().as_nanos() as u64;
+        if el > 2_000_000 || iters >= 1 << 22 {
+            break;
+        }
+        iters = (iters * 4).min(1 << 22);
+    }
+    let reps = 15;
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: samples[reps / 2],
+        p99_ns: samples[reps - 1],
+    }
+}
+
+/// Aligned experiment table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format helper: `f(2.5)` → "2.50".
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f0(x: f64) -> String {
+    format!("{x:.0}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures_something() {
+        let m = time_it("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p99_ns >= m.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["1".into()]);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Declarative `--flag value` argument parsing (clap is unavailable offline).
+//!
+//! ```no_run
+//! use bucketserve::util::cli::Args;
+//! let args = Args::from_env();
+//! let rps: f64 = args.get_or("rps", 8.0);
+//! let system: String = args.get_or("system", "bucketserve".to_string());
+//! let verbose = args.flag("verbose");
+//! ```
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed command line: positional words plus `--key value` / `--key=value`
+/// options and bare `--switch` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator (testable).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(stripped) = item.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    /// Typed lookup; None when absent.
+    pub fn get<T: FromStr>(&self, key: &str) -> Option<T> {
+        self.opts.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Was `--key` present (as a bare switch or with a value)?
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.opts.contains_key(key)
+    }
+
+    /// Raw string lookup.
+    pub fn raw(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// All `--key value` pairs (for config overrides).
+    pub fn overrides(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("serve --rps 8.5 --system bucketserve trace.json");
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert_eq!(a.get::<f64>("rps"), Some(8.5));
+        assert_eq!(a.raw("system"), Some("bucketserve"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--n=42 --name=x=y");
+        assert_eq!(a.get::<u64>("n"), Some(42));
+        assert_eq!(a.raw("name"), Some("x=y"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("run --verbose --count 3 --dry-run");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(a.flag("count"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get::<u32>("count"), Some(3));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b value");
+        assert!(a.flag("a"));
+        assert_eq!(a.raw("b"), Some("value"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or::<f64>("rps", 1.5), 1.5);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' (not '--') is consumed as a value.
+        let a = parse("--offset -5");
+        assert_eq!(a.get::<i64>("offset"), Some(-5));
+    }
+}

@@ -1,0 +1,120 @@
+//! Leveled stderr logger (tracing/log crates unavailable offline).
+//!
+//! Level is set once (from `--log-level` or `BUCKETSERVE_LOG`); the macros
+//! are zero-cost when filtered out beyond an atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+impl Level {
+    pub fn from_str_lossy(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Set the global level (also reads BUCKETSERVE_LOG on `init`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize from the environment (call once from main).
+pub fn init() {
+    if let Ok(v) = std::env::var("BUCKETSERVE_LOG") {
+        set_level(Level::from_str_lossy(&v));
+    }
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Internal: emit one record.
+pub fn emit(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}: {}", level.tag(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Error,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Warn,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Info,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit(
+            $crate::util::logging::Level::Debug,
+            module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::from_str_lossy("DEBUG"), Level::Debug);
+        assert_eq!(Level::from_str_lossy("bogus"), Level::Info);
+    }
+}

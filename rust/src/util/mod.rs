@@ -1,0 +1,23 @@
+//! Zero-dependency substrates.
+//!
+//! The build image is fully offline and only ships the `xla` crate's
+//! dependency closure, so the conveniences a serving framework normally
+//! pulls from crates.io (serde, rand, clap, tracing, proptest, criterion)
+//! are implemented here from scratch:
+//!
+//! * [`json`] — recursive-descent JSON parser + writer (manifest/config/IPC).
+//! * [`rng`] — PCG-family PRNG with the distributions the workload models
+//!   need (uniform, normal, log-normal, exponential, Pareto, Poisson).
+//! * [`stats`] — streaming mean/variance, percentile sketches, histograms.
+//! * [`cli`] — a small declarative `--flag value` argument parser.
+//! * [`logging`] — leveled stderr logger.
+//! * [`prop`] — mini property-testing harness (seeded generators + shrink-lite).
+//! * [`bench`] — micro/throughput bench harness used by `cargo bench` targets.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod cli;
+pub mod logging;
+pub mod prop;
+pub mod bench;

@@ -1,0 +1,145 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`] (a seeded PRNG wrapper with
+//! convenience draws). [`check`] runs it N times with derived seeds and, on
+//! failure, retries the failing seed with progressively smaller size hints
+//! (a lightweight stand-in for shrinking) before reporting the seed so the
+//! failure is reproducible:
+//!
+//! ```ignore
+//! prop::check("buckets partition the range", 256, |g| {
+//!     let reqs = g.vec(0..g.size(), |g| g.u64(0, 4096));
+//!     ... assert!(...);
+//! });
+//! ```
+
+use super::rng::Pcg;
+
+/// Generator handed to properties: a PRNG plus a "size" hint that shrinks
+/// on failure replays.
+pub struct Gen {
+    rng: Pcg,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Pcg::seeded(seed), size }
+    }
+
+    /// Current size hint (collections should scale with this).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// A collection whose length scales with the size hint.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize(0, max_len.min(self.size.max(1)));
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.usize(0, xs.len() - 1);
+        &xs[i]
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of the property. Panics (with the failing seed
+/// and smallest failing size) if any case's assertions fail.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    const BASE_SIZE: usize = 64;
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, BASE_SIZE);
+            prop(&mut g);
+        });
+        if result.is_err() {
+            // "Shrink": find the smallest size at which this seed still fails.
+            let mut smallest = BASE_SIZE;
+            for size in [1usize, 2, 4, 8, 16, 32] {
+                let r = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                });
+                if r.is_err() {
+                    smallest = size;
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed: seed={seed:#x} size={smallest} \
+                 (reproduce with Gen::new({seed:#x}, {smallest}))"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("addition commutes", 64, |g| {
+            let a = g.u64(0, 1000);
+            let b = g.u64(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 4, |g| {
+            let v = g.u64(0, 10);
+            assert!(v > 1000, "forced failure");
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_size() {
+        let mut g = Gen::new(1, 8);
+        for _ in 0..50 {
+            let v = g.vec(100, |g| g.u64(0, 9));
+            assert!(v.len() <= 8);
+        }
+    }
+
+    #[test]
+    fn gen_deterministic() {
+        let mut a = Gen::new(42, 64);
+        let mut b = Gen::new(42, 64);
+        for _ in 0..20 {
+            assert_eq!(a.u64(0, 1 << 40), b.u64(0, 1 << 40));
+        }
+    }
+}

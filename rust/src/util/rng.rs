@@ -1,0 +1,259 @@
+//! Deterministic PRNG + sampling distributions.
+//!
+//! PCG-XSH-RR 64/32 (O'Neill 2014): small state, excellent statistical
+//! quality, and — critically for reproducible experiments — a seedable,
+//! stream-splittable generator whose sequences are identical across runs
+//! and platforms.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed-only constructor (stream 54, the PCG reference default).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    /// Derive an independent child generator (for splitting workloads).
+    pub fn split(&mut self) -> Pcg {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        let stream = self.next_u32() as u64;
+        Pcg::new(seed, stream)
+    }
+
+    /// Next raw 32 bits.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64 bits.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] — safe as a log() argument.
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform integer in [lo, hi] inclusive (unbiased via rejection).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "range_u64: lo > hi");
+        let span = hi - lo + 1;
+        if span == 0 {
+            return self.next_u64(); // full range
+        }
+        let zone = u64::MAX - (u64::MAX % span);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return lo + v % span;
+            }
+        }
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal: exp(N(mu, sigma)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        -self.f64_open().ln() / lambda
+    }
+
+    /// Pareto (Lomax-shifted classic): xm * U^(-1/alpha); heavy tail for
+    /// alpha near 1.
+    pub fn pareto(&mut self, xm: f64, alpha: f64) -> f64 {
+        xm * self.f64_open().powf(-1.0 / alpha)
+    }
+
+    /// Poisson count (Knuth for small lambda, normal approx for large).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = self.normal_ms(lambda, lambda.sqrt()).round();
+            if v < 0.0 { 0 } else { v as u64 }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.range(0, xs.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg::seeded(7);
+        let mut b = Pcg::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg::seeded(1);
+        let mut b = Pcg::seeded(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::seeded(3);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_inclusive_bounds_hit() {
+        let mut r = Pcg::seeded(4);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            match r.range(3, 5) {
+                3 => lo_seen = true,
+                5 => hi_seen = true,
+                4 => {}
+                v => panic!("out of range: {v}"),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::seeded(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg::seeded(6);
+        let n = 50_000;
+        let m: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut r = Pcg::seeded(7);
+        for &lam in &[0.5, 4.0, 50.0] {
+            let n = 20_000;
+            let m: f64 =
+                (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!((m - lam).abs() < lam.max(1.0) * 0.05, "lam {lam} m {m}");
+        }
+    }
+
+    #[test]
+    fn pareto_tail_heavier_than_exponential() {
+        let mut r = Pcg::seeded(8);
+        let n = 20_000;
+        let p99_pareto = {
+            let mut xs: Vec<f64> = (0..n).map(|_| r.pareto(1.0, 1.2)).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs[(n as f64 * 0.99) as usize]
+        };
+        assert!(p99_pareto > 20.0, "p99 {p99_pareto}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::seeded(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let mut root = Pcg::seeded(10);
+        let mut a = root.split();
+        let mut b = root.split();
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,289 @@
+//! Streaming statistics, percentiles, and histograms.
+//!
+//! Everything the metrics layer and the figure benches need: Welford online
+//! mean/variance, exact percentiles over recorded samples, fixed-bucket
+//! histograms for distribution figures (Fig. 2), and a sliding-window
+//! rate estimator for the Global Monitor.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Sample recorder with exact percentiles (sorts on query).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { xs: Vec::new(), sorted: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank; q in [0,100]).
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let rank = ((q / 100.0) * (self.xs.len() as f64 - 1.0)).round() as usize;
+        self.xs[rank.min(self.xs.len() - 1)]
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Fixed-edge histogram (for the Fig. 2 distribution benches).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    edges: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// `edges` must be strictly increasing; bins are [e_i, e_{i+1}), plus an
+    /// overflow bin.
+    pub fn new(edges: Vec<f64>) -> Self {
+        assert!(edges.windows(2).all(|w| w[0] < w[1]), "edges not sorted");
+        let n = edges.len();
+        Histogram { edges, counts: vec![0; n + 1], total: 0 }
+    }
+
+    /// Uniform bins over [lo, hi).
+    pub fn uniform(lo: f64, hi: f64, bins: usize) -> Self {
+        let step = (hi - lo) / bins as f64;
+        Self::new((0..=bins).map(|i| lo + step * i as f64).collect())
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        let idx = match self.edges.binary_search_by(|e| e.partial_cmp(&x).unwrap()) {
+            Ok(i) => i + 1,     // exactly on edge e_i → bin [e_i, e_{i+1})
+            Err(0) => 0,        // below the first edge → underflow-ish bin 0
+            Err(i) => i,
+        };
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] = self.counts[idx].saturating_add(1);
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// (bin label, count, fraction) rows for printing.
+    pub fn rows(&self) -> Vec<(String, u64, f64)> {
+        let mut rows = Vec::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let label = if i == 0 {
+                format!("< {:.0}", self.edges[0])
+            } else if i < self.edges.len() {
+                format!("[{:.0}, {:.0})", self.edges[i - 1], self.edges[i])
+            } else {
+                format!(">= {:.0}", self.edges[self.edges.len() - 1])
+            };
+            let frac = if self.total == 0 { 0.0 } else { c as f64 / self.total as f64 };
+            rows.push((label, c, frac));
+        }
+        rows
+    }
+}
+
+/// Sliding-window event-rate estimator (events/sec) for the Global Monitor.
+#[derive(Debug, Clone)]
+pub struct RateWindow {
+    window_us: u64,
+    events: std::collections::VecDeque<u64>, // event timestamps (µs)
+}
+
+impl RateWindow {
+    pub fn new(window_us: u64) -> Self {
+        RateWindow { window_us, events: Default::default() }
+    }
+
+    pub fn record(&mut self, now_us: u64) {
+        self.events.push_back(now_us);
+        self.evict(now_us);
+    }
+
+    fn evict(&mut self, now_us: u64) {
+        let cutoff = now_us.saturating_sub(self.window_us);
+        while matches!(self.events.front(), Some(&t) if t < cutoff) {
+            self.events.pop_front();
+        }
+    }
+
+    /// Events per second over the window ending at `now_us`.
+    pub fn rate(&mut self, now_us: u64) -> f64 {
+        self.evict(now_us);
+        self.events.len() as f64 / (self.window_us as f64 / 1e6)
+    }
+
+    pub fn count(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((o.mean() - mean).abs() < 1e-12);
+        assert!((o.var() - var).abs() < 1e-12);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 16.0);
+        assert_eq!(o.count(), 5);
+    }
+
+    #[test]
+    fn online_empty_is_zero() {
+        let o = Online::new();
+        assert_eq!(o.mean(), 0.0);
+        assert_eq!(o.var(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        for i in (1..=100).rev() {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        // Nearest-rank median of 1..=100 is 50 or 51.
+        assert!((s.median() - 50.5).abs() <= 0.5, "median {}", s.median());
+        assert!((s.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(s.len(), 100);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(vec![0.0, 10.0, 100.0]);
+        for x in [0.0, 5.0, 9.9, 10.0, 50.0, 150.0, -1.0] {
+            h.push(x);
+        }
+        // bins: <0 | [0,10) | [10,100) | >=100
+        assert_eq!(h.counts(), &[1, 3, 2, 1]);
+        assert_eq!(h.total(), 7);
+        let rows = h.rows();
+        assert_eq!(rows.len(), 4);
+        assert!((rows[1].2 - 3.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_uniform_edges() {
+        let h = Histogram::uniform(0.0, 100.0, 4);
+        assert_eq!(h.counts().len(), 6); // 4 bins + under + over
+    }
+
+    #[test]
+    fn rate_window_evicts() {
+        let mut w = RateWindow::new(1_000_000); // 1 s
+        for t in 0..10 {
+            w.record(t * 100_000); // 10 events over 1 s
+        }
+        let r = w.rate(1_000_000);
+        assert!((r - 9.0).abs() <= 1.0, "rate {r}");
+        // 5 s later everything evicted.
+        assert_eq!(w.rate(6_000_000), 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Arrival processes: when requests hit the gateway.
+//!
+//! Open-loop Poisson arrivals (the standard serving-evaluation model, and
+//! what "client RPS" means in Fig. 5) plus a bursty variant (Poisson bursts
+//! of gamma-ish size) for stress tests.
+
+use crate::util::rng::Pcg;
+use crate::Micros;
+
+/// A source of inter-arrival gaps.
+pub trait ArrivalProcess {
+    /// Next arrival timestamp strictly after `now`.
+    fn next_after(&mut self, now: Micros) -> Micros;
+}
+
+/// Open-loop Poisson arrivals at `rps` requests/second.
+#[derive(Debug, Clone)]
+pub struct Poisson {
+    rps: f64,
+    rng: Pcg,
+}
+
+impl Poisson {
+    pub fn new(rps: f64, rng: Pcg) -> Poisson {
+        assert!(rps > 0.0);
+        Poisson { rps, rng }
+    }
+}
+
+impl ArrivalProcess for Poisson {
+    fn next_after(&mut self, now: Micros) -> Micros {
+        let gap_s = self.rng.exponential(self.rps);
+        now + (gap_s * 1e6).max(1.0) as Micros
+    }
+}
+
+/// Bursty arrivals: Poisson burst epochs at `burst_rps` bursts/second, each
+/// burst delivering 1..=`max_burst` requests back-to-back (1 µs apart).
+#[derive(Debug, Clone)]
+pub struct Bursty {
+    burst_rps: f64,
+    max_burst: u32,
+    rng: Pcg,
+    pending: u32,
+}
+
+impl Bursty {
+    pub fn new(burst_rps: f64, max_burst: u32, rng: Pcg) -> Bursty {
+        assert!(burst_rps > 0.0 && max_burst >= 1);
+        Bursty { burst_rps, max_burst, rng, pending: 0 }
+    }
+
+    /// Effective mean request rate (requests/second).
+    pub fn mean_rps(&self) -> f64 {
+        self.burst_rps * (1.0 + self.max_burst as f64) / 2.0
+    }
+}
+
+impl ArrivalProcess for Bursty {
+    fn next_after(&mut self, now: Micros) -> Micros {
+        if self.pending > 0 {
+            self.pending -= 1;
+            return now + 1;
+        }
+        self.pending = self.rng.range(1, self.max_burst as usize) as u32 - 1;
+        let gap_s = self.rng.exponential(self.burst_rps);
+        now + (gap_s * 1e6).max(1.0) as Micros
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_converges() {
+        let mut p = Poisson::new(20.0, Pcg::seeded(1));
+        let mut t = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            t = p.next_after(t);
+        }
+        let rate = n as f64 / (t as f64 / 1e6);
+        assert!((rate - 20.0).abs() < 1.0, "rate {rate}");
+    }
+
+    #[test]
+    fn poisson_strictly_increasing() {
+        let mut p = Poisson::new(1000.0, Pcg::seeded(2));
+        let mut t = 0;
+        for _ in 0..1000 {
+            let next = p.next_after(t);
+            assert!(next > t);
+            t = next;
+        }
+    }
+
+    #[test]
+    fn bursty_mean_rate() {
+        let mut b = Bursty::new(5.0, 8, Pcg::seeded(3));
+        let expect = b.mean_rps();
+        let mut t = 0;
+        let n = 30_000;
+        for _ in 0..n {
+            t = b.next_after(t);
+        }
+        let rate = n as f64 / (t as f64 / 1e6);
+        assert!((rate - expect).abs() / expect < 0.1, "rate {rate} expect {expect}");
+    }
+
+    #[test]
+    fn bursty_produces_clusters() {
+        let mut b = Bursty::new(2.0, 10, Pcg::seeded(4));
+        let mut t = 0;
+        let mut tight_gaps = 0;
+        for _ in 0..1000 {
+            let next = b.next_after(t);
+            if next - t <= 1 {
+                tight_gaps += 1;
+            }
+            t = next;
+        }
+        assert!(tight_gaps > 200, "tight {tight_gaps}");
+    }
+}

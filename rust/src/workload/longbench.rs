@@ -1,0 +1,101 @@
+//! Synthetic LongBench length distribution.
+//!
+//! The paper (Fig. 2b) describes LongBench as a **long-tail** distribution
+//! of very long summarization prompts (median 41,417 tokens) which they
+//! truncate to the model context. We reproduce that pipeline: draw from a
+//! heavy-tailed log-normal whose median sits far above any realistic
+//! context window, then truncate to `max_seq` — so, exactly as in the
+//! paper, the bulk of LongBench requests arrive *at* the context limit and
+//! the rest fill the upper range. Outputs are short summaries
+//! (log-normal, mean ≈ 200).
+
+use super::LengthSampler;
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct LongBench {
+    max_seq: u32,
+    mu_in: f64,
+    sigma_in: f64,
+    mu_out: f64,
+    sigma_out: f64,
+}
+
+impl LongBench {
+    pub fn new(max_seq: u32) -> LongBench {
+        LongBench {
+            max_seq,
+            // Median exp(mu) = 41,417 (the paper's reported median);
+            // sigma 1.4 gives the long tail in both directions.
+            mu_in: 41_417f64.ln(),
+            sigma_in: 1.4,
+            mu_out: 200f64.ln() - 0.6f64 * 0.6 / 2.0,
+            sigma_out: 0.6,
+        }
+    }
+}
+
+impl LengthSampler for LongBench {
+    fn sample(&self, rng: &mut Pcg) -> (u32, u32) {
+        let raw = rng.lognormal(self.mu_in, self.sigma_in).round().max(1.0);
+        // Truncate to the context limit minus a generation reserve, as a
+        // serving stack must (otherwise truncated prompts leave no room
+        // for the summary).
+        let reserve = (self.max_seq / 8).clamp(1, 512);
+        let cap = self.max_seq.saturating_sub(reserve).max(1);
+        let input = (raw.min(u32::MAX as f64) as u32).min(cap);
+        let output = rng.lognormal(self.mu_out, self.sigma_out).round().max(1.0);
+        let output = (output as u32).min(self.max_seq.saturating_sub(input)).max(1);
+        (input, output)
+    }
+
+    fn name(&self) -> &'static str {
+        "longbench"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominated_by_truncation() {
+        // With a 4096 context, most raw draws exceed it → arrive truncated,
+        // exactly the paper's "for ultra-long sequences, we truncate" path.
+        let s = LongBench::new(4096);
+        let mut rng = Pcg::seeded(1);
+        let n = 20_000;
+        // Cap = 4096 − reserve(512) = 3584.
+        let at_cap = (0..n)
+            .filter(|_| s.sample(&mut rng).0 == 3584)
+            .count();
+        assert!(at_cap as f64 / n as f64 > 0.8, "at_cap {at_cap}");
+    }
+
+    #[test]
+    fn long_tail_below_cap() {
+        // Raise the cap: the untruncated draws show the heavy tail.
+        let s = LongBench::new(200_000);
+        let mut rng = Pcg::seeded(2);
+        let mut xs: Vec<f64> = (0..20_000)
+            .map(|_| s.sample(&mut rng).0 as f64)
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[xs.len() / 2];
+        assert!((median - 41_417.0).abs() / 41_417.0 < 0.1, "median {median}");
+        let p95 = xs[(xs.len() as f64 * 0.95) as usize];
+        assert!(p95 > 3.0 * median, "p95 {p95} median {median}");
+    }
+
+    #[test]
+    fn outputs_are_short_summaries() {
+        let s = LongBench::new(8192);
+        let mut rng = Pcg::seeded(3);
+        let n = 10_000;
+        let mean_out = (0..n)
+            .map(|_| s.sample(&mut rng).1 as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!(mean_out > 100.0 && mean_out < 300.0, "mean_out {mean_out}");
+    }
+}

@@ -1,0 +1,96 @@
+//! Mixed workload: the paper's hybrid of Alpaca and LongBench samples
+//! "following a long-tail distribution pattern" (Fig. 3 caption). We draw
+//! each request from Alpaca with probability `p_short` (default 0.7) and
+//! LongBench otherwise — short requests dominate by count, long requests
+//! dominate by tokens, which is exactly the heterogeneity that breaks
+//! naive batching.
+
+use super::{alpaca::Alpaca, longbench::LongBench, LengthSampler};
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct Mixed {
+    short: Alpaca,
+    long: LongBench,
+    p_short: f64,
+}
+
+impl Mixed {
+    pub fn new(max_seq: u32) -> Mixed {
+        Mixed::with_ratio(max_seq, 0.7)
+    }
+
+    pub fn with_ratio(max_seq: u32, p_short: f64) -> Mixed {
+        Mixed {
+            short: Alpaca::new(max_seq),
+            long: LongBench::new(max_seq),
+            p_short,
+        }
+    }
+}
+
+impl LengthSampler for Mixed {
+    fn sample(&self, rng: &mut Pcg) -> (u32, u32) {
+        if rng.chance(self.p_short) {
+            self.short.sample(rng)
+        } else {
+            self.long.sample(rng)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mixed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bimodal_shape() {
+        let s = Mixed::new(4096);
+        let mut rng = Pcg::seeded(1);
+        let n = 20_000;
+        let mut short = 0usize;
+        let mut long = 0usize;
+        for _ in 0..n {
+            let (i, _) = s.sample(&mut rng);
+            if i < 256 {
+                short += 1;
+            } else if i >= 1024 {
+                long += 1;
+            }
+        }
+        let fs = short as f64 / n as f64;
+        let fl = long as f64 / n as f64;
+        assert!(fs > 0.55 && fs < 0.8, "short frac {fs}");
+        assert!(fl > 0.2 && fl < 0.4, "long frac {fl}");
+    }
+
+    #[test]
+    fn long_requests_dominate_tokens() {
+        let s = Mixed::new(4096);
+        let mut rng = Pcg::seeded(2);
+        let mut short_toks = 0u64;
+        let mut long_toks = 0u64;
+        for _ in 0..20_000 {
+            let (i, _) = s.sample(&mut rng);
+            if i < 256 {
+                short_toks += i as u64;
+            } else {
+                long_toks += i as u64;
+            }
+        }
+        assert!(long_toks > 5 * short_toks);
+    }
+
+    #[test]
+    fn ratio_parameter_respected() {
+        let s = Mixed::with_ratio(4096, 0.95);
+        let mut rng = Pcg::seeded(3);
+        let n = 10_000;
+        let short = (0..n).filter(|_| s.sample(&mut rng).0 < 512).count();
+        assert!(short as f64 / n as f64 > 0.9);
+    }
+}

@@ -1,0 +1,65 @@
+//! Workload generation: requests, length distributions, arrival processes.
+//!
+//! The paper evaluates on Stanford Alpaca (short prompts, mean ≈ 83 tokens)
+//! and LongBench (long-tail summarization prompts, truncated to the model
+//! context), plus a Mixed hybrid. Neither dataset ships in this offline
+//! image, so [`alpaca`], [`longbench`], and [`mixed`] generate synthetic
+//! length distributions fitted to the statistics the paper reports
+//! (DESIGN.md §2); all scheduling behaviour depends only on these lengths.
+
+pub mod request;
+pub mod alpaca;
+pub mod longbench;
+pub mod mixed;
+pub mod arrival;
+pub mod trace;
+
+pub use request::{Request, RequestClass, RequestId};
+pub use arrival::ArrivalProcess;
+pub use trace::Trace;
+
+use crate::util::rng::Pcg;
+
+/// A source of (input_len, output_len) pairs.
+pub trait LengthSampler {
+    /// Draw one request's prompt and generation lengths.
+    fn sample(&self, rng: &mut Pcg) -> (u32, u32);
+
+    /// Human-readable dataset name.
+    fn name(&self) -> &'static str;
+}
+
+/// Which synthetic dataset to draw from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    Alpaca,
+    LongBench,
+    Mixed,
+}
+
+impl Dataset {
+    pub fn parse(s: &str) -> Dataset {
+        match s.to_ascii_lowercase().as_str() {
+            "longbench" | "long" => Dataset::LongBench,
+            "mixed" => Dataset::Mixed,
+            _ => Dataset::Alpaca,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Alpaca => "alpaca",
+            Dataset::LongBench => "longbench",
+            Dataset::Mixed => "mixed",
+        }
+    }
+
+    /// Build the sampler, truncating to the model context `max_seq`.
+    pub fn sampler(&self, max_seq: u32) -> Box<dyn LengthSampler + Send> {
+        match self {
+            Dataset::Alpaca => Box::new(alpaca::Alpaca::new(max_seq)),
+            Dataset::LongBench => Box::new(longbench::LongBench::new(max_seq)),
+            Dataset::Mixed => Box::new(mixed::Mixed::new(max_seq)),
+        }
+    }
+}

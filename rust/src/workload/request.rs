@@ -1,0 +1,143 @@
+//! The request: the unit every layer of the system schedules.
+
+use crate::Micros;
+
+/// Unique, monotonically assigned request id.
+pub type RequestId = u64;
+
+/// Online (latency-SLO-bound) vs. offline (throughput-oriented) class,
+/// mirroring the paper's application-layer task split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestClass {
+    Online,
+    Offline,
+}
+
+/// One inference request flowing through the system.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: RequestClass,
+    /// Prompt length in tokens (the bucketing key).
+    pub input_len: u32,
+    /// Target generation length (simulator: known; real engine: cap).
+    pub output_len: u32,
+    /// Arrival time at the gateway.
+    pub arrival: Micros,
+    /// Optional prompt token ids (real-engine runs only; simulator leaves
+    /// this empty to keep traces light).
+    pub tokens: Vec<u32>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        class: RequestClass,
+        input_len: u32,
+        output_len: u32,
+        arrival: Micros,
+    ) -> Request {
+        Request { id, class, input_len, output_len, arrival, tokens: Vec::new() }
+    }
+
+    /// Total KV-cache tokens this request will eventually hold.
+    pub fn total_len(&self) -> u32 {
+        self.input_len + self.output_len
+    }
+
+    /// How long the request has been waiting at `now`.
+    pub fn waiting(&self, now: Micros) -> Micros {
+        now.saturating_sub(self.arrival)
+    }
+}
+
+/// Completion record produced by the serving loop; the metrics layer
+/// derives every figure from a vector of these.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub class: RequestClass,
+    pub input_len: u32,
+    pub output_len: u32,
+    pub arrival: Micros,
+    /// When prefill produced the first token.
+    pub first_token: Micros,
+    /// When the last token was produced.
+    pub finished: Micros,
+    /// Padded sequence length the prefill batch used (for waste accounting).
+    pub padded_len: u32,
+}
+
+impl Completion {
+    pub fn ttft(&self) -> Micros {
+        self.first_token.saturating_sub(self.arrival)
+    }
+
+    pub fn e2e(&self) -> Micros {
+        self.finished.saturating_sub(self.arrival)
+    }
+
+    /// Mean time between output tokens (µs/token) after the first.
+    pub fn tbt(&self) -> f64 {
+        if self.output_len <= 1 {
+            return 0.0;
+        }
+        self.finished.saturating_sub(self.first_token) as f64
+            / (self.output_len - 1) as f64
+    }
+
+    /// Eq. 2 per-request view: wasted fraction of the padded prefill slot.
+    pub fn waste_ratio(&self) -> f64 {
+        if self.padded_len == 0 {
+            return 0.0;
+        }
+        (self.padded_len - self.input_len.min(self.padded_len)) as f64
+            / self.padded_len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waiting_saturates() {
+        let r = Request::new(1, RequestClass::Online, 10, 5, 1000);
+        assert_eq!(r.waiting(1500), 500);
+        assert_eq!(r.waiting(500), 0);
+    }
+
+    #[test]
+    fn completion_derived_metrics() {
+        let c = Completion {
+            id: 1,
+            class: RequestClass::Online,
+            input_len: 100,
+            output_len: 11,
+            arrival: 0,
+            first_token: 250_000,
+            finished: 1_250_000,
+            padded_len: 128,
+        };
+        assert_eq!(c.ttft(), 250_000);
+        assert_eq!(c.e2e(), 1_250_000);
+        assert!((c.tbt() - 100_000.0).abs() < 1e-9);
+        assert!((c.waste_ratio() - 28.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_tbt_zero() {
+        let c = Completion {
+            id: 1,
+            class: RequestClass::Offline,
+            input_len: 8,
+            output_len: 1,
+            arrival: 0,
+            first_token: 10,
+            finished: 10,
+            padded_len: 8,
+        };
+        assert_eq!(c.tbt(), 0.0);
+        assert_eq!(c.waste_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Replayable traces: a fully materialized list of requests with arrival
+//! times. Every experiment generates its trace up front (seeded), so all
+//! three systems replay *identical* arrivals — the comparisons in the
+//! Fig. 5 benches are paired, not merely distributionally matched.
+
+use super::{ArrivalProcess, Dataset, Request, RequestClass};
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use crate::workload::arrival::Poisson;
+use crate::Micros;
+
+/// A generated or loaded request trace, sorted by arrival time.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Generate `n` requests from `dataset` with Poisson arrivals at `rps`.
+    pub fn generate(
+        dataset: Dataset,
+        n: usize,
+        rps: f64,
+        class: RequestClass,
+        max_seq: u32,
+        seed: u64,
+    ) -> Trace {
+        let mut len_rng = Pcg::new(seed, 1);
+        let mut arr = Poisson::new(rps, Pcg::new(seed, 2));
+        let sampler = dataset.sampler(max_seq);
+        let mut t: Micros = 0;
+        let mut requests = Vec::with_capacity(n);
+        for id in 0..n {
+            t = arr.next_after(t);
+            let (input, output) = sampler.sample(&mut len_rng);
+            requests.push(Request::new(id as u64, class, input, output, t));
+        }
+        Trace { requests }
+    }
+
+    /// Generate a batch-arrival trace: all `n` requests arrive at t=0
+    /// (the offline, Fig. 5a/5b setting).
+    pub fn batch(
+        dataset: Dataset,
+        n: usize,
+        class: RequestClass,
+        max_seq: u32,
+        seed: u64,
+    ) -> Trace {
+        let mut len_rng = Pcg::new(seed, 1);
+        let sampler = dataset.sampler(max_seq);
+        let requests = (0..n)
+            .map(|id| {
+                let (input, output) = sampler.sample(&mut len_rng);
+                Request::new(id as u64, class, input, output, 0)
+            })
+            .collect();
+        Trace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Duration between first and last arrival.
+    pub fn span(&self) -> Micros {
+        match (self.requests.first(), self.requests.last()) {
+            (Some(f), Some(l)) => l.arrival - f.arrival,
+            _ => 0,
+        }
+    }
+
+    /// Total prompt + generation tokens.
+    pub fn total_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.total_len() as u64).sum()
+    }
+
+    /// Serialize for replay / the TCP client.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.requests
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("id", Json::from(r.id)),
+                        ("class", Json::from(match r.class {
+                            RequestClass::Online => "online",
+                            RequestClass::Offline => "offline",
+                        })),
+                        ("input_len", Json::from(r.input_len as u64)),
+                        ("output_len", Json::from(r.output_len as u64)),
+                        ("arrival", Json::from(r.arrival)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse a serialized trace.
+    pub fn from_json(j: &Json) -> anyhow::Result<Trace> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("trace: not an array"))?;
+        let mut requests = Vec::with_capacity(arr.len());
+        for item in arr {
+            let class = match item.get("class").as_str() {
+                Some("offline") => RequestClass::Offline,
+                _ => RequestClass::Online,
+            };
+            requests.push(Request::new(
+                item.get("id").as_u64().unwrap_or(requests.len() as u64),
+                class,
+                item.get("input_len").as_u64().unwrap_or(1) as u32,
+                item.get("output_len").as_u64().unwrap_or(1) as u32,
+                item.get("arrival").as_u64().unwrap_or(0),
+            ));
+        }
+        requests.sort_by_key(|r| r.arrival);
+        Ok(Trace { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let a = Trace::generate(Dataset::Alpaca, 100, 8.0, RequestClass::Online, 4096, 7);
+        let b = Trace::generate(Dataset::Alpaca, 100, 8.0, RequestClass::Online, 4096, 7);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.input_len, y.input_len);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = Trace::generate(Dataset::Alpaca, 50, 8.0, RequestClass::Online, 4096, 1);
+        let b = Trace::generate(Dataset::Alpaca, 50, 8.0, RequestClass::Online, 4096, 2);
+        let same = a
+            .requests
+            .iter()
+            .zip(&b.requests)
+            .filter(|(x, y)| x.input_len == y.input_len)
+            .count();
+        assert!(same < 10);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_rate_close() {
+        let t = Trace::generate(Dataset::Mixed, 2000, 16.0, RequestClass::Online, 4096, 3);
+        assert!(t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let rate = t.len() as f64 / (t.span() as f64 / 1e6);
+        assert!((rate - 16.0).abs() < 2.0, "rate {rate}");
+    }
+
+    #[test]
+    fn batch_trace_all_at_zero() {
+        let t = Trace::batch(Dataset::Alpaca, 64, RequestClass::Offline, 4096, 5);
+        assert!(t.requests.iter().all(|r| r.arrival == 0));
+        assert_eq!(t.len(), 64);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let t = Trace::generate(Dataset::LongBench, 20, 4.0, RequestClass::Offline, 4096, 9);
+        let j = t.to_json().to_string();
+        let t2 = Trace::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(t.len(), t2.len());
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.input_len, b.input_len);
+            assert_eq!(a.output_len, b.output_len);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.class, b.class);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Integration tests: full system over the simulated cluster, paired
+//! system comparisons, and cross-module invariants.
+
+use bucketserve::baselines::System;
+use bucketserve::config::{Policy, SystemConfig};
+use bucketserve::coordinator::RunReport;
+use bucketserve::util::prop;
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn run(system: System, cfg: &SystemConfig, trace: &Trace) -> RunReport {
+    system.run_sim(cfg, trace)
+}
+
+#[test]
+fn all_systems_complete_all_requests_on_all_datasets() {
+    let cfg = SystemConfig::default();
+    for dataset in [Dataset::Alpaca, Dataset::LongBench, Dataset::Mixed] {
+        let trace = Trace::generate(
+            dataset, 80, 8.0, RequestClass::Online, cfg.model.max_seq, 11,
+        );
+        for system in System::ALL {
+            let r = run(system, &cfg, &trace);
+            assert_eq!(
+                r.completions.len(),
+                trace.len(),
+                "{} lost requests on {}",
+                system.name(),
+                dataset.name()
+            );
+            let mut ids: Vec<_> = r.completions.iter().map(|c| c.id).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), trace.len(), "{} duplicated", system.name());
+        }
+    }
+}
+
+#[test]
+fn headline_throughput_ordering_holds() {
+    // Fig. 5a direction: BucketServe > DistServe > UELLM on heterogeneous
+    // offline load.
+    let cfg = SystemConfig::default();
+    let trace = Trace::batch(Dataset::Mixed, 256, RequestClass::Offline, 4096, 12);
+    let tb = run(System::BucketServe, &cfg, &trace).throughput_tps();
+    let td = run(System::DistServe, &cfg, &trace).throughput_tps();
+    let tu = run(System::Uellm, &cfg, &trace).throughput_tps();
+    assert!(tb > td, "BucketServe {tb} <= DistServe {td}");
+    assert!(td > tu, "DistServe {td} <= UELLM {tu}");
+    // The paper's headline factor vs UELLM is 3.58×. Our UELLM-like
+    // baseline shares the memory-safe admission (only the paper's
+    // qualitative deficiencies are modelled), so it is conservatively
+    // strong; require a clear directional win (see EXPERIMENTS.md).
+    assert!(tb / tu > 1.2, "BucketServe/UELLM only {:.2}×", tb / tu);
+}
+
+#[test]
+fn slo_capacity_ordering_holds_on_mixed() {
+    // Fig. 5d direction: at high load BucketServe retains more SLO
+    // attainment than DistServe on heterogeneous traffic.
+    let cfg = SystemConfig::default();
+    let trace = Trace::generate(
+        Dataset::Mixed, 250, 24.0, RequestClass::Online, cfg.model.max_seq, 13,
+    );
+    let ab = run(System::BucketServe, &cfg, &trace)
+        .slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us);
+    let ad = run(System::DistServe, &cfg, &trace)
+        .slo_attainment(cfg.slo.ttft_us, cfg.slo.tbt_us);
+    assert!(
+        ab >= ad,
+        "BucketServe attainment {ab} < DistServe {ad} at high load"
+    );
+}
+
+#[test]
+fn gpu_util_ordering_holds() {
+    let cfg = SystemConfig::default();
+    let trace = Trace::batch(Dataset::Mixed, 192, RequestClass::Offline, 4096, 14);
+    let ub = run(System::BucketServe, &cfg, &trace).gpu_util();
+    let uu = run(System::Uellm, &cfg, &trace).gpu_util();
+    assert!(ub > uu, "BucketServe util {ub} <= UELLM {uu}");
+}
+
+#[test]
+fn bucketing_overhead_under_one_percent_everywhere() {
+    let cfg = SystemConfig::default();
+    for rps in [8.0, 32.0] {
+        let trace = Trace::generate(
+            Dataset::Mixed, 150, rps, RequestClass::Online, cfg.model.max_seq, 15,
+        );
+        let r = run(System::BucketServe, &cfg, &trace);
+        let overhead_us = r.bucket_overhead_ns as f64 / 1e3;
+        assert!(
+            overhead_us < 0.01 * r.makespan_us as f64,
+            "overhead {overhead_us}µs at rps {rps}"
+        );
+    }
+}
+
+#[test]
+fn policies_trade_latency_for_throughput() {
+    let base = SystemConfig::default();
+    let trace = Trace::batch(Dataset::Mixed, 200, RequestClass::Offline, 4096, 16);
+    let mut results = Vec::new();
+    for policy in [Policy::Sjf, Policy::Ljf] {
+        let mut cfg = base.clone();
+        cfg.scheduler.policy = policy;
+        let r = run(System::BucketServe, &cfg, &trace);
+        let mean_e2e = r.mean_e2e_us();
+        results.push((policy, r.throughput_tps(), mean_e2e));
+    }
+    // SJF must deliver lower mean E2E than LJF (short jobs first).
+    assert!(
+        results[0].2 < results[1].2,
+        "SJF mean E2E {} >= LJF {}",
+        results[0].2,
+        results[1].2
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = SystemConfig::default();
+    let t1 = Trace::generate(Dataset::Mixed, 60, 8.0, RequestClass::Online, 4096, 17);
+    let t2 = Trace::generate(Dataset::Mixed, 60, 8.0, RequestClass::Online, 4096, 17);
+    let r1 = run(System::BucketServe, &cfg, &t1);
+    let r2 = run(System::BucketServe, &cfg, &t2);
+    assert_eq!(r1.completions.len(), r2.completions.len());
+    assert_eq!(r1.makespan_us, r2.makespan_us);
+    assert_eq!(r1.prefill_batches, r2.prefill_batches);
+    assert_eq!(r1.decode_iters, r2.decode_iters);
+}
+
+#[test]
+fn prop_no_request_lost_under_random_conditions() {
+    prop::check("serving conserves requests", 25, |g| {
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.n_prefill = g.usize(1, 3) as u32;
+        cfg.fleet.n_decode = g.usize(1, 3) as u32;
+        cfg.scheduler.theta = g.f64_in(0.2, 0.9);
+        let n = g.usize(5, 60);
+        let rps = g.f64_in(1.0, 40.0);
+        let dataset = *g.pick(&[Dataset::Alpaca, Dataset::LongBench, Dataset::Mixed]);
+        let seed = g.u64(0, 1 << 30);
+        let trace = Trace::generate(
+            dataset, n, rps, RequestClass::Online, cfg.model.max_seq, seed,
+        );
+        let sys = *g.pick(&[System::BucketServe, System::DistServe, System::Uellm]);
+        let r = sys.run_sim(&cfg, &trace);
+        assert_eq!(r.completions.len(), n, "{} lost requests", sys.name());
+        for c in &r.completions {
+            assert!(c.first_token >= c.arrival);
+            assert!(c.finished >= c.first_token);
+        }
+    });
+}
+
+#[test]
+fn prop_completion_token_conservation() {
+    prop::check("token counts preserved", 25, |g| {
+        let cfg = SystemConfig::default();
+        let n = g.usize(5, 50);
+        let seed = g.u64(0, 1 << 30);
+        let trace =
+            Trace::batch(Dataset::Mixed, n, RequestClass::Offline, 4096, seed);
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        let in_tokens: u64 =
+            trace.requests.iter().map(|q| q.total_len() as u64).sum();
+        let out_tokens: u64 = r
+            .completions
+            .iter()
+            .map(|c| (c.input_len + c.output_len) as u64)
+            .sum();
+        assert_eq!(in_tokens, out_tokens);
+    });
+}

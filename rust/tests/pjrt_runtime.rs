@@ -1,0 +1,152 @@
+//! Runtime integration: real PJRT execution of the AOT artifacts.
+//!
+//! Gated on `artifacts/manifest.json` existing (run `make artifacts`);
+//! each test exercises the full runtime path: HLO text → compile →
+//! execute → per-request KV state → continuous decode.
+
+use bucketserve::cluster::{
+    DecodeBatch, DecodeSeq, Engine, PrefillBatch, PrefillItem,
+};
+use bucketserve::config::SystemConfig;
+use bucketserve::coordinator::BucketServe;
+use bucketserve::runtime::{artifacts_available, PjrtEngine};
+use bucketserve::workload::{Request, RequestClass, Trace};
+
+fn engine() -> Option<PjrtEngine> {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::load("artifacts").expect("engine load"))
+}
+
+#[test]
+fn prefill_then_decode_generates_tokens() {
+    let Some(mut e) = engine() else { return };
+    let batch = PrefillBatch {
+        items: vec![
+            PrefillItem { id: 1, len: 12, tokens: vec![] },
+            PrefillItem { id: 2, len: 30, tokens: vec![] },
+        ],
+        padded_len: 32,
+    };
+    let dur = e.prefill(&batch).unwrap();
+    assert!(dur > 0, "prefill reports wall time");
+    assert_eq!(e.generated(1).unwrap().len(), 1, "first token from prefill");
+
+    for step in 0..3 {
+        let d = DecodeBatch {
+            seqs: vec![
+                DecodeSeq { id: 1, ctx_len: 12 + 1 + step },
+                DecodeSeq { id: 2, ctx_len: 30 + 1 + step },
+            ],
+        };
+        e.decode_step(&d).unwrap();
+    }
+    let gen1 = e.generated(1).unwrap().to_vec();
+    let gen2 = e.generated(2).unwrap().to_vec();
+    assert_eq!(gen1.len(), 4);
+    assert_eq!(gen2.len(), 4);
+    let vocab = e.runtime().manifest.model.vocab as i32;
+    assert!(gen1.iter().all(|&t| (0..vocab).contains(&t)));
+    e.release(1);
+    assert!(e.generated(1).is_none());
+}
+
+#[test]
+fn generation_is_deterministic_across_engines() {
+    let Some(mut e1) = engine() else { return };
+    let Some(mut e2) = engine() else { return };
+    let batch = PrefillBatch {
+        items: vec![PrefillItem { id: 7, len: 20, tokens: vec![] }],
+        padded_len: 32,
+    };
+    e1.prefill(&batch).unwrap();
+    e2.prefill(&batch).unwrap();
+    for step in 0..4 {
+        let d = DecodeBatch {
+            seqs: vec![DecodeSeq { id: 7, ctx_len: 21 + step }],
+        };
+        e1.decode_step(&d).unwrap();
+        e2.decode_step(&d).unwrap();
+    }
+    assert_eq!(e1.generated(7).unwrap(), e2.generated(7).unwrap());
+}
+
+#[test]
+fn batch_composition_does_not_change_tokens() {
+    // Continuous batching correctness: a sequence decoded alone must
+    // produce the same tokens as decoded inside a batch with others.
+    let Some(mut solo) = engine() else { return };
+    let Some(mut multi) = engine() else { return };
+
+    let item = |id| PrefillItem { id, len: 16, tokens: vec![] };
+    solo.prefill(&PrefillBatch { items: vec![item(1)], padded_len: 32 })
+        .unwrap();
+    multi
+        .prefill(&PrefillBatch {
+            items: vec![item(1), item(2), item(3)],
+            padded_len: 32,
+        })
+        .unwrap();
+
+    for step in 0..3 {
+        solo.decode_step(&DecodeBatch {
+            seqs: vec![DecodeSeq { id: 1, ctx_len: 17 + step }],
+        })
+        .unwrap();
+        multi
+            .decode_step(&DecodeBatch {
+                seqs: vec![
+                    DecodeSeq { id: 1, ctx_len: 17 + step },
+                    DecodeSeq { id: 2, ctx_len: 17 + step },
+                    DecodeSeq { id: 3, ctx_len: 17 + step },
+                ],
+            })
+            .unwrap();
+    }
+    assert_eq!(
+        solo.generated(1).unwrap(),
+        multi.generated(1).unwrap(),
+        "request 1's stream must not depend on batch-mates"
+    );
+}
+
+#[test]
+fn full_bucketserve_pipeline_on_real_engine() {
+    let Some(mut e) = engine() else { return };
+    let cfg = SystemConfig::tiny_pjrt();
+    let requests: Vec<Request> = (0..6)
+        .map(|i| {
+            Request::new(i, RequestClass::Online, 10 + (i as u32) * 17 % 120, 3, 0)
+        })
+        .collect();
+    let trace = Trace { requests };
+    let report = BucketServe::new(cfg).run(&trace, &mut e);
+    assert_eq!(report.completions.len(), 6);
+    for c in &report.completions {
+        assert!(c.finished >= c.first_token);
+        assert_eq!(c.output_len, 3);
+    }
+    assert!(report.throughput_tps() > 0.0);
+}
+
+#[test]
+fn oversized_batch_is_chunked_across_artifacts() {
+    let Some(mut e) = engine() else { return };
+    // 10 items > max compiled batch (8) → engine must chunk transparently.
+    let items: Vec<PrefillItem> = (0..10)
+        .map(|i| PrefillItem { id: 100 + i, len: 8 + i as u32, tokens: vec![] })
+        .collect();
+    e.prefill(&PrefillBatch { items, padded_len: 32 }).unwrap();
+    for i in 0..10 {
+        assert!(e.generated(100 + i).is_some(), "request {i} prefilled");
+    }
+    let seqs: Vec<DecodeSeq> = (0..10)
+        .map(|i| DecodeSeq { id: 100 + i, ctx_len: 9 + i as u32 })
+        .collect();
+    e.decode_step(&DecodeBatch { seqs }).unwrap();
+    for i in 0..10 {
+        assert_eq!(e.generated(100 + i).unwrap().len(), 2);
+    }
+}
