@@ -81,7 +81,7 @@ fn main() {
         let batcher = DynamicBatcher::new(cfg.model.clone(), &cfg.scheduler);
         time_it("form_batch (512 queued)", || {
             let mut m = mgr0.clone();
-            batcher.form_batch(&mut m, 8192)
+            batcher.form_batch(&mut m, 0, 8192)
         })
         .print();
         // Isolate the clone cost to subtract mentally.
@@ -113,7 +113,7 @@ fn main() {
         let mgr0 = filled_manager(1024, false);
         time_it("form_batch SJF (1024 queued, 1 bucket)", || {
             let mut m = mgr0.clone();
-            batcher.form_batch(&mut m, 16_384)
+            batcher.form_batch(&mut m, 0, 16_384)
         })
         .print();
     }

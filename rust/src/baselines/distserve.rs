@@ -83,7 +83,7 @@ impl PrefillPlanner for FcfsPlanner {
         })
     }
 
-    fn force_pop(&mut self) -> Option<QueuedReq> {
+    fn force_pop(&mut self, _now: Micros) -> Option<QueuedReq> {
         self.queue.pop_front()
     }
 

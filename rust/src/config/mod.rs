@@ -163,6 +163,8 @@ pub struct SchedulerSpec {
     pub policy: Policy,
     /// Minimum bucket width; bisection stops below this.
     pub min_bucket_width: u32,
+    /// Global Monitor sliding-window length, µs (arrival-rate estimation).
+    pub monitor_window_us: u64,
 }
 
 impl Default for SchedulerSpec {
@@ -174,6 +176,36 @@ impl Default for SchedulerSpec {
             max_batch: 0,
             policy: Policy::Fcfs,
             min_bucket_width: 16,
+            monitor_window_us: 10_000_000,
+        }
+    }
+}
+
+/// Priority-aware scheduling knobs (paper §III's SLO-protection layer);
+/// consumed by [`crate::coordinator::priority::PriorityScorer`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrioritySpec {
+    /// Master switch; off = pure earliest-arrival (FCFS) drain order.
+    pub enabled: bool,
+    /// Base weight of the online (latency-SLO-bound) class.
+    pub online_weight: f64,
+    /// Base weight of the offline (throughput) class.
+    pub offline_weight: f64,
+    /// Starvation aging: score an offline request gains per queued second.
+    pub aging_rate: f64,
+    /// Fraction of the TTFT budget consumed beyond which an online request
+    /// becomes urgent and overrides offline aging entirely.
+    pub urgency_threshold: f64,
+}
+
+impl Default for PrioritySpec {
+    fn default() -> Self {
+        PrioritySpec {
+            enabled: true,
+            online_weight: 1.0,
+            offline_weight: 0.1,
+            aging_rate: 0.02,
+            urgency_threshold: 0.75,
         }
     }
 }
@@ -203,6 +235,7 @@ pub struct SystemConfig {
     pub fleet: FleetSpec,
     pub scheduler: SchedulerSpec,
     pub slo: SloSpec,
+    pub priority: PrioritySpec,
     pub seed: u64,
 }
 
@@ -214,6 +247,7 @@ impl Default for SystemConfig {
             fleet: FleetSpec::paper_node(),
             scheduler: SchedulerSpec::default(),
             slo: SloSpec::default(),
+            priority: PrioritySpec::default(),
             seed: 42,
         }
     }
@@ -281,6 +315,16 @@ impl SystemConfig {
             if let Some(v) = s.get("max_batch").as_u64() { d.max_batch = v as u32; }
             if let Some(v) = s.get("policy").as_str() { d.policy = Policy::parse(v); }
             if let Some(v) = s.get("min_bucket_width").as_u64() { d.min_bucket_width = v as u32; }
+            if let Some(v) = s.get("monitor_window_us").as_u64() { d.monitor_window_us = v; }
+        }
+        let p = j.get("priority");
+        if !p.is_null() {
+            let d = &mut c.priority;
+            if let Some(v) = p.get("enabled").as_bool() { d.enabled = v; }
+            if let Some(v) = p.get("online_weight").as_f64() { d.online_weight = v; }
+            if let Some(v) = p.get("offline_weight").as_f64() { d.offline_weight = v; }
+            if let Some(v) = p.get("aging_rate").as_f64() { d.aging_rate = v; }
+            if let Some(v) = p.get("urgency_threshold").as_f64() { d.urgency_threshold = v; }
         }
         let o = j.get("slo");
         if !o.is_null() {
@@ -300,7 +344,24 @@ impl SystemConfig {
                 "scheduler.l_max" => set_u32(&mut self.scheduler.l_max, v),
                 "scheduler.max_batch" => set_u32(&mut self.scheduler.max_batch, v),
                 "scheduler.min_bucket_width" => set_u32(&mut self.scheduler.min_bucket_width, v),
+                "scheduler.monitor_window_us" => {
+                    if let Ok(x) = v.parse() { self.scheduler.monitor_window_us = x; }
+                }
                 "scheduler.policy" => self.scheduler.policy = Policy::parse(v),
+                // Like set_f64/set_u32, unrecognized values are ignored
+                // rather than coerced (a typo must not silently disable
+                // the priority subsystem).
+                "priority.enabled" => match v.to_ascii_lowercase().as_str() {
+                    "true" | "1" | "yes" | "on" => self.priority.enabled = true,
+                    "false" | "0" | "no" | "off" => self.priority.enabled = false,
+                    _ => {}
+                },
+                "priority.online_weight" => set_f64(&mut self.priority.online_weight, v),
+                "priority.offline_weight" => set_f64(&mut self.priority.offline_weight, v),
+                "priority.aging_rate" => set_f64(&mut self.priority.aging_rate, v),
+                "priority.urgency_threshold" => {
+                    set_f64(&mut self.priority.urgency_threshold, v)
+                }
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
                 "slo.ttft_us" => { if let Ok(x) = v.parse() { self.slo.ttft_us = x; } }
@@ -342,6 +403,14 @@ impl SystemConfig {
                 ("max_batch", Json::from(self.scheduler.max_batch as u64)),
                 ("policy", Json::from(self.scheduler.policy.name())),
                 ("min_bucket_width", Json::from(self.scheduler.min_bucket_width as u64)),
+                ("monitor_window_us", Json::from(self.scheduler.monitor_window_us)),
+            ])),
+            ("priority", Json::obj(vec![
+                ("enabled", Json::from(self.priority.enabled)),
+                ("online_weight", Json::num(self.priority.online_weight)),
+                ("offline_weight", Json::num(self.priority.offline_weight)),
+                ("aging_rate", Json::num(self.priority.aging_rate)),
+                ("urgency_threshold", Json::num(self.priority.urgency_threshold)),
             ])),
             ("slo", Json::obj(vec![
                 ("ttft_us", Json::from(self.slo.ttft_us)),
@@ -420,5 +489,48 @@ mod tests {
     fn policy_parse() {
         assert_eq!(Policy::parse("SJF"), Policy::Sjf);
         assert_eq!(Policy::parse("weird"), Policy::Fcfs);
+    }
+
+    #[test]
+    fn priority_defaults_on_and_overridable() {
+        let c = SystemConfig::default();
+        assert!(c.priority.enabled, "priority-aware scheduling is the default");
+        assert!(c.priority.online_weight > c.priority.offline_weight);
+        assert_eq!(c.scheduler.monitor_window_us, 10_000_000);
+
+        let args = Args::parse(
+            ["--priority.enabled", "false", "--priority.aging_rate", "0.5",
+             "--scheduler.monitor_window_us", "2000000"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(!c.priority.enabled);
+        assert_eq!(c.priority.aging_rate, 0.5);
+        assert_eq!(c.scheduler.monitor_window_us, 2_000_000);
+
+        // A typo'd boolean must not silently flip the switch.
+        let args = Args::parse(
+            ["--priority.enabled", "ture"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(c.priority.enabled, "unrecognized value keeps the default");
+    }
+
+    #[test]
+    fn priority_json_block_parses() {
+        let j = Json::parse(
+            r#"{"priority":{"enabled":false,"urgency_threshold":0.9},
+                "scheduler":{"monitor_window_us":5000000}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert!(!c.priority.enabled);
+        assert_eq!(c.priority.urgency_threshold, 0.9);
+        // Untouched fields keep defaults.
+        assert_eq!(c.priority.online_weight, 1.0);
+        assert_eq!(c.scheduler.monitor_window_us, 5_000_000);
     }
 }

@@ -16,6 +16,7 @@
 //! for prefill can always grow its KV to completion within M_safe.
 
 use super::bucket::{BucketManager, QueuedReq};
+use super::priority::PriorityScorer;
 use crate::cluster::{PrefillBatch, PrefillItem};
 use crate::config::{ModelSpec, Policy, SchedulerSpec};
 use crate::Micros;
@@ -90,6 +91,7 @@ pub struct DynamicBatcher {
     mem: KvMemoryModel,
     policy: Policy,
     max_batch: usize,
+    priority: Option<PriorityScorer>,
 }
 
 impl DynamicBatcher {
@@ -102,17 +104,43 @@ impl DynamicBatcher {
             } else {
                 sched.max_batch as usize
             },
+            priority: None,
         }
+    }
+
+    /// Attach the SLO-urgency scorer: bucket selection and intra-bucket
+    /// drain then follow priority scores instead of pure earliest arrival.
+    /// Applies to the FCFS policy only — the SJF/LJF offline orientations
+    /// keep their length ordering.
+    pub fn with_priority(mut self, scorer: PriorityScorer) -> DynamicBatcher {
+        self.priority = Some(scorer);
+        self
     }
 
     pub fn memory_model(&self) -> &KvMemoryModel {
         &self.mem
     }
 
-    /// Pick the next bucket to serve: online buckets go earliest-arrival
-    /// first (SLO protection); offline selection follows the configured
-    /// SJF/LJF orientation.
-    fn pick_bucket(&self, mgr: &BucketManager) -> Option<usize> {
+    /// The scorer, when it governs drain order under the current policy.
+    /// `pub(crate)` so the planner's force-pop shares this exact gate
+    /// instead of duplicating it.
+    pub(crate) fn scorer(&self) -> Option<&PriorityScorer> {
+        match (&self.priority, self.policy) {
+            (Some(s), Policy::Fcfs) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Pick the next bucket to serve. Priority mode picks the bucket
+    /// holding the highest-ranked request under
+    /// [`PriorityScorer::compare`] (first bucket wins ties); for a
+    /// single-class queue that degenerates to the legacy earliest-arrival
+    /// choice. Otherwise: earliest arrival for FCFS (SLO protection),
+    /// shortest/longest bucket for offline SJF/LJF.
+    fn pick_bucket(&self, mgr: &BucketManager, now: Micros) -> Option<usize> {
+        if let Some(sc) = self.scorer() {
+            return sc.best_position(mgr.buckets(), now).map(|(bi, _)| bi);
+        }
         let non_empty = mgr
             .buckets()
             .iter()
@@ -129,25 +157,34 @@ impl DynamicBatcher {
 
     /// Form the next prefill batch, draining its requests from `mgr`.
     ///
-    /// `budget_tokens` is the decode-side KV headroom in tokens (Eq. 6's
-    /// right-hand side minus tokens already held by running sequences).
-    /// Returns None when every bucket is empty or the budget admits
-    /// nothing (the caller retries after decode frees memory).
+    /// `now` drives priority scoring; `budget_tokens` is the decode-side
+    /// KV headroom in tokens (Eq. 6's right-hand side minus tokens already
+    /// held by running sequences). Returns None when every bucket is empty
+    /// or the budget admits nothing (the caller retries after decode frees
+    /// memory).
     pub fn form_batch(
         &self,
         mgr: &mut BucketManager,
+        now: Micros,
         budget_tokens: u64,
     ) -> Option<FormedBatch> {
-        let idx = self.pick_bucket(mgr)?;
+        let idx = self.pick_bucket(mgr, now)?;
         let bucket_up = {
             let b = &mut mgr.buckets_mut()[idx];
-            // Intra-bucket ordering (paper §IV): SJF / LJF for offline,
-            // longest-waiting (earliest arrival) first for online.
-            match self.policy {
-                Policy::Fcfs => b.requests.sort_by_key(|r| r.arrival),
-                Policy::Sjf => b.requests.sort_by_key(|r| (r.len, r.arrival)),
-                Policy::Ljf => {
-                    b.requests.sort_by_key(|r| (u32::MAX - r.len, r.arrival))
+            if let Some(sc) = self.scorer() {
+                // Priority drain: the scorer's canonical order (urgent
+                // first, then score, then arrival — stable, so exact FCFS
+                // within a class).
+                b.requests.sort_by(|x, y| sc.compare(x, y, now));
+            } else {
+                // Intra-bucket ordering (paper §IV): SJF / LJF for offline,
+                // longest-waiting (earliest arrival) first for online.
+                match self.policy {
+                    Policy::Fcfs => b.requests.sort_by_key(|r| r.arrival),
+                    Policy::Sjf => b.requests.sort_by_key(|r| (r.len, r.arrival)),
+                    Policy::Ljf => {
+                        b.requests.sort_by_key(|r| (u32::MAX - r.len, r.arrival))
+                    }
                 }
             }
             b.up
@@ -257,7 +294,7 @@ mod tests {
         }
         let b = batcher(Policy::Fcfs, 0);
         // Each request's footprint is 150 tokens; budget 400 admits 2.
-        let fb = b.form_batch(&mut m, 400).unwrap();
+        let fb = b.form_batch(&mut m, 0,400).unwrap();
         assert_eq!(fb.batch.n(), 2);
         assert_eq!(m.total(), 8);
         // Admitted in arrival order.
@@ -272,7 +309,7 @@ mod tests {
             m.assign(req(i, 10, 10, i));
         }
         let b = batcher(Policy::Fcfs, 3);
-        let fb = b.form_batch(&mut m, u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
         assert_eq!(fb.batch.n(), 3);
     }
 
@@ -281,7 +318,7 @@ mod tests {
         let mut m = mgr(1024);
         m.assign(req(0, 100, 50, 0));
         let b = batcher(Policy::Fcfs, 0);
-        assert!(b.form_batch(&mut m, 10).is_none());
+        assert!(b.form_batch(&mut m, 0,10).is_none());
         assert_eq!(m.total(), 1, "request must not be lost");
     }
 
@@ -289,7 +326,7 @@ mod tests {
     fn empty_manager_returns_none() {
         let mut m = mgr(1024);
         let b = batcher(Policy::Fcfs, 0);
-        assert!(b.form_batch(&mut m, 1000).is_none());
+        assert!(b.form_batch(&mut m, 0,1000).is_none());
     }
 
     #[test]
@@ -299,7 +336,7 @@ mod tests {
         m.assign(req(1, 50, 10, 1));
         m.assign(req(2, 200, 10, 2));
         let b = batcher(Policy::Sjf, 0);
-        let fb = b.form_batch(&mut m, u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
         let lens: Vec<u32> = fb.reqs.iter().map(|r| r.len).collect();
         assert_eq!(lens, vec![50, 200, 500]);
     }
@@ -311,7 +348,7 @@ mod tests {
         m.assign(req(1, 500, 10, 1));
         m.assign(req(2, 200, 10, 2));
         let b = batcher(Policy::Ljf, 0);
-        let fb = b.form_batch(&mut m, u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
         let lens: Vec<u32> = fb.reqs.iter().map(|r| r.len).collect();
         assert_eq!(lens, vec![500, 200, 50]);
     }
@@ -329,7 +366,7 @@ mod tests {
         m.adjust(4);
         assert!(m.n_buckets() >= 2);
         let b = batcher(Policy::Fcfs, 0);
-        let fb = b.form_batch(&mut m, u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
         // The long bucket holds the earliest arrivals (0 and 1).
         assert!(fb.reqs.iter().all(|r| r.len == 900));
     }
@@ -340,7 +377,7 @@ mod tests {
         m.assign(req(0, 120, 10, 0));
         m.assign(req(1, 80, 10, 1));
         let b = batcher(Policy::Fcfs, 0);
-        let fb = b.form_batch(&mut m, u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
         // Merged single bucket: pad to the longest member, not L_max.
         assert_eq!(fb.batch.padded_len, 120);
     }
@@ -357,11 +394,83 @@ mod tests {
         m.adjust(4);
         assert!(m.n_buckets() >= 2);
         let b = batcher(Policy::Fcfs, 0);
-        let fb = b.form_batch(&mut m, u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
         // FCFS picks the short bucket (earliest arrivals); padded to its
         // batch max (107), well under the bucket bound 512.
         assert_eq!(fb.batch.padded_len, 107);
         assert!(fb.bucket_up <= 512);
+    }
+
+    #[test]
+    fn priority_drain_jumps_online_ahead_of_offline() {
+        use crate::config::PrioritySpec;
+        use crate::config::SloSpec;
+        use crate::coordinator::priority::PriorityScorer;
+        let mut m = mgr(1024);
+        // Offline backlog arrived first…
+        for i in 0..4 {
+            m.assign(QueuedReq {
+                id: i,
+                len: 200,
+                output_len: 50,
+                arrival: 0,
+                class: RequestClass::Offline,
+            });
+        }
+        // …then an online request lands later.
+        m.assign(QueuedReq {
+            id: 9,
+            len: 100,
+            output_len: 20,
+            arrival: 50_000,
+            class: RequestClass::Online,
+        });
+        let b = batcher(Policy::Fcfs, 1).with_priority(PriorityScorer::new(
+            PrioritySpec::default(),
+            SloSpec::default(),
+        ));
+        let fb = b.form_batch(&mut m, 100_000, u64::MAX / 4).unwrap();
+        assert_eq!(fb.reqs[0].id, 9, "online request must drain first");
+    }
+
+    #[test]
+    fn priority_matches_fcfs_on_single_class_queue() {
+        use crate::config::PrioritySpec;
+        use crate::config::SloSpec;
+        use crate::coordinator::priority::PriorityScorer;
+        let mut fcfs_mgr = mgr(1024);
+        let mut prio_mgr = mgr(1024);
+        for i in 0..8 {
+            let r = req(i, 100 + i as u32 * 30, 20, 1000 * (8 - i));
+            fcfs_mgr.assign(r);
+            prio_mgr.assign(r);
+        }
+        let fcfs = batcher(Policy::Fcfs, 0);
+        let prio = batcher(Policy::Fcfs, 0).with_priority(PriorityScorer::new(
+            PrioritySpec::default(),
+            SloSpec::default(),
+        ));
+        let now = 20_000;
+        let fa = fcfs.form_batch(&mut fcfs_mgr, now, u64::MAX / 4).unwrap();
+        let fp = prio.form_batch(&mut prio_mgr, now, u64::MAX / 4).unwrap();
+        let ids = |f: &FormedBatch| f.reqs.iter().map(|r| r.id).collect::<Vec<_>>();
+        assert_eq!(ids(&fa), ids(&fp), "single-class order must be identical");
+    }
+
+    #[test]
+    fn sjf_policy_ignores_priority_scorer() {
+        use crate::config::PrioritySpec;
+        use crate::config::SloSpec;
+        use crate::coordinator::priority::PriorityScorer;
+        let mut m = mgr(1024);
+        m.assign(req(0, 500, 10, 0));
+        m.assign(req(1, 50, 10, 1));
+        let b = batcher(Policy::Sjf, 0).with_priority(PriorityScorer::new(
+            PrioritySpec::default(),
+            SloSpec::default(),
+        ));
+        let fb = b.form_batch(&mut m, 10_000, u64::MAX / 4).unwrap();
+        assert_eq!(fb.reqs[0].len, 50, "SJF keeps shortest-first");
     }
 
     #[test]
@@ -383,7 +492,7 @@ mod tests {
             let remain = g.u64(1 << 28, 12 * (1u64 << 30));
             let budget = mm.token_budget(remain);
             let b = batcher(Policy::Fcfs, 0);
-            if let Some(fb) = b.form_batch(&mut m, budget) {
+            if let Some(fb) = b.form_batch(&mut m, 0,budget) {
                 let footprint: u64 = fb
                     .reqs
                     .iter()

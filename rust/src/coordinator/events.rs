@@ -1,0 +1,151 @@
+//! Typed event queue: the heartbeat of the event-driven P/D scheduler.
+//!
+//! The serving loop is a discrete-event simulation: every future state
+//! change is an [`Event`] in a min-ordered [`EventQueue`] (a
+//! `BinaryHeap` with reversed ordering). The scheduler pops the earliest
+//! event, advances the clock (virtual or wall), applies the handler for
+//! its [`EventKind`], and then runs the state-driven phases (hand-off
+//! admission, prefill dispatch, decode launch) that may schedule further
+//! events. Ties on the timestamp pop in FIFO push order, which keeps runs
+//! bit-for-bit deterministic for a given trace.
+
+use crate::Micros;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The trace's next request reaches the gateway.
+    Arrival,
+    /// Prefill instance `instance` finishes its in-flight batch.
+    PrefillDone { instance: usize },
+    /// A KV hand-off becomes consumable on decode instance `decode`
+    /// (wake-up for an idle instance; admission itself is state-driven).
+    HandoffReady { decode: usize },
+    /// Decode instance `decode` reaches its iteration boundary.
+    DecodeIterEnd { decode: usize },
+}
+
+/// A scheduled event. `seq` is a push counter used only for deterministic
+/// FIFO tie-breaking at equal timestamps.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub at: Micros,
+    pub kind: EventKind,
+    seq: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    // Reversed so that BinaryHeap (a max-heap) pops the earliest
+    // timestamp, FIFO among equals.
+    fn cmp(&self, other: &Event) -> Ordering {
+        other.at.cmp(&self.at).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `kind` to fire at `at`.
+    pub fn push(&mut self, at: Micros, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Event { at, kind, seq });
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    /// Pop the earliest event only if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: Micros) -> Option<Event> {
+        match self.heap.peek() {
+            Some(ev) if ev.at <= now => self.heap.pop(),
+            _ => None,
+        }
+    }
+
+    /// Timestamp of the earliest scheduled event.
+    pub fn peek_at(&self) -> Option<Micros> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, EventKind::Arrival);
+        q.push(10, EventKind::DecodeIterEnd { decode: 0 });
+        q.push(20, EventKind::PrefillDone { instance: 1 });
+        let order: Vec<Micros> = std::iter::from_fn(|| q.pop().map(|e| e.at)).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_timestamps_pop_fifo() {
+        let mut q = EventQueue::new();
+        q.push(5, EventKind::PrefillDone { instance: 0 });
+        q.push(5, EventKind::PrefillDone { instance: 1 });
+        q.push(5, EventKind::PrefillDone { instance: 2 });
+        let kinds: Vec<EventKind> =
+            std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::PrefillDone { instance: 0 },
+                EventKind::PrefillDone { instance: 1 },
+                EventKind::PrefillDone { instance: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(100, EventKind::Arrival);
+        q.push(200, EventKind::Arrival);
+        assert!(q.pop_due(50).is_none());
+        assert_eq!(q.pop_due(150).unwrap().at, 100);
+        assert!(q.pop_due(150).is_none());
+        assert_eq!(q.peek_at(), Some(200));
+        assert_eq!(q.len(), 1);
+    }
+}

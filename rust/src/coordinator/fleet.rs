@@ -1,0 +1,275 @@
+//! Instance state machines for the disaggregated fleet.
+//!
+//! * [`PrefillFleet`] — one slot per prefill instance holding the
+//!   [`InFlightPrefill`] batch it is executing (FCFS workers).
+//! * [`DecodeFleet`] — one [`DecodeInstance`] per decode GPU: sequences
+//!   pending NVLink hand-off, the continuous-batching active set, the KV
+//!   token reservation, and the current iteration boundary.
+//!
+//! The scheduler owns *when* things happen (the event queue); the fleet
+//! owns *what state* each instance is in. Both are engine-agnostic.
+
+use super::batcher::FormedBatch;
+use crate::workload::RequestClass;
+use crate::Micros;
+
+/// A prefill batch in flight on a prefill instance.
+#[derive(Debug, Clone)]
+pub struct InFlightPrefill {
+    pub formed: FormedBatch,
+    pub done_at: Micros,
+    pub duration: Micros,
+    /// Decode instance whose KV budget the batch was reserved against.
+    pub target_decode: usize,
+}
+
+/// The prefill side: per-instance busy slots.
+#[derive(Debug, Default)]
+pub struct PrefillFleet {
+    running: Vec<Option<InFlightPrefill>>,
+}
+
+impl PrefillFleet {
+    pub fn new(n: usize) -> PrefillFleet {
+        PrefillFleet { running: (0..n).map(|_| None).collect() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_idle(&self, pi: usize) -> bool {
+        self.running[pi].is_none()
+    }
+
+    /// Occupy instance `pi` with a dispatched batch.
+    pub fn dispatch(&mut self, pi: usize, batch: InFlightPrefill) {
+        debug_assert!(self.running[pi].is_none(), "instance {pi} already busy");
+        self.running[pi] = Some(batch);
+    }
+
+    /// Take the finished batch off instance `pi` if it completed by `now`.
+    pub fn take_done(&mut self, pi: usize, now: Micros) -> Option<InFlightPrefill> {
+        let done = matches!(&self.running[pi], Some(p) if p.done_at <= now);
+        if done {
+            self.running[pi].take()
+        } else {
+            None
+        }
+    }
+
+    pub fn any_running(&self) -> bool {
+        self.running.iter().any(|s| s.is_some())
+    }
+
+    /// Per-instance busy flags (stall diagnostics).
+    pub fn running_mask(&self) -> Vec<bool> {
+        self.running.iter().map(|s| s.is_some()).collect()
+    }
+}
+
+/// A sequence active (or pending admission) on a decode instance.
+#[derive(Debug, Clone)]
+pub struct DecodeSeqState {
+    pub id: u64,
+    pub class: RequestClass,
+    pub arrival: Micros,
+    pub input_len: u32,
+    pub padded_len: u32,
+    pub output_len: u32,
+    pub generated: u32,
+    pub first_token: Micros,
+    /// When the NVLink KV hand-off lands (earliest admission time).
+    pub ready_at: Micros,
+}
+
+/// One decode instance running continuous (iteration-level) batching.
+#[derive(Debug, Default)]
+pub struct DecodeInstance {
+    /// End of the most recent iteration.
+    pub free_at: Micros,
+    /// Sequences in the continuous batch.
+    pub active: Vec<DecodeSeqState>,
+    /// Sequences whose KV hand-off has not yet been admitted.
+    pub pending: Vec<DecodeSeqState>,
+    /// Full-context KV tokens reserved against this instance's budget.
+    pub reserved_tokens: u64,
+    /// Set while an iteration is executing; pending joins at the boundary.
+    pub iter_end: Option<Micros>,
+    /// Timestamp of an already-scheduled idle wake-up (dedupe guard).
+    pub wake_at: Option<Micros>,
+}
+
+impl DecodeInstance {
+    /// Not mid-iteration (pending sequences may join immediately).
+    pub fn at_boundary(&self) -> bool {
+        self.iter_end.is_none()
+    }
+
+    /// Move every hand-off that has landed by `now` into the active set.
+    /// Only legal at an iteration boundary.
+    pub fn admit_due(&mut self, now: Micros) {
+        debug_assert!(self.at_boundary());
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].ready_at <= now {
+                let s = self.pending.remove(i);
+                self.active.push(s);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Any sequence admitted or awaiting admission.
+    pub fn in_flight(&self) -> bool {
+        !self.active.is_empty() || !self.pending.is_empty()
+    }
+}
+
+/// The decode side of the fleet.
+#[derive(Debug, Default)]
+pub struct DecodeFleet {
+    insts: Vec<DecodeInstance>,
+}
+
+impl DecodeFleet {
+    pub fn new(n: usize) -> DecodeFleet {
+        DecodeFleet { insts: (0..n).map(|_| DecodeInstance::default()).collect() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn get(&self, di: usize) -> &DecodeInstance {
+        &self.insts[di]
+    }
+
+    pub fn get_mut(&mut self, di: usize) -> &mut DecodeInstance {
+        &mut self.insts[di]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, DecodeInstance> {
+        self.insts.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> std::slice::IterMut<'_, DecodeInstance> {
+        self.insts.iter_mut()
+    }
+
+    /// Instance with the most KV headroom against `per_budget` tokens,
+    /// with its headroom (prefill batches target this instance). Ties
+    /// keep the highest index — the seed's `max_by_key` behavior — so the
+    /// refactor reproduces its schedules exactly.
+    pub fn best_target(&self, per_budget: u64) -> (usize, u64) {
+        let mut best = (0usize, 0u64);
+        let mut first = true;
+        for (i, d) in self.insts.iter().enumerate() {
+            let headroom = per_budget.saturating_sub(d.reserved_tokens);
+            if first || headroom >= best.1 {
+                best = (i, headroom);
+                first = false;
+            }
+        }
+        best
+    }
+
+    /// True when no sequence is active or awaiting admission anywhere
+    /// (the memory-deadlock-breaker precondition).
+    pub fn nothing_in_flight(&self) -> bool {
+        self.insts.iter().all(|d| !d.in_flight())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{PrefillBatch, PrefillItem};
+    use crate::coordinator::bucket::QueuedReq;
+
+    fn in_flight(done_at: Micros, target: usize) -> InFlightPrefill {
+        let req = QueuedReq {
+            id: 1,
+            len: 8,
+            output_len: 4,
+            arrival: 0,
+            class: RequestClass::Online,
+        };
+        InFlightPrefill {
+            formed: FormedBatch {
+                batch: PrefillBatch {
+                    items: vec![PrefillItem { id: 1, len: 8, tokens: vec![] }],
+                    padded_len: 8,
+                },
+                reqs: vec![req],
+                bucket_up: 8,
+            },
+            done_at,
+            duration: done_at,
+            target_decode: target,
+        }
+    }
+
+    fn seq(id: u64, ready_at: Micros) -> DecodeSeqState {
+        DecodeSeqState {
+            id,
+            class: RequestClass::Online,
+            arrival: 0,
+            input_len: 8,
+            padded_len: 8,
+            output_len: 4,
+            generated: 1,
+            first_token: 0,
+            ready_at,
+        }
+    }
+
+    #[test]
+    fn prefill_slots_track_occupancy() {
+        let mut f = PrefillFleet::new(2);
+        assert!(f.is_idle(0) && f.is_idle(1));
+        assert!(!f.any_running());
+        f.dispatch(0, in_flight(100, 0));
+        assert!(!f.is_idle(0) && f.is_idle(1));
+        assert!(f.any_running());
+        assert_eq!(f.running_mask(), vec![true, false]);
+        // Not done yet.
+        assert!(f.take_done(0, 50).is_none());
+        assert!(!f.is_idle(0));
+        // Done.
+        let p = f.take_done(0, 100).unwrap();
+        assert_eq!(p.done_at, 100);
+        assert!(f.is_idle(0));
+        assert!(!f.any_running());
+    }
+
+    #[test]
+    fn decode_admits_only_due_handoffs() {
+        let mut d = DecodeInstance::default();
+        d.pending.push(seq(1, 10));
+        d.pending.push(seq(2, 50));
+        d.pending.push(seq(3, 20));
+        d.admit_due(25);
+        let mut active: Vec<u64> = d.active.iter().map(|s| s.id).collect();
+        active.sort();
+        assert_eq!(active, vec![1, 3]);
+        assert_eq!(d.pending.len(), 1);
+        assert!(d.in_flight());
+    }
+
+    #[test]
+    fn best_target_picks_max_headroom() {
+        let mut f = DecodeFleet::new(3);
+        f.get_mut(0).reserved_tokens = 800;
+        f.get_mut(1).reserved_tokens = 100;
+        f.get_mut(2).reserved_tokens = 500;
+        assert_eq!(f.best_target(1000), (1, 900));
+        // Over-subscribed instances saturate at zero headroom; ties keep
+        // the highest index (seed max_by_key behavior).
+        assert_eq!(f.best_target(50), (2, 0));
+        assert!(f.nothing_in_flight());
+        f.get_mut(2).pending.push(seq(9, 0));
+        assert!(!f.nothing_in_flight());
+    }
+}

@@ -1,26 +1,41 @@
-//! The paper's contribution: bucket-based dynamic batching.
+//! The paper's contribution: bucket-based dynamic batching with
+//! priority-aware, event-driven scheduling.
 //!
 //! * [`bucket`] — the Request Bucketing Manager (Algorithm 1): adaptive
 //!   split/merge of sequence-length buckets.
 //! * [`batcher`] — the Dynamic Batching Controller (Eqs. 1–6): memory-safe
-//!   batch sizing and longest-wait prioritization.
+//!   batch sizing; drains by priority score (or policy order) per bucket.
+//! * [`priority`] — SLO-deadline urgency scoring: online slack to
+//!   `arrival + slo.ttft_us`, offline throughput class with starvation
+//!   aging; replaces pure earliest-arrival drain when enabled.
+//! * [`events`] — the typed event queue (arrivals, prefill completions,
+//!   KV hand-off landings, decode iteration boundaries) the serving loop
+//!   pops in timestamp order.
+//! * [`fleet`] — instance state machines: prefill busy slots and decode
+//!   continuous-batching instances with KV reservations.
 //! * [`monitor`] — the Global Monitor: sliding-window system metrics that
 //!   feed the batcher and scheduler.
-//! * [`scheduler`] — the P/D serving loop shared by BucketServe and the
-//!   disaggregated baseline: FCFS prefill workers, NVLink hand-off, and
-//!   continuous-batching decode instances.
+//! * [`scheduler`] — the thin P/D orchestrator shared by BucketServe and
+//!   the disaggregated baseline: pops events, dispatches to the fleet,
+//!   plans batches through the [`PrefillPlanner`] plug-in.
 //!
 //! [`BucketServe`] ties them together behind a single façade used by the
 //! CLI, the examples, and every figure bench.
 
 pub mod bucket;
 pub mod batcher;
+pub mod events;
+pub mod fleet;
 pub mod monitor;
+pub mod priority;
 pub mod scheduler;
 
 pub use bucket::{Bucket, BucketManager};
 pub use batcher::{DynamicBatcher, KvMemoryModel};
+pub use events::{Event, EventKind, EventQueue};
+pub use fleet::{DecodeFleet, PrefillFleet};
 pub use monitor::GlobalMonitor;
+pub use priority::PriorityScorer;
 pub use scheduler::{PdScheduler, RunReport, PrefillPlanner};
 
 use crate::cluster::Engine;

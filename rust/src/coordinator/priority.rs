@@ -1,0 +1,228 @@
+//! Priority-aware scheduling (paper §III): SLO-deadline urgency scoring.
+//!
+//! The seed drained buckets in pure earliest-arrival order, which lets a
+//! backlog of offline throughput work head-of-line-block latency-bound
+//! online requests. This module scores every queued request so the
+//! [`DynamicBatcher`](super::batcher::DynamicBatcher) can drain by SLO
+//! urgency instead:
+//!
+//! * **Online** — urgency is the fraction of the TTFT budget already
+//!   consumed (`(now − arrival) / slo.ttft_us`, i.e. 1 − slack/budget).
+//!   Score = `online_weight · (1 + urgency)`: a fresh online request
+//!   already outranks the offline base weight, and the rank keeps rising
+//!   toward (and past) the deadline.
+//! * **Offline** — a throughput class with starvation aging: score =
+//!   `offline_weight + aging_rate · waited_seconds`, so offline work
+//!   eventually overtakes *non-urgent* online work instead of starving.
+//! * **Urgency override** — once an online request consumes more than
+//!   `urgency_threshold` of its TTFT budget it is *urgent* and ranks ahead
+//!   of any non-urgent request regardless of aging.
+//!
+//! For a single-class queue the score order degenerates to exact
+//! earliest-arrival order, so enabling priority changes nothing on the
+//! seed's single-class workloads — the wins (and the ablation bench) are
+//! on mixed online/offline traffic.
+
+use super::bucket::{Bucket, QueuedReq};
+use crate::config::{PrioritySpec, SloSpec};
+use crate::workload::RequestClass;
+use crate::Micros;
+use std::cmp::Ordering;
+
+/// Scores queued requests by SLO urgency; cheap enough to call per
+/// comparison in the drain sort.
+#[derive(Debug, Clone)]
+pub struct PriorityScorer {
+    spec: PrioritySpec,
+    slo: SloSpec,
+}
+
+impl PriorityScorer {
+    pub fn new(spec: PrioritySpec, slo: SloSpec) -> PriorityScorer {
+        PriorityScorer { spec, slo }
+    }
+
+    /// Fraction of the TTFT budget an online request has consumed at
+    /// `now` (0 at arrival, 1 at the deadline, > 1 overdue): the
+    /// scorer-side view of [`crate::workload::Request::ttft_slack`],
+    /// `1 − slack/budget` (a unit test pins the two to agree).
+    pub fn urgency(&self, r: &QueuedReq, now: Micros) -> f64 {
+        let waited = now.saturating_sub(r.arrival) as f64;
+        waited / self.slo.ttft_us.max(1) as f64
+    }
+
+    /// Drain score — higher serves first.
+    pub fn score(&self, r: &QueuedReq, now: Micros) -> f64 {
+        match r.class {
+            RequestClass::Online => {
+                self.spec.online_weight * (1.0 + self.urgency(r, now))
+            }
+            RequestClass::Offline => {
+                let waited_s = now.saturating_sub(r.arrival) as f64 / 1e6;
+                self.spec.offline_weight + self.spec.aging_rate * waited_s
+            }
+        }
+    }
+
+    /// True when an online request is close enough to its TTFT deadline
+    /// that it overrides offline aging entirely.
+    pub fn is_urgent(&self, r: &QueuedReq, now: Micros) -> bool {
+        r.class == RequestClass::Online
+            && self.urgency(r, now) >= self.spec.urgency_threshold
+    }
+
+    /// The canonical total drain order — urgent first, then score, then
+    /// earliest arrival; `Less` means `a` serves before `b`. Every
+    /// priority-mode decision (bucket pick, intra-bucket sort, force-pop)
+    /// goes through this single comparator so they can never disagree.
+    pub fn compare(&self, a: &QueuedReq, b: &QueuedReq, now: Micros) -> Ordering {
+        self.is_urgent(b, now)
+            .cmp(&self.is_urgent(a, now))
+            .then(
+                self.score(b, now)
+                    .partial_cmp(&self.score(a, now))
+                    .unwrap_or(Ordering::Equal),
+            )
+            .then(a.arrival.cmp(&b.arrival))
+    }
+
+    /// Position `(bucket, index)` of the highest-ranked queued request
+    /// across `buckets` under [`PriorityScorer::compare`] (first match
+    /// wins ties). Shared by bucket selection and the deadlock-break
+    /// force-pop so the two scans cannot diverge.
+    pub fn best_position(
+        &self,
+        buckets: &[Bucket],
+        now: Micros,
+    ) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, QueuedReq)> = None;
+        for (bi, b) in buckets.iter().enumerate() {
+            for (ri, r) in b.requests.iter().enumerate() {
+                let better = match &best {
+                    None => true,
+                    Some((_, _, cur)) => {
+                        self.compare(r, cur, now) == Ordering::Less
+                    }
+                };
+                if better {
+                    best = Some((bi, ri, *r));
+                }
+            }
+        }
+        best.map(|(bi, ri, _)| (bi, ri))
+    }
+
+    pub fn spec(&self) -> &PrioritySpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scorer() -> PriorityScorer {
+        PriorityScorer::new(PrioritySpec::default(), SloSpec::default())
+    }
+
+    fn req(class: RequestClass, arrival: Micros) -> QueuedReq {
+        QueuedReq { id: 0, len: 100, output_len: 10, arrival, class }
+    }
+
+    #[test]
+    fn online_outranks_fresh_offline() {
+        let s = scorer();
+        let online = req(RequestClass::Online, 0);
+        let offline = req(RequestClass::Offline, 0);
+        assert!(s.score(&online, 0) > s.score(&offline, 0));
+    }
+
+    #[test]
+    fn online_urgency_grows_toward_deadline() {
+        let s = scorer();
+        let r = req(RequestClass::Online, 0);
+        let ttft = SloSpec::default().ttft_us;
+        assert!(s.score(&r, 0) < s.score(&r, ttft / 2));
+        assert!(s.score(&r, ttft / 2) < s.score(&r, ttft));
+        assert!((s.urgency(&r, ttft) - 1.0).abs() < 1e-9);
+        // Overdue requests keep climbing (no cliff at the deadline).
+        assert!(s.score(&r, 2 * ttft) > s.score(&r, ttft));
+    }
+
+    #[test]
+    fn same_class_score_order_is_arrival_order() {
+        let s = scorer();
+        let now = 1_000_000;
+        for class in [RequestClass::Online, RequestClass::Offline] {
+            let early = req(class, 100);
+            let late = req(class, 900_000);
+            assert!(
+                s.score(&early, now) > s.score(&late, now),
+                "{class:?}: earlier arrival must score higher"
+            );
+        }
+    }
+
+    #[test]
+    fn offline_aging_eventually_overtakes_fresh_online() {
+        let s = scorer();
+        let spec = PrioritySpec::default();
+        // A fresh online request scores online_weight; an offline request
+        // that has waited long enough must exceed it (starvation-proof).
+        let overtake_s =
+            (spec.online_weight - spec.offline_weight) / spec.aging_rate;
+        let now = (overtake_s * 1e6) as Micros + 2_000_000;
+        let aged_offline = req(RequestClass::Offline, 0);
+        let fresh_online = req(RequestClass::Online, now);
+        assert!(s.score(&aged_offline, now) > s.score(&fresh_online, now));
+        // ... but an *urgent* online request still overrides it.
+        let urgent_online = req(RequestClass::Online, 0);
+        assert!(s.is_urgent(&urgent_online, now));
+        assert!(!s.is_urgent(&aged_offline, now));
+        assert!(!s.is_urgent(&fresh_online, now));
+    }
+
+    #[test]
+    fn compare_orders_urgent_then_score_then_arrival() {
+        let s = scorer();
+        let now = 1_000_000;
+        let urgent_online = req(RequestClass::Online, 100_000); // 2.25 budgets in
+        let fresh_online = req(RequestClass::Online, now);
+        let offline = req(RequestClass::Offline, 0);
+        assert_eq!(s.compare(&urgent_online, &fresh_online, now), Ordering::Less);
+        assert_eq!(s.compare(&fresh_online, &offline, now), Ordering::Less);
+        assert_eq!(s.compare(&offline, &urgent_online, now), Ordering::Greater);
+        assert_eq!(s.compare(&offline, &offline, now), Ordering::Equal);
+    }
+
+    #[test]
+    fn urgency_mirrors_request_ttft_slack() {
+        // The scorer's urgency and the public Request::ttft_slack helper
+        // must stay two views of the same deadline: urgency = 1 − slack/budget.
+        let s = scorer();
+        let slo = SloSpec::default();
+        let q = req(RequestClass::Online, 100_000);
+        let r = crate::workload::Request::new(
+            0, RequestClass::Online, 100, 10, 100_000,
+        );
+        for now in [100_000u64, 300_000, 500_000, 900_000] {
+            let expect = 1.0 - r.ttft_slack(&slo, now) as f64 / slo.ttft_us as f64;
+            assert!(
+                (s.urgency(&q, now) - expect).abs() < 1e-9,
+                "urgency vs slack mismatch at now={now}"
+            );
+        }
+    }
+
+    #[test]
+    fn urgency_threshold_gates_is_urgent() {
+        let s = scorer();
+        let ttft = SloSpec::default().ttft_us;
+        let thresh = PrioritySpec::default().urgency_threshold;
+        let r = req(RequestClass::Online, 0);
+        let just_before = ((ttft as f64) * (thresh - 0.01)) as Micros;
+        let just_after = ((ttft as f64) * (thresh + 0.01)) as Micros;
+        assert!(!s.is_urgent(&r, just_before));
+        assert!(s.is_urgent(&r, just_after));
+    }
+}

@@ -15,9 +15,19 @@
 //!   DESIGN.md §2).
 //! * [`cluster`] — the simulated GPU cluster substrate: an A100 roofline
 //!   cost model, NVLink transfer model, and the discrete-event engine.
-//! * [`coordinator`] — **the paper's contribution**: the Request Bucketing
-//!   Manager (Algorithm 1), the Dynamic Batching Controller (Eqs. 1–6), the
-//!   P/D scheduler, and the Global Monitor.
+//! * [`coordinator`] — **the paper's contribution**, an event-driven
+//!   scheduling core in seven modules:
+//!   [`coordinator::bucket`] (Request Bucketing Manager, Algorithm 1),
+//!   [`coordinator::batcher`] (Dynamic Batching Controller, Eqs. 1–6),
+//!   [`coordinator::priority`] (SLO-deadline urgency scoring: online TTFT
+//!   slack, offline starvation aging),
+//!   [`coordinator::events`] (the typed event queue the serving loop pops
+//!   in timestamp order),
+//!   [`coordinator::fleet`] (prefill/decode instance state machines with
+//!   KV reservations),
+//!   [`coordinator::monitor`] (Global Monitor sliding-window metrics), and
+//!   [`coordinator::scheduler`] (the thin P/D orchestrator + the
+//!   [`coordinator::PrefillPlanner`] plug-in point the baselines reuse).
 //! * [`runtime`] — the PJRT runtime that loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX + Pallas) and serves them from the request path.
 //! * [`baselines`] — UELLM-like (aggregated, static batching) and

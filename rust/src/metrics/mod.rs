@@ -5,6 +5,7 @@ use crate::coordinator::RunReport;
 use crate::config::SloSpec;
 use crate::util::json::Json;
 use crate::util::stats::Samples;
+use crate::workload::RequestClass;
 
 /// A flattened summary of one run (one row of a figure bench).
 #[derive(Debug, Clone)]
@@ -17,6 +18,11 @@ pub struct Summary {
     pub server_rps: f64,
     pub gpu_util: f64,
     pub slo_attainment: f64,
+    /// Per-class SLO attainment (1.0 when the class is absent).
+    pub slo_online: f64,
+    pub slo_offline: f64,
+    pub n_online: usize,
+    pub n_offline: usize,
     pub mean_ttft_ms: f64,
     pub p99_ttft_ms: f64,
     pub mean_e2e_ms: f64,
@@ -26,6 +32,9 @@ pub struct Summary {
     pub peak_batch: usize,
     pub max_buckets: usize,
     pub bucket_overhead_ms: f64,
+    /// Abnormal-termination diagnostics from the run (scheduler stall);
+    /// a summary carrying this must not be read as a clean result.
+    pub error: Option<String>,
 }
 
 impl Summary {
@@ -49,6 +58,18 @@ impl Summary {
             server_rps: r.server_rps(),
             gpu_util: r.gpu_util(),
             slo_attainment: r.slo_attainment(slo.ttft_us, slo.tbt_us),
+            slo_online: r.slo_attainment_class(
+                RequestClass::Online,
+                slo.ttft_us,
+                slo.tbt_us,
+            ),
+            slo_offline: r.slo_attainment_class(
+                RequestClass::Offline,
+                slo.ttft_us,
+                slo.tbt_us,
+            ),
+            n_online: r.n_class(RequestClass::Online),
+            n_offline: r.n_class(RequestClass::Offline),
             mean_ttft_ms: ttft.mean(),
             p99_ttft_ms: ttft.percentile(99.0),
             mean_e2e_ms: e2e.mean(),
@@ -58,11 +79,12 @@ impl Summary {
             peak_batch: r.peak_batch,
             max_buckets: r.max_buckets,
             bucket_overhead_ms: r.bucket_overhead_ns as f64 / 1e6,
+            error: r.error.clone(),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("system", Json::from(self.system.as_str())),
             ("n_requests", Json::from(self.n_requests)),
             ("makespan_s", Json::num(self.makespan_s)),
@@ -71,6 +93,10 @@ impl Summary {
             ("server_rps", Json::num(self.server_rps)),
             ("gpu_util", Json::num(self.gpu_util)),
             ("slo_attainment", Json::num(self.slo_attainment)),
+            ("slo_online", Json::num(self.slo_online)),
+            ("slo_offline", Json::num(self.slo_offline)),
+            ("n_online", Json::from(self.n_online)),
+            ("n_offline", Json::from(self.n_offline)),
             ("mean_ttft_ms", Json::num(self.mean_ttft_ms)),
             ("p99_ttft_ms", Json::num(self.p99_ttft_ms)),
             ("mean_e2e_ms", Json::num(self.mean_e2e_ms)),
@@ -80,7 +106,11 @@ impl Summary {
             ("peak_batch", Json::from(self.peak_batch)),
             ("max_buckets", Json::from(self.max_buckets)),
             ("bucket_overhead_ms", Json::num(self.bucket_overhead_ms)),
-        ])
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::from(e.as_str())));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -107,5 +137,27 @@ mod tests {
         let j = s.to_json().to_string();
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("n_requests").as_usize(), Some(40));
+        // Per-class attainment appears in the JSON output; this trace is
+        // all-offline, so online defaults to perfect and counts split.
+        assert_eq!(parsed.get("n_offline").as_usize(), Some(40));
+        assert_eq!(parsed.get("n_online").as_usize(), Some(0));
+        assert_eq!(s.slo_online, 1.0);
+        assert!((0.0..=1.0).contains(&s.slo_offline));
+        assert!(!parsed.get("slo_online").is_null());
+        assert!(!parsed.get("slo_offline").is_null());
+    }
+
+    #[test]
+    fn per_class_summary_on_mixed_trace() {
+        let cfg = SystemConfig::default();
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 15, 8.0, Dataset::Alpaca, 25, 4096, 3,
+        );
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        assert_eq!(s.n_online, 15);
+        assert_eq!(s.n_offline, 25);
+        assert!((0.0..=1.0).contains(&s.slo_online));
+        assert!((0.0..=1.0).contains(&s.slo_offline));
     }
 }

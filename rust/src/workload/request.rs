@@ -1,5 +1,6 @@
 //! The request: the unit every layer of the system schedules.
 
+use crate::config::SloSpec;
 use crate::Micros;
 
 /// Unique, monotonically assigned request id.
@@ -48,6 +49,17 @@ impl Request {
     /// How long the request has been waiting at `now`.
     pub fn waiting(&self, now: Micros) -> Micros {
         now.saturating_sub(self.arrival)
+    }
+
+    /// Latest time the first token can land within the TTFT SLO.
+    pub fn ttft_deadline(&self, slo: &SloSpec) -> Micros {
+        self.arrival.saturating_add(slo.ttft_us)
+    }
+
+    /// Signed slack to the TTFT deadline at `now` (negative = overdue);
+    /// what the priority scorer's online urgency is derived from.
+    pub fn ttft_slack(&self, slo: &SloSpec, now: Micros) -> i64 {
+        self.ttft_deadline(slo) as i64 - now as i64
     }
 }
 
@@ -105,6 +117,16 @@ mod tests {
         let r = Request::new(1, RequestClass::Online, 10, 5, 1000);
         assert_eq!(r.waiting(1500), 500);
         assert_eq!(r.waiting(500), 0);
+    }
+
+    #[test]
+    fn ttft_deadline_and_slack() {
+        let slo = SloSpec { ttft_us: 400_000, tbt_us: 100_000 };
+        let r = Request::new(1, RequestClass::Online, 10, 5, 100_000);
+        assert_eq!(r.ttft_deadline(&slo), 500_000);
+        assert_eq!(r.ttft_slack(&slo, 100_000), 400_000);
+        assert_eq!(r.ttft_slack(&slo, 500_000), 0);
+        assert_eq!(r.ttft_slack(&slo, 600_000), -100_000);
     }
 
     #[test]

@@ -58,6 +58,38 @@ impl Trace {
         Trace { requests }
     }
 
+    /// Mixed-class trace: an offline throughput backlog (all at t=0) plus
+    /// an online Poisson stream — the priority subsystem's target
+    /// workload. Ids are reassigned in arrival order so every system sees
+    /// a well-formed trace.
+    pub fn mixed_classes(
+        online_dataset: Dataset,
+        n_online: usize,
+        rps: f64,
+        offline_dataset: Dataset,
+        n_offline: usize,
+        max_seq: u32,
+        seed: u64,
+    ) -> Trace {
+        let online = Trace::generate(
+            online_dataset, n_online, rps, RequestClass::Online, max_seq, seed,
+        );
+        let offline = Trace::batch(
+            offline_dataset,
+            n_offline,
+            RequestClass::Offline,
+            max_seq,
+            seed.wrapping_add(1),
+        );
+        let mut requests = offline.requests;
+        requests.extend(online.requests);
+        requests.sort_by_key(|r| r.arrival); // stable: offline first at t=0
+        for (i, r) in requests.iter_mut().enumerate() {
+            r.id = i as u64;
+        }
+        Trace { requests }
+    }
+
     pub fn len(&self) -> usize {
         self.requests.len()
     }
@@ -162,6 +194,31 @@ mod tests {
         let t = Trace::batch(Dataset::Alpaca, 64, RequestClass::Offline, 4096, 5);
         assert!(t.requests.iter().all(|r| r.arrival == 0));
         assert_eq!(t.len(), 64);
+    }
+
+    #[test]
+    fn mixed_classes_combines_both_streams() {
+        let t = Trace::mixed_classes(
+            Dataset::Alpaca, 20, 8.0, Dataset::LongBench, 30, 4096, 7,
+        );
+        assert_eq!(t.len(), 50);
+        assert!(t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let n_online = t
+            .requests
+            .iter()
+            .filter(|r| r.class == RequestClass::Online)
+            .count();
+        assert_eq!(n_online, 20);
+        let n_offline = t.len() - n_online;
+        assert_eq!(n_offline, 30);
+        // Offline backlog lands at t=0; ids are arrival-ordered and unique.
+        assert!(t
+            .requests
+            .iter()
+            .filter(|r| r.class == RequestClass::Offline)
+            .all(|r| r.arrival == 0));
+        let ids: Vec<u64> = t.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..50).collect::<Vec<u64>>());
     }
 
     #[test]

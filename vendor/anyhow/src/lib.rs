@@ -1,0 +1,98 @@
+//! Offline stand-in for the `anyhow` crate (the build image has no
+//! crates-io access). Implements the subset the workspace uses:
+//! [`Error`], [`Result`], and the [`anyhow!`], [`bail!`], [`ensure!`]
+//! macros, plus the blanket `From<E: std::error::Error>` conversion that
+//! makes `?` work on std error types.
+
+use std::fmt;
+
+/// A message-carrying error. Like the real `anyhow::Error`, it
+/// deliberately does **not** implement `std::error::Error`, which is what
+/// keeps the blanket `From` impl below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        let err = parse("nope").unwrap_err();
+        assert!(format!("{err}").contains("invalid digit"));
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: u32) -> crate::Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                crate::bail!("lucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{:?}", f(7).unwrap_err()), "lucky 7");
+    }
+}
