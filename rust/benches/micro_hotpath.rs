@@ -8,6 +8,7 @@ use bucketserve::config::{Policy, SystemConfig};
 use bucketserve::coordinator::batcher::{DynamicBatcher, KvMemoryModel};
 use bucketserve::coordinator::bucket::{BucketManager, QueuedReq};
 use bucketserve::cluster::gpu::CostModel;
+use bucketserve::coordinator::PriorityScorer;
 use bucketserve::util::bench::time_it;
 use bucketserve::util::json::Json;
 use bucketserve::util::rng::Pcg;
@@ -114,6 +115,37 @@ fn main() {
         time_it("form_batch SJF (1024 queued, 1 bucket)", || {
             let mut m = mgr0.clone();
             batcher.form_batch(&mut m, 0, 16_384)
+        })
+        .print();
+    }
+
+    // Priority drain at depth: the intra-bucket sort runs on a
+    // precomputed DrainKey per request (sort_by_cached_key) instead of
+    // re-deriving float scores inside the comparator.
+    {
+        let batcher = DynamicBatcher::new(cfg.model.clone(), &cfg.scheduler)
+            .with_priority(PriorityScorer::new(
+                cfg.priority.clone(),
+                cfg.slo.clone(),
+            ));
+        let mut mgr0 = BucketManager::new(4096, 0.5, 16);
+        let mut rng = Pcg::seeded(7);
+        for i in 0..1024u64 {
+            mgr0.assign(QueuedReq {
+                id: i,
+                len: rng.range(1, 4000) as u32,
+                output_len: rng.range(1, 400) as u32,
+                arrival: i * 1000,
+                class: if i % 3 == 0 {
+                    RequestClass::Online
+                } else {
+                    RequestClass::Offline
+                },
+            });
+        }
+        time_it("form_batch priority (1024 queued, cached key)", || {
+            let mut m = mgr0.clone();
+            batcher.form_batch(&mut m, 5_000_000, 16_384)
         })
         .print();
     }

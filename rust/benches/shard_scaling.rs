@@ -1,0 +1,80 @@
+//! Shard scaling — throughput and SLO attainment vs decode-instance
+//! count, with the coordinator sharded one-scheduler-per-instance.
+//!
+//! Three configurations per fleet size on the same skewed mixed-class
+//! trace (an offline LongBench backlog at t=0 under an online Alpaca
+//! stream, both scaled with the fleet):
+//!
+//! * `global`   — shards = 1: the seed's single global queue + global
+//!   max-headroom scan (the scalability ceiling the refactor removes).
+//! * `sharded`  — one shard per decode instance, hash placement
+//!   (load-blind, so skew lands where it lands), no stealing.
+//! * `sharded+steal` — same, with idle shards stealing the tail of the
+//!   most-loaded shard's highest-urgency bucket at decode-iteration
+//!   boundaries.
+//!
+//! Each row also emits its Summary JSON on stdout (one line per run) so
+//! trajectory tooling can scrape the sweep.
+
+use bucketserve::baselines::System;
+use bucketserve::config::{Placement, SystemConfig};
+use bucketserve::metrics::Summary;
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+
+fn main() {
+    println!("shard_scaling — sharded coordinator vs the global queue\n");
+    let mut t = Table::new(&[
+        "n_decode", "variant", "tok/s", "online SLO", "mean TTFT ms",
+        "steals", "makespan s",
+    ]);
+    for &nd in &[1usize, 2, 4, 8] {
+        let mut base = SystemConfig::default();
+        base.fleet.n_prefill = nd as u32;
+        base.fleet.n_decode = nd as u32;
+        // TTFT budget on the offline-wave scale (see priority_slo).
+        base.slo.ttft_us = 10_000_000;
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca,
+            40 * nd,
+            8.0 * nd as f64,
+            Dataset::LongBench,
+            30 * nd,
+            base.model.max_seq,
+            base.seed,
+        );
+        for (label, shards, placement, steal) in [
+            ("global", 1u32, Placement::LeastLoaded, false),
+            ("sharded", 0, Placement::Hash, false),
+            ("sharded+steal", 0, Placement::Hash, true),
+        ] {
+            let mut cfg = base.clone();
+            cfg.sharding.shards = shards;
+            cfg.sharding.placement = placement;
+            cfg.sharding.steal = steal;
+            let r = System::BucketServe.run_sim(&cfg, &trace);
+            let s = Summary::from_report(
+                &format!("BucketServe/{label}/d{nd}"),
+                &r,
+                &cfg.slo,
+            );
+            println!("{}", s.to_json());
+            t.row(vec![
+                nd.to_string(),
+                label.to_string(),
+                f1(r.throughput_tps()),
+                f2(r.slo_attainment_class(
+                    RequestClass::Online,
+                    cfg.slo.ttft_us,
+                    cfg.slo.tbt_us,
+                )),
+                f1(r.mean_ttft_class_us(RequestClass::Online) / 1e3),
+                r.steals.to_string(),
+                f2(r.makespan_us as f64 / 1e6),
+            ]);
+        }
+    }
+    t.print(
+        "shard scaling: skewed mixed-class trace, work scaled with the fleet",
+    );
+}

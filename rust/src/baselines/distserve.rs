@@ -91,6 +91,27 @@ impl PrefillPlanner for FcfsPlanner {
         self.queue.len()
     }
 
+    fn queued_tokens(&self) -> u64 {
+        self.queue.iter().map(|r| (r.len + r.output_len) as u64).sum()
+    }
+
+    fn steal_tail(&mut self, max_n: usize, _now: Micros) -> Vec<QueuedReq> {
+        // The FIFO tail is the least-urgent end by construction; cap at
+        // half the queue so the donor always keeps the head it would
+        // dispatch next.
+        let take = max_n.min(self.queue.len() / 2);
+        self.queue.split_off(self.queue.len() - take).into_iter().collect()
+    }
+
+    fn absorb(&mut self, reqs: Vec<QueuedReq>, _now: Micros) {
+        // Keep the queue FIFO: stolen requests slot in by arrival, after
+        // any already-queued request that arrived at the same instant.
+        for r in reqs {
+            let pos = self.queue.partition_point(|q| q.arrival <= r.arrival);
+            self.queue.insert(pos, r);
+        }
+    }
+
     fn overhead_ns(&self) -> u64 {
         self.overhead_ns
     }
@@ -107,8 +128,10 @@ impl DistServe {
     }
 
     pub fn run(&self, trace: &Trace, engine: &mut dyn Engine) -> RunReport {
-        let planner = FcfsPlanner::new(&self.cfg);
-        let mut sched = PdScheduler::new(&self.cfg, Box::new(planner));
+        // One FIFO planner per scheduler shard (shards = 1 by default, so
+        // this is the seed's single global queue unless sharding is on).
+        let mut sched =
+            PdScheduler::new(&self.cfg, || Box::new(FcfsPlanner::new(&self.cfg)));
         sched.run(trace, engine)
     }
 }
@@ -147,6 +170,39 @@ mod tests {
         let fb = planner.plan(1000, u64::MAX / 4).unwrap();
         let ids: Vec<u64> = fb.reqs.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn fcfs_steal_and_absorb_preserve_arrival_order() {
+        let cfg = SystemConfig::default();
+        let mut victim = FcfsPlanner::new(&cfg);
+        let mut thief = FcfsPlanner::new(&cfg);
+        for i in 0..8u64 {
+            let r = Request::new(
+                i, crate::workload::RequestClass::Online, 100, 10, i * 100,
+            );
+            victim.admit(&r, i * 100);
+        }
+        // Thief already holds a request that arrived mid-stream.
+        let mid = Request::new(
+            99, crate::workload::RequestClass::Online, 100, 10, 550,
+        );
+        thief.admit(&mid, 550);
+        let stolen = victim.steal_tail(3, 800);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![5, 6, 7],
+            "tail of the FIFO queue"
+        );
+        assert_eq!(victim.queued(), 5);
+        thief.absorb(stolen, 800);
+        let fb = thief.plan(1000, u64::MAX / 4).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![5, 99, 6, 7],
+            "absorbed requests interleave by arrival time"
+        );
+        assert_eq!(victim.queued_tokens(), 5 * 110);
     }
 
     #[test]

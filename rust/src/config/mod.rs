@@ -181,6 +181,63 @@ impl Default for SchedulerSpec {
     }
 }
 
+/// Arrival→shard placement policy for the sharded coordinator
+/// (interpreted by [`crate::coordinator::balance`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Shard with the fewest queued requests (join-shortest-queue).
+    LeastLoaded,
+    /// Shard with the smallest KV commitment: reserved decode tokens
+    /// plus the queued full-context footprint.
+    JoinShortestKv,
+    /// Stateless splitmix hash of the request id (cheapest; relies on
+    /// work-stealing to fix the imbalance it leaves behind).
+    Hash,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Placement {
+        match s.to_ascii_lowercase().as_str() {
+            "kv" | "shortest_kv" | "join_shortest_kv" => Placement::JoinShortestKv,
+            "hash" => Placement::Hash,
+            _ => Placement::LeastLoaded,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::LeastLoaded => "least_loaded",
+            Placement::JoinShortestKv => "join_shortest_kv",
+            Placement::Hash => "hash",
+        }
+    }
+}
+
+/// Coordinator sharding: per-decode-instance scheduler shards, each with
+/// its own bucket queue and KV admission, balanced by work-stealing
+/// (consumed by [`crate::coordinator::shard::ShardSet`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardingSpec {
+    /// Scheduler shard count: 1 = the single global queue (legacy
+    /// behavior, the default), 0 = one shard per decode instance, any
+    /// other value is clamped to `[1, n_decode]` at runtime.
+    pub shards: u32,
+    /// Arrival placement policy (inert with one shard).
+    pub placement: Placement,
+    /// Work-stealing between shards at decode-iteration boundaries.
+    pub steal: bool,
+}
+
+impl Default for ShardingSpec {
+    fn default() -> Self {
+        ShardingSpec {
+            shards: 1,
+            placement: Placement::LeastLoaded,
+            steal: false,
+        }
+    }
+}
+
 /// Priority-aware scheduling knobs (paper §III's SLO-protection layer);
 /// consumed by [`crate::coordinator::priority::PriorityScorer`].
 #[derive(Debug, Clone, PartialEq)]
@@ -234,6 +291,7 @@ pub struct SystemConfig {
     pub gpu: GpuSpec,
     pub fleet: FleetSpec,
     pub scheduler: SchedulerSpec,
+    pub sharding: ShardingSpec,
     pub slo: SloSpec,
     pub priority: PrioritySpec,
     pub seed: u64,
@@ -246,6 +304,7 @@ impl Default for SystemConfig {
             gpu: GpuSpec::a100_40g(),
             fleet: FleetSpec::paper_node(),
             scheduler: SchedulerSpec::default(),
+            sharding: ShardingSpec::default(),
             slo: SloSpec::default(),
             priority: PrioritySpec::default(),
             seed: 42,
@@ -317,6 +376,13 @@ impl SystemConfig {
             if let Some(v) = s.get("min_bucket_width").as_u64() { d.min_bucket_width = v as u32; }
             if let Some(v) = s.get("monitor_window_us").as_u64() { d.monitor_window_us = v; }
         }
+        let sh = j.get("sharding");
+        if !sh.is_null() {
+            let d = &mut c.sharding;
+            if let Some(v) = sh.get("shards").as_u64() { d.shards = v as u32; }
+            if let Some(v) = sh.get("placement").as_str() { d.placement = Placement::parse(v); }
+            if let Some(v) = sh.get("steal").as_bool() { d.steal = v; }
+        }
         let p = j.get("priority");
         if !p.is_null() {
             let d = &mut c.priority;
@@ -348,6 +414,17 @@ impl SystemConfig {
                     if let Ok(x) = v.parse() { self.scheduler.monitor_window_us = x; }
                 }
                 "scheduler.policy" => self.scheduler.policy = Policy::parse(v),
+                "sharding.shards" => set_u32(&mut self.sharding.shards, v),
+                "sharding.placement" => {
+                    self.sharding.placement = Placement::parse(v)
+                }
+                // Boolean: unrecognized values keep the default (a typo
+                // must not silently enable/disable stealing).
+                "sharding.steal" => match v.to_ascii_lowercase().as_str() {
+                    "true" | "1" | "yes" | "on" => self.sharding.steal = true,
+                    "false" | "0" | "no" | "off" => self.sharding.steal = false,
+                    _ => {}
+                },
                 // Like set_f64/set_u32, unrecognized values are ignored
                 // rather than coerced (a typo must not silently disable
                 // the priority subsystem).
@@ -404,6 +481,11 @@ impl SystemConfig {
                 ("policy", Json::from(self.scheduler.policy.name())),
                 ("min_bucket_width", Json::from(self.scheduler.min_bucket_width as u64)),
                 ("monitor_window_us", Json::from(self.scheduler.monitor_window_us)),
+            ])),
+            ("sharding", Json::obj(vec![
+                ("shards", Json::from(self.sharding.shards as u64)),
+                ("placement", Json::from(self.sharding.placement.name())),
+                ("steal", Json::from(self.sharding.steal)),
             ])),
             ("priority", Json::obj(vec![
                 ("enabled", Json::from(self.priority.enabled)),
@@ -517,6 +599,56 @@ mod tests {
         let mut c = SystemConfig::default();
         c.apply_overrides(&args);
         assert!(c.priority.enabled, "unrecognized value keeps the default");
+    }
+
+    #[test]
+    fn sharding_defaults_preserve_legacy_behavior() {
+        let c = SystemConfig::default();
+        assert_eq!(c.sharding.shards, 1, "default is the single global queue");
+        assert!(!c.sharding.steal);
+        assert_eq!(c.sharding.placement, Placement::LeastLoaded);
+    }
+
+    #[test]
+    fn sharding_json_and_cli_overrides() {
+        let j = Json::parse(
+            r#"{"sharding":{"shards":0,"placement":"hash","steal":true}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert_eq!(c.sharding.shards, 0);
+        assert_eq!(c.sharding.placement, Placement::Hash);
+        assert!(c.sharding.steal);
+
+        let args = Args::parse(
+            ["--sharding.shards", "4", "--sharding.placement", "kv",
+             "--sharding.steal", "on"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert_eq!(c.sharding.shards, 4);
+        assert_eq!(c.sharding.placement, Placement::JoinShortestKv);
+        assert!(c.sharding.steal);
+
+        // A typo'd boolean must not flip the steal switch.
+        let args = Args::parse(
+            ["--sharding.steal", "yep"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(!c.sharding.steal);
+    }
+
+    #[test]
+    fn placement_parse() {
+        assert_eq!(Placement::parse("HASH"), Placement::Hash);
+        assert_eq!(Placement::parse("join_shortest_kv"), Placement::JoinShortestKv);
+        assert_eq!(Placement::parse("weird"), Placement::LeastLoaded);
+        for p in [Placement::LeastLoaded, Placement::JoinShortestKv, Placement::Hash] {
+            assert_eq!(Placement::parse(p.name()), p, "name/parse round-trip");
+        }
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Placement and load-balancing policies for the sharded coordinator.
+//!
+//! Three decisions route work through the shard layer, and all three live
+//! here so they can be swapped or extended in one place:
+//!
+//! * **Arrival placement** — [`Router::choose`] maps a new request to a
+//!   shard under the configured [`Placement`] policy (least-loaded queue,
+//!   join-shortest-KV, or a stateless hash). Policies are pure functions
+//!   of the per-shard [`ShardLoad`] snapshot, so adding one is a new
+//!   `Placement` variant plus a match arm — no scheduler changes.
+//! * **Dispatch targeting** — [`best_decode_in`] picks the decode
+//!   instance with the most KV headroom among those a shard owns. With a
+//!   single shard owning the whole fleet this is exactly the seed's
+//!   global `best_target` max-headroom scan (ties keep the highest
+//!   index), which is what makes `shards = 1` behavior-preserving.
+//! * **Steal victim selection** — [`steal_victim`] names the most-loaded
+//!   shard an idle shard should pull from (ties keep the lowest id, so
+//!   rebalancing is deterministic).
+//!
+//! The shard structures themselves live in [`super::shard`]; this module
+//! is intentionally stateless.
+
+use super::fleet::DecodeFleet;
+use crate::config::Placement;
+use crate::workload::RequestId;
+
+/// One shard's load snapshot, as placement policies see it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLoad {
+    /// Requests queued in the shard's planner.
+    pub queued: usize,
+    /// Full-context token footprint of those queued requests.
+    pub queued_tokens: u64,
+    /// KV tokens reserved on the shard's owned decode instances.
+    pub kv_reserved: u64,
+    /// Best single-instance KV headroom among owned decode instances.
+    pub best_headroom: u64,
+}
+
+/// Interprets the configured [`Placement`] policy over load snapshots.
+#[derive(Debug, Clone, Copy)]
+pub struct Router {
+    placement: Placement,
+}
+
+impl Router {
+    pub fn new(placement: Placement) -> Router {
+        Router { placement }
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Shard index for a new arrival. `loads` must be non-empty; ties go
+    /// to the lowest shard id so routing is deterministic.
+    pub fn choose(&self, id: RequestId, loads: &[ShardLoad]) -> usize {
+        debug_assert!(!loads.is_empty());
+        match self.placement {
+            Placement::LeastLoaded => argmin(loads, |l| l.queued as u64),
+            Placement::JoinShortestKv => {
+                argmin(loads, |l| l.kv_reserved.saturating_add(l.queued_tokens))
+            }
+            Placement::Hash => (splitmix64(id) % loads.len() as u64) as usize,
+        }
+    }
+}
+
+/// First index minimizing `key` (strict `<`, so ties keep the lowest id).
+fn argmin(loads: &[ShardLoad], key: impl Fn(&ShardLoad) -> u64) -> usize {
+    let mut best = 0usize;
+    for (i, l) in loads.iter().enumerate().skip(1) {
+        if key(l) < key(&loads[best]) {
+            best = i;
+        }
+    }
+    best
+}
+
+/// SplitMix64 finalizer: spreads sequential request ids uniformly so hash
+/// placement doesn't degenerate to round-robin on monotone ids.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The decode instance with the most KV headroom among `owned`, with that
+/// headroom in tokens. Mirrors the seed's global max-headroom scan
+/// exactly: iterate in ascending index order and keep `>=`, so ties
+/// resolve to the highest owned index. `owned` must be non-empty.
+pub fn best_decode_in(
+    owned: &[usize],
+    decode: &DecodeFleet,
+    per_budget: u64,
+) -> (usize, u64) {
+    debug_assert!(!owned.is_empty());
+    let mut best = (owned[0], 0u64);
+    let mut first = true;
+    for &di in owned {
+        let headroom = per_budget.saturating_sub(decode.get(di).reserved_tokens);
+        if first || headroom >= best.1 {
+            best = (di, headroom);
+            first = false;
+        }
+    }
+    best
+}
+
+/// The shard an idle shard should steal from: most queued requests, ties
+/// to the lowest id, excluding the thief itself. `None` when no other
+/// shard has at least `min_queue` requests.
+pub fn steal_victim(
+    thief: usize,
+    queued: &[usize],
+    min_queue: usize,
+) -> Option<usize> {
+    let mut victim: Option<(usize, usize)> = None;
+    for (i, &q) in queued.iter().enumerate() {
+        if i == thief || q < min_queue {
+            continue;
+        }
+        let better = match victim {
+            None => true,
+            Some((_, vq)) => q > vq,
+        };
+        if better {
+            victim = Some((i, q));
+        }
+    }
+    victim.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(spec: &[(usize, u64, u64)]) -> Vec<ShardLoad> {
+        spec.iter()
+            .map(|&(queued, queued_tokens, kv_reserved)| ShardLoad {
+                queued,
+                queued_tokens,
+                kv_reserved,
+                best_headroom: 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn least_loaded_picks_min_queue_ties_low_id() {
+        let r = Router::new(Placement::LeastLoaded);
+        let l = loads(&[(3, 0, 0), (1, 0, 0), (1, 0, 0), (2, 0, 0)]);
+        assert_eq!(r.choose(0, &l), 1);
+    }
+
+    #[test]
+    fn join_shortest_kv_weighs_reserved_plus_queued_tokens() {
+        let r = Router::new(Placement::JoinShortestKv);
+        // Shard 0 has a short queue but heavy KV commitment; shard 1 wins.
+        let l = loads(&[(1, 5_000, 20_000), (4, 8_000, 1_000)]);
+        assert_eq!(r.choose(0, &l), 1);
+    }
+
+    #[test]
+    fn hash_is_deterministic_in_range_and_spreads() {
+        let r = Router::new(Placement::Hash);
+        let l = loads(&[(0, 0, 0), (0, 0, 0), (0, 0, 0), (0, 0, 0)]);
+        let mut hit = [false; 4];
+        for id in 0..64u64 {
+            let s = r.choose(id, &l);
+            assert!(s < 4);
+            assert_eq!(s, r.choose(id, &l), "deterministic");
+            hit[s] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "64 ids should reach all 4 shards");
+    }
+
+    #[test]
+    fn best_decode_mirrors_seed_best_target() {
+        // Ported from the seed's DecodeFleet::best_target test: max
+        // headroom wins; over-subscribed instances saturate at zero and
+        // ties keep the highest index.
+        let mut f = DecodeFleet::new(3);
+        f.get_mut(0).reserved_tokens = 800;
+        f.get_mut(1).reserved_tokens = 100;
+        f.get_mut(2).reserved_tokens = 500;
+        assert_eq!(best_decode_in(&[0, 1, 2], &f, 1000), (1, 900));
+        assert_eq!(best_decode_in(&[0, 1, 2], &f, 50), (2, 0));
+        // A shard owning a subset scans only its own instances.
+        assert_eq!(best_decode_in(&[0, 2], &f, 1000), (2, 500));
+        assert_eq!(best_decode_in(&[0], &f, 1000), (0, 200));
+    }
+
+    #[test]
+    fn steal_victim_prefers_most_loaded_excluding_thief() {
+        assert_eq!(steal_victim(0, &[9, 4, 7], 2), Some(2));
+        assert_eq!(steal_victim(2, &[4, 4, 0], 2), Some(0), "tie → low id");
+        assert_eq!(steal_victim(1, &[1, 0, 1], 2), None, "below min_queue");
+        assert_eq!(steal_victim(0, &[9], 2), None, "no other shard");
+    }
+}

@@ -136,8 +136,10 @@ impl DynamicBatcher {
     /// [`PriorityScorer::compare`] (first bucket wins ties); for a
     /// single-class queue that degenerates to the legacy earliest-arrival
     /// choice. Otherwise: earliest arrival for FCFS (SLO protection),
-    /// shortest/longest bucket for offline SJF/LJF.
-    fn pick_bucket(&self, mgr: &BucketManager, now: Micros) -> Option<usize> {
+    /// shortest/longest bucket for offline SJF/LJF. `pub(crate)` so the
+    /// work-stealing donor path targets the same bucket the next drain
+    /// would.
+    pub(crate) fn pick_bucket(&self, mgr: &BucketManager, now: Micros) -> Option<usize> {
         if let Some(sc) = self.scorer() {
             return sc.best_position(mgr.buckets(), now).map(|(bi, _)| bi);
         }
@@ -152,6 +154,28 @@ impl DynamicBatcher {
                 .map(|(i, _)| i),
             Policy::Sjf => non_empty.min_by_key(|(i, _)| *i).map(|(i, _)| i),
             Policy::Ljf => non_empty.max_by_key(|(i, _)| *i).map(|(i, _)| i),
+        }
+    }
+
+    /// Put a bucket's queue into drain order: the scorer's canonical
+    /// priority order when it governs (on a precomputed
+    /// [`super::priority::DrainKey`] per request — `sort_by_cached_key`
+    /// pays the float score once per element instead of once per
+    /// comparison), else the policy's intra-bucket ordering (paper §IV):
+    /// SJF / LJF for offline, longest-waiting (earliest arrival) first
+    /// for online. Shared by batch formation and the work-stealing donor
+    /// so the stolen tail is always the *least*-urgent end.
+    pub(crate) fn sort_for_drain(&self, b: &mut super::bucket::Bucket, now: Micros) {
+        if let Some(sc) = self.scorer() {
+            b.requests.sort_by_cached_key(|r| sc.drain_key(r, now));
+        } else {
+            match self.policy {
+                Policy::Fcfs => b.requests.sort_by_key(|r| r.arrival),
+                Policy::Sjf => b.requests.sort_by_key(|r| (r.len, r.arrival)),
+                Policy::Ljf => {
+                    b.requests.sort_by_key(|r| (u32::MAX - r.len, r.arrival))
+                }
+            }
         }
     }
 
@@ -171,22 +195,7 @@ impl DynamicBatcher {
         let idx = self.pick_bucket(mgr, now)?;
         let bucket_up = {
             let b = &mut mgr.buckets_mut()[idx];
-            if let Some(sc) = self.scorer() {
-                // Priority drain: the scorer's canonical order (urgent
-                // first, then score, then arrival — stable, so exact FCFS
-                // within a class).
-                b.requests.sort_by(|x, y| sc.compare(x, y, now));
-            } else {
-                // Intra-bucket ordering (paper §IV): SJF / LJF for offline,
-                // longest-waiting (earliest arrival) first for online.
-                match self.policy {
-                    Policy::Fcfs => b.requests.sort_by_key(|r| r.arrival),
-                    Policy::Sjf => b.requests.sort_by_key(|r| (r.len, r.arrival)),
-                    Policy::Ljf => {
-                        b.requests.sort_by_key(|r| (u32::MAX - r.len, r.arrival))
-                    }
-                }
-            }
+            self.sort_for_drain(b, now);
             b.up
         };
 
@@ -294,7 +303,7 @@ mod tests {
         }
         let b = batcher(Policy::Fcfs, 0);
         // Each request's footprint is 150 tokens; budget 400 admits 2.
-        let fb = b.form_batch(&mut m, 0,400).unwrap();
+        let fb = b.form_batch(&mut m, 0, 400).unwrap();
         assert_eq!(fb.batch.n(), 2);
         assert_eq!(m.total(), 8);
         // Admitted in arrival order.
@@ -309,7 +318,7 @@ mod tests {
             m.assign(req(i, 10, 10, i));
         }
         let b = batcher(Policy::Fcfs, 3);
-        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0, u64::MAX / 4).unwrap();
         assert_eq!(fb.batch.n(), 3);
     }
 
@@ -318,7 +327,7 @@ mod tests {
         let mut m = mgr(1024);
         m.assign(req(0, 100, 50, 0));
         let b = batcher(Policy::Fcfs, 0);
-        assert!(b.form_batch(&mut m, 0,10).is_none());
+        assert!(b.form_batch(&mut m, 0, 10).is_none());
         assert_eq!(m.total(), 1, "request must not be lost");
     }
 
@@ -326,7 +335,7 @@ mod tests {
     fn empty_manager_returns_none() {
         let mut m = mgr(1024);
         let b = batcher(Policy::Fcfs, 0);
-        assert!(b.form_batch(&mut m, 0,1000).is_none());
+        assert!(b.form_batch(&mut m, 0, 1000).is_none());
     }
 
     #[test]
@@ -336,7 +345,7 @@ mod tests {
         m.assign(req(1, 50, 10, 1));
         m.assign(req(2, 200, 10, 2));
         let b = batcher(Policy::Sjf, 0);
-        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0, u64::MAX / 4).unwrap();
         let lens: Vec<u32> = fb.reqs.iter().map(|r| r.len).collect();
         assert_eq!(lens, vec![50, 200, 500]);
     }
@@ -348,7 +357,7 @@ mod tests {
         m.assign(req(1, 500, 10, 1));
         m.assign(req(2, 200, 10, 2));
         let b = batcher(Policy::Ljf, 0);
-        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0, u64::MAX / 4).unwrap();
         let lens: Vec<u32> = fb.reqs.iter().map(|r| r.len).collect();
         assert_eq!(lens, vec![500, 200, 50]);
     }
@@ -366,7 +375,7 @@ mod tests {
         m.adjust(4);
         assert!(m.n_buckets() >= 2);
         let b = batcher(Policy::Fcfs, 0);
-        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0, u64::MAX / 4).unwrap();
         // The long bucket holds the earliest arrivals (0 and 1).
         assert!(fb.reqs.iter().all(|r| r.len == 900));
     }
@@ -377,7 +386,7 @@ mod tests {
         m.assign(req(0, 120, 10, 0));
         m.assign(req(1, 80, 10, 1));
         let b = batcher(Policy::Fcfs, 0);
-        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0, u64::MAX / 4).unwrap();
         // Merged single bucket: pad to the longest member, not L_max.
         assert_eq!(fb.batch.padded_len, 120);
     }
@@ -394,7 +403,7 @@ mod tests {
         m.adjust(4);
         assert!(m.n_buckets() >= 2);
         let b = batcher(Policy::Fcfs, 0);
-        let fb = b.form_batch(&mut m, 0,u64::MAX / 4).unwrap();
+        let fb = b.form_batch(&mut m, 0, u64::MAX / 4).unwrap();
         // FCFS picks the short bucket (earliest arrivals); padded to its
         // batch max (107), well under the bucket bound 512.
         assert_eq!(fb.batch.padded_len, 107);

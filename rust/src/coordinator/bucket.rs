@@ -134,13 +134,13 @@ impl BucketManager {
         if total < n_max.max(1) {
             // Lines 11–13: merge everything back into [0, L_max).
             if self.buckets.len() > 1 {
-                let mut all: Vec<QueuedReq> = Vec::with_capacity(total);
-                for b in &mut self.buckets {
-                    all.append(&mut b.requests);
-                }
-                all.sort_by_key(|r| r.arrival); // preserve FCFS order
+                let runs: Vec<Vec<QueuedReq>> = self
+                    .buckets
+                    .iter_mut()
+                    .map(|b| std::mem::take(&mut b.requests))
+                    .collect();
                 self.buckets = vec![Bucket::new(0, self.l_max)];
-                self.buckets[0].requests = all;
+                self.buckets[0].requests = merge_by_arrival(runs, total);
                 self.merges += 1;
             }
         } else {
@@ -255,13 +255,56 @@ impl BucketManager {
 
     /// Drain every queued request (used on shutdown paths and by tests).
     pub fn drain_all(&mut self) -> Vec<QueuedReq> {
-        let mut all = Vec::with_capacity(self.total());
-        for b in &mut self.buckets {
-            all.append(&mut b.requests);
-        }
-        all.sort_by_key(|r| r.arrival);
-        all
+        let total = self.total();
+        let runs: Vec<Vec<QueuedReq>> = self
+            .buckets
+            .iter_mut()
+            .map(|b| std::mem::take(&mut b.requests))
+            .collect();
+        merge_by_arrival(runs, total)
     }
+}
+
+/// K-way merge of per-bucket queues into one arrival-ordered (FCFS)
+/// queue. Buckets are arrival-ordered by construction — assignment
+/// appends in arrival order, splits and FCFS drains preserve it — so the
+/// merge is `O(n·k)` with tiny `k` instead of the old full `O(n log n)`
+/// re-sort of the concatenation. A run that a policy sort (SJF / LJF /
+/// priority drain) left out of order is normalized first, which is a
+/// no-op `is_sorted` scan on the common path. Ties pop from the
+/// lowest-index run with intra-run order intact — exactly the order the
+/// old concatenate-then-stable-sort produced.
+fn merge_by_arrival(mut runs: Vec<Vec<QueuedReq>>, total: usize) -> Vec<QueuedReq> {
+    for run in &mut runs {
+        if !run.windows(2).all(|w| w[0].arrival <= w[1].arrival) {
+            run.sort_by_key(|r| r.arrival); // stable: intra-run ties keep order
+        }
+    }
+    let mut cursors = vec![0usize; runs.len()];
+    let mut out = Vec::with_capacity(total);
+    for _ in 0..total {
+        let mut best: Option<usize> = None;
+        for (i, run) in runs.iter().enumerate() {
+            if cursors[i] >= run.len() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => run[cursors[i]].arrival < runs[j][cursors[j]].arrival,
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                out.push(runs[i][cursors[i]]);
+                cursors[i] += 1;
+            }
+            None => break,
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -457,6 +500,33 @@ mod tests {
         let mut sorted = arrivals.clone();
         sorted.sort();
         assert_eq!(arrivals, sorted);
+    }
+
+    #[test]
+    fn merge_handles_policy_permuted_runs() {
+        // An SJF/LJF/priority drain can leave a bucket's residue sorted by
+        // length, not arrival; the k-way merge must normalize such runs
+        // and still produce one globally FCFS queue.
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        for i in 0..8 {
+            m.assign(req(i, 100));
+        }
+        for i in 8..12 {
+            m.assign(req(i, 900));
+        }
+        m.adjust(4); // split into short/long buckets
+        assert!(m.n_buckets() >= 2);
+        // Simulate a policy sort: reverse the short bucket's queue.
+        m.buckets_mut()[0].requests.reverse();
+        m.adjust(100); // merge back
+        assert_eq!(m.n_buckets(), 1);
+        let arrivals: Vec<_> =
+            m.buckets()[0].requests.iter().map(|r| r.arrival).collect();
+        let mut sorted = arrivals.clone();
+        sorted.sort();
+        assert_eq!(arrivals, sorted, "merge must restore FCFS order");
+        assert_eq!(m.total(), 12);
+        m.check_invariants().unwrap();
     }
 
     #[test]

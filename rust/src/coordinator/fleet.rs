@@ -158,23 +158,6 @@ impl DecodeFleet {
         self.insts.iter_mut()
     }
 
-    /// Instance with the most KV headroom against `per_budget` tokens,
-    /// with its headroom (prefill batches target this instance). Ties
-    /// keep the highest index — the seed's `max_by_key` behavior — so the
-    /// refactor reproduces its schedules exactly.
-    pub fn best_target(&self, per_budget: u64) -> (usize, u64) {
-        let mut best = (0usize, 0u64);
-        let mut first = true;
-        for (i, d) in self.insts.iter().enumerate() {
-            let headroom = per_budget.saturating_sub(d.reserved_tokens);
-            if first || headroom >= best.1 {
-                best = (i, headroom);
-                first = false;
-            }
-        }
-        best
-    }
-
     /// True when no sequence is active or awaiting admission anywhere
     /// (the memory-deadlock-breaker precondition).
     pub fn nothing_in_flight(&self) -> bool {
@@ -259,15 +242,12 @@ mod tests {
     }
 
     #[test]
-    fn best_target_picks_max_headroom() {
+    fn in_flight_tracking() {
+        // Headroom targeting moved to coordinator::balance (see
+        // best_decode_mirrors_seed_best_target there); the fleet keeps
+        // only the in-flight bookkeeping.
         let mut f = DecodeFleet::new(3);
         f.get_mut(0).reserved_tokens = 800;
-        f.get_mut(1).reserved_tokens = 100;
-        f.get_mut(2).reserved_tokens = 500;
-        assert_eq!(f.best_target(1000), (1, 900));
-        // Over-subscribed instances saturate at zero headroom; ties keep
-        // the highest index (seed max_by_key behavior).
-        assert_eq!(f.best_target(50), (2, 0));
         assert!(f.nothing_in_flight());
         f.get_mut(2).pending.push(seq(9, 0));
         assert!(!f.nothing_in_flight());

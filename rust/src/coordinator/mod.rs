@@ -13,30 +13,41 @@
 //!   pops in timestamp order.
 //! * [`fleet`] — instance state machines: prefill busy slots and decode
 //!   continuous-batching instances with KV reservations.
-//! * [`monitor`] — the Global Monitor: sliding-window system metrics that
-//!   feed the batcher and scheduler.
+//! * [`shard`] — per-decode-instance scheduler shards: each owns its own
+//!   bucket queue, KV admission, and priority state; work-stealing pulls
+//!   backlog onto idle shards at decode-iteration boundaries.
+//! * [`balance`] — the placement layer: arrival→shard routing policies
+//!   (least-loaded / join-shortest-KV / hash), per-shard decode
+//!   targeting, and steal-victim selection.
+//! * [`monitor`] — the Global Monitor: per-shard sliding-window metrics
+//!   aggregated into the system view that feeds the batcher and
+//!   scheduler.
 //! * [`scheduler`] — the thin P/D orchestrator shared by BucketServe and
 //!   the disaggregated baseline: pops events, dispatches to the fleet,
-//!   plans batches through the [`PrefillPlanner`] plug-in.
+//!   plans batches through per-shard [`PrefillPlanner`] plug-ins.
 //!
 //! [`BucketServe`] ties them together behind a single façade used by the
 //! CLI, the examples, and every figure bench.
 
 pub mod bucket;
 pub mod batcher;
+pub mod balance;
 pub mod events;
 pub mod fleet;
 pub mod monitor;
 pub mod priority;
 pub mod scheduler;
+pub mod shard;
 
 pub use bucket::{Bucket, BucketManager};
 pub use batcher::{DynamicBatcher, KvMemoryModel};
+pub use balance::{Router, ShardLoad};
 pub use events::{Event, EventKind, EventQueue};
 pub use fleet::{DecodeFleet, PrefillFleet};
-pub use monitor::GlobalMonitor;
+pub use monitor::{GlobalMonitor, MonitorView, ShardView};
 pub use priority::PriorityScorer;
 pub use scheduler::{PdScheduler, RunReport, PrefillPlanner};
+pub use shard::{SchedulerShard, ShardSet, ShardStats};
 
 use crate::cluster::Engine;
 use crate::config::SystemConfig;
@@ -52,10 +63,12 @@ impl BucketServe {
         BucketServe { cfg }
     }
 
-    /// Serve a trace on `engine`, returning the full run report.
+    /// Serve a trace on `engine`, returning the full run report. Each
+    /// scheduler shard gets its own bucket planner.
     pub fn run(&self, trace: &Trace, engine: &mut dyn Engine) -> RunReport {
-        let planner = scheduler::BucketPlanner::new(&self.cfg);
-        let mut sched = PdScheduler::new(&self.cfg, Box::new(planner));
+        let mut sched = PdScheduler::new(&self.cfg, || {
+            Box::new(scheduler::BucketPlanner::new(&self.cfg))
+        });
         sched.run(trace, engine)
     }
 

@@ -1,13 +1,47 @@
 //! Global Monitor (paper §III): sliding-window system metrics.
 //!
-//! Aggregates GPU memory pressure, queue lengths, arrival rate, mean
-//! sequence length, and batch latency, and feeds them to the Dynamic
-//! Batching Controller (N_max estimation) and the P/D scheduler (queue
-//! statistics). All windows are driven by the run's clock (virtual or
-//! wall), so simulated and real runs share the code.
+//! Since the coordinator sharding refactor the monitor is an
+//! **aggregation over per-shard monitors**: each scheduler shard tracks
+//! its own arrival window, queue depth, and KV accounting against its own
+//! token budget, and [`GlobalMonitor::view`] folds them into the same
+//! system-wide [`MonitorView`] the Dynamic Batching Controller and the
+//! P/D scheduler always consumed, plus a [`ShardView`] per shard (KV
+//! pressure, queue depth, arrival rate) for placement debugging and the
+//! shard-scaling bench. Batch latency and the decode active count are
+//! engine-side quantities, tracked globally. All windows are driven by
+//! the run's clock (virtual or wall), so simulated and real runs share
+//! the code.
 
 use crate::util::stats::{Online, RateWindow};
 use crate::Micros;
+
+/// One shard's slice of the monitor state.
+#[derive(Debug)]
+struct ShardMonitor {
+    arrivals: RateWindow,
+    prefill_queue: usize,
+    kv_tokens_in_use: u64,
+    kv_token_budget: u64,
+}
+
+/// Per-shard load snapshot surfaced in [`MonitorView::shards`].
+#[derive(Debug, Clone, Default)]
+pub struct ShardView {
+    pub arrival_rps: f64,
+    pub queue_depth: usize,
+    pub kv_tokens_in_use: u64,
+    pub kv_token_budget: u64,
+}
+
+impl ShardView {
+    /// KV pressure of this shard in [0,1].
+    pub fn pressure(&self) -> f64 {
+        if self.kv_token_budget == 0 {
+            return 1.0;
+        }
+        self.kv_tokens_in_use as f64 / self.kv_token_budget as f64
+    }
+}
 
 /// Snapshot handed to the batching controller / scheduler.
 #[derive(Debug, Clone, Default)]
@@ -19,6 +53,8 @@ pub struct MonitorView {
     pub decode_active: usize,
     pub kv_tokens_in_use: u64,
     pub kv_token_budget: u64,
+    /// Per-shard load views (one entry when unsharded).
+    pub shards: Vec<ShardView>,
 }
 
 impl MonitorView {
@@ -36,41 +72,64 @@ impl MonitorView {
     }
 }
 
-/// The Global Monitor.
+/// The Global Monitor: per-shard trackers plus system-wide aggregates.
 #[derive(Debug)]
 pub struct GlobalMonitor {
-    arrivals: RateWindow,
+    shards: Vec<ShardMonitor>,
     input_len: Online,
     batch_latency: Online,
-    prefill_queue: usize,
     decode_active: usize,
-    kv_tokens_in_use: u64,
-    kv_token_budget: u64,
 }
 
 impl GlobalMonitor {
+    /// Unsharded constructor: one shard owning the whole budget.
     /// `window_us`: the arrival-rate estimation window (paper uses
     /// real-time views; 10 s keeps estimates stable at low RPS).
     pub fn new(window_us: Micros, kv_token_budget: u64) -> GlobalMonitor {
+        GlobalMonitor::sharded(window_us, &[kv_token_budget])
+    }
+
+    /// One monitor slice per scheduler shard, each with its own KV token
+    /// budget (the sum is the fleet budget the aggregate view reports).
+    pub fn sharded(window_us: Micros, shard_budgets: &[u64]) -> GlobalMonitor {
+        assert!(!shard_budgets.is_empty());
         GlobalMonitor {
-            arrivals: RateWindow::new(window_us),
+            shards: shard_budgets
+                .iter()
+                .map(|&b| ShardMonitor {
+                    arrivals: RateWindow::new(window_us),
+                    prefill_queue: 0,
+                    kv_tokens_in_use: 0,
+                    kv_token_budget: b,
+                })
+                .collect(),
             input_len: Online::new(),
             batch_latency: Online::new(),
-            prefill_queue: 0,
             decode_active: 0,
-            kv_tokens_in_use: 0,
-            kv_token_budget,
         }
     }
 
-    pub fn on_arrival(&mut self, now: Micros, input_len: u32) {
-        self.arrivals.record(now);
-        self.input_len.push(input_len as f64);
-        self.prefill_queue += 1;
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
     }
 
-    pub fn on_prefill_dispatch(&mut self, n: usize) {
-        self.prefill_queue = self.prefill_queue.saturating_sub(n);
+    pub fn on_arrival(&mut self, shard: usize, now: Micros, input_len: u32) {
+        let s = &mut self.shards[shard];
+        s.arrivals.record(now);
+        s.prefill_queue += 1;
+        self.input_len.push(input_len as f64);
+    }
+
+    pub fn on_prefill_dispatch(&mut self, shard: usize, n: usize) {
+        let s = &mut self.shards[shard];
+        s.prefill_queue = s.prefill_queue.saturating_sub(n);
+    }
+
+    /// Work-stealing moved `n` queued requests from `from` to `to`.
+    pub fn on_steal(&mut self, from: usize, to: usize, n: usize) {
+        self.shards[from].prefill_queue =
+            self.shards[from].prefill_queue.saturating_sub(n);
+        self.shards[to].prefill_queue += n;
     }
 
     pub fn on_batch_done(&mut self, latency_us: Micros) {
@@ -85,24 +144,37 @@ impl GlobalMonitor {
         self.decode_active = self.decode_active.saturating_sub(n);
     }
 
-    /// KV accounting: reserve a request's full-context footprint.
-    pub fn kv_reserve(&mut self, tokens: u64) {
-        self.kv_tokens_in_use += tokens;
+    /// KV accounting: reserve a request's full-context footprint against
+    /// the shard fronting the target decode instance.
+    pub fn kv_reserve(&mut self, shard: usize, tokens: u64) {
+        self.shards[shard].kv_tokens_in_use += tokens;
     }
 
-    pub fn kv_release(&mut self, tokens: u64) {
-        self.kv_tokens_in_use = self.kv_tokens_in_use.saturating_sub(tokens);
+    pub fn kv_release(&mut self, shard: usize, tokens: u64) {
+        let s = &mut self.shards[shard];
+        s.kv_tokens_in_use = s.kv_tokens_in_use.saturating_sub(tokens);
     }
 
     pub fn view(&mut self, now: Micros) -> MonitorView {
+        let shards: Vec<ShardView> = self
+            .shards
+            .iter_mut()
+            .map(|s| ShardView {
+                arrival_rps: s.arrivals.rate(now),
+                queue_depth: s.prefill_queue,
+                kv_tokens_in_use: s.kv_tokens_in_use,
+                kv_token_budget: s.kv_token_budget,
+            })
+            .collect();
         MonitorView {
-            arrival_rps: self.arrivals.rate(now),
+            arrival_rps: shards.iter().map(|s| s.arrival_rps).sum(),
             mean_input_len: self.input_len.mean(),
             mean_batch_latency_us: self.batch_latency.mean(),
-            prefill_queue: self.prefill_queue,
+            prefill_queue: shards.iter().map(|s| s.queue_depth).sum(),
             decode_active: self.decode_active,
-            kv_tokens_in_use: self.kv_tokens_in_use,
-            kv_token_budget: self.kv_token_budget,
+            kv_tokens_in_use: shards.iter().map(|s| s.kv_tokens_in_use).sum(),
+            kv_token_budget: shards.iter().map(|s| s.kv_token_budget).sum(),
+            shards,
         }
     }
 }
@@ -115,20 +187,22 @@ mod tests {
     fn tracks_arrivals_and_lengths() {
         let mut m = GlobalMonitor::new(1_000_000, 1000);
         for i in 0..10 {
-            m.on_arrival(i * 100_000, 100 + i as u32);
+            m.on_arrival(0, i * 100_000, 100 + i as u32);
         }
         let v = m.view(1_000_000);
         assert!(v.arrival_rps > 5.0);
         assert!((v.mean_input_len - 104.5).abs() < 1e-9);
         assert_eq!(v.prefill_queue, 10);
+        assert_eq!(v.shards.len(), 1);
+        assert_eq!(v.shards[0].queue_depth, 10);
     }
 
     #[test]
     fn kv_accounting_saturates() {
         let mut m = GlobalMonitor::new(1_000_000, 1000);
-        m.kv_reserve(600);
+        m.kv_reserve(0, 600);
         assert_eq!(m.view(0).kv_headroom(), 400);
-        m.kv_release(10_000); // over-release clamps at zero
+        m.kv_release(0, 10_000); // over-release clamps at zero
         assert_eq!(m.view(0).kv_tokens_in_use, 0);
         assert_eq!(m.view(0).kv_headroom(), 1000);
     }
@@ -137,17 +211,55 @@ mod tests {
     fn pressure_bounds() {
         let mut m = GlobalMonitor::new(1_000_000, 100);
         assert_eq!(m.view(0).pressure(), 0.0);
-        m.kv_reserve(100);
+        m.kv_reserve(0, 100);
         assert_eq!(m.view(0).pressure(), 1.0);
     }
 
     #[test]
     fn queue_counters_saturate() {
         let mut m = GlobalMonitor::new(1_000_000, 100);
-        m.on_prefill_dispatch(5); // more than queued
+        m.on_prefill_dispatch(0, 5); // more than queued
         assert_eq!(m.view(0).prefill_queue, 0);
         m.on_decode_enter(3);
         m.on_decode_exit(5);
         assert_eq!(m.view(0).decode_active, 0);
+    }
+
+    #[test]
+    fn sharded_view_aggregates_and_exposes_per_shard() {
+        let mut m = GlobalMonitor::sharded(1_000_000, &[600, 400]);
+        assert_eq!(m.n_shards(), 2);
+        for i in 0..6 {
+            m.on_arrival(0, i * 100_000, 100);
+        }
+        for i in 0..2 {
+            m.on_arrival(1, i * 100_000, 200);
+        }
+        m.kv_reserve(0, 300);
+        m.kv_reserve(1, 400);
+        let v = m.view(1_000_000);
+        assert_eq!(v.prefill_queue, 8);
+        assert_eq!(v.kv_tokens_in_use, 700);
+        assert_eq!(v.kv_token_budget, 1000);
+        assert_eq!(v.shards[0].queue_depth, 6);
+        assert_eq!(v.shards[1].queue_depth, 2);
+        assert!((v.shards[1].pressure() - 1.0).abs() < 1e-12);
+        assert!(v.shards[0].pressure() < 1.0);
+        assert!(v.arrival_rps > v.shards[1].arrival_rps);
+        // Mean input length is a global aggregate: (6·100 + 2·200) / 8.
+        assert!((v.mean_input_len - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steal_moves_queue_depth_between_shards() {
+        let mut m = GlobalMonitor::sharded(1_000_000, &[500, 500]);
+        for i in 0..6 {
+            m.on_arrival(0, i, 10);
+        }
+        m.on_steal(0, 1, 4);
+        let v = m.view(10);
+        assert_eq!(v.shards[0].queue_depth, 2);
+        assert_eq!(v.shards[1].queue_depth, 4);
+        assert_eq!(v.prefill_queue, 6, "stealing must not change the total");
     }
 }

@@ -86,6 +86,22 @@ impl PriorityScorer {
             .then(a.arrival.cmp(&b.arrival))
     }
 
+    /// Precomputed drain key: a *stable* ascending sort on it reproduces
+    /// the old stable `sort_by(compare)` exactly — urgent first, then
+    /// score descending, then arrival, ties keeping queue order — while
+    /// paying the float score computation once per request instead of
+    /// once per comparison (`sort_by_cached_key` in the batcher's drain).
+    /// Deliberately *no* id tie-break: the old comparator left full ties
+    /// in queue order, and matching it bit-for-bit is what keeps the
+    /// sharding refactor's `shards = 1` schedules byte-identical.
+    pub fn drain_key(&self, r: &QueuedReq, now: Micros) -> DrainKey {
+        DrainKey {
+            not_urgent: !self.is_urgent(r, now),
+            neg_score_bits: !f64_total_bits(self.score(r, now)),
+            arrival: r.arrival,
+        }
+    }
+
     /// Position `(bucket, index)` of the highest-ranked queued request
     /// across `buckets` under [`PriorityScorer::compare`] (first match
     /// wins ties). Shared by bucket selection and the deadlock-break
@@ -114,6 +130,34 @@ impl PriorityScorer {
 
     pub fn spec(&self) -> &PrioritySpec {
         &self.spec
+    }
+}
+
+/// The precomputed drain-sort key (see [`PriorityScorer::drain_key`]).
+/// Field order *is* the comparison order, so the derived `Ord` is the
+/// canonical drain order; full ties rely on sort stability, mirroring
+/// [`PriorityScorer::compare`]'s `Ordering::Equal`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DrainKey {
+    /// `!is_urgent`, so urgent requests sort first.
+    not_urgent: bool,
+    /// Bit-inverted total-order image of the score (higher score first).
+    neg_score_bits: u64,
+    arrival: Micros,
+}
+
+/// Monotone map from `f64` to `u64`: for any non-NaN floats `a < b ⇔
+/// f64_total_bits(a) < f64_total_bits(b)` (the IEEE-754 total-order bit
+/// trick: flip all bits of negatives, flip only the sign bit of
+/// non-negatives). Scores are finite and positive for every sane
+/// [`PrioritySpec`], so this agrees exactly with the `partial_cmp` the
+/// per-comparison path in [`PriorityScorer::compare`] uses.
+fn f64_total_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
     }
 }
 
@@ -212,6 +256,55 @@ mod tests {
                 "urgency vs slack mismatch at now={now}"
             );
         }
+    }
+
+    #[test]
+    fn f64_total_bits_is_monotone() {
+        let xs = [-1e30, -2.5, -1.0, -1e-9, 0.0, 1e-9, 0.1, 1.0, 2.5, 1e30];
+        for w in xs.windows(2) {
+            assert!(
+                f64_total_bits(w[0]) < f64_total_bits(w[1]),
+                "bits order broken between {} and {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert_eq!(f64_total_bits(1.5), f64_total_bits(1.5));
+    }
+
+    #[test]
+    fn prop_drain_key_order_matches_compare() {
+        // The precomputed Ord key must rank any pair exactly as the
+        // per-comparison path does (modulo the id tail, which only breaks
+        // ties compare() leaves Equal).
+        crate::util::prop::check("drain key ≡ compare", 300, |g| {
+            let s = scorer();
+            let now = g.u64(0, 3_000_000);
+            let mk = |g: &mut crate::util::prop::Gen, id: u64| QueuedReq {
+                id,
+                len: g.u64(1, 4000) as u32,
+                output_len: g.u64(1, 400) as u32,
+                arrival: g.u64(0, 3_000_000),
+                class: if g.bool() {
+                    RequestClass::Online
+                } else {
+                    RequestClass::Offline
+                },
+            };
+            let a = mk(g, 0);
+            let b = mk(g, 1);
+            let (ka, kb) = (s.drain_key(&a, now), s.drain_key(&b, now));
+            match s.compare(&a, &b, now) {
+                Ordering::Less => assert!(ka < kb, "{a:?} vs {b:?} at {now}"),
+                Ordering::Greater => assert!(ka > kb, "{a:?} vs {b:?} at {now}"),
+                // Full ties map to equal keys: both the old comparator
+                // sort and the cached-key sort are stable, so equal keys
+                // preserve queue order identically.
+                Ordering::Equal => {
+                    assert_eq!(ka, kb, "tie must map to equal keys")
+                }
+            }
+        });
     }
 
     #[test]

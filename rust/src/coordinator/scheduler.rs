@@ -5,14 +5,19 @@
 //! continuous (iteration-level) batching, against any [`Engine`]:
 //!
 //! ```text
-//! arrivals ─▶ planner (buckets / priority / FCFS) ─▶ prefill workers ─▶
-//!          NVLink ─▶ decode instances (continuous batching) ─▶ completions
+//! arrivals ─▶ placement ─▶ shard planners (buckets / priority / FCFS) ─▶
+//!     prefill workers ─▶ NVLink ─▶ decode instances (continuous
+//!     batching, one owner shard each) ─▶ completions
 //! ```
 //!
 //! The loop is event-driven: [`PdScheduler::run`] pops typed events off a
 //! [`EventQueue`] (arrivals, prefill completions, hand-off landings,
 //! decode iteration boundaries), advances the clock, and dispatches to the
-//! fleet state machines in [`super::fleet`]. In virtual time this is a
+//! fleet state machines in [`super::fleet`]. Scheduling state is sharded
+//! per decode instance ([`super::shard`]): arrivals route to a shard via
+//! the [`super::balance`] placement policy, each shard plans against its
+//! own decode instances' KV budgets, and work-stealing rebalances queues
+//! at decode-iteration boundaries. In virtual time this is a
 //! discrete-event simulation ([`crate::cluster::sim::SimEngine`]); the
 //! *same* code path runs in wall time for [`crate::runtime::PjrtEngine`]
 //! (blocking engine calls; sleeps until arrivals). BucketServe and the
@@ -25,6 +30,7 @@ use super::events::{Event, EventKind, EventQueue};
 use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
 use super::monitor::GlobalMonitor;
 use super::priority::PriorityScorer;
+use super::shard::ShardSet;
 use crate::cluster::{DecodeBatch, DecodeSeq, Engine, PrefillBatch, PrefillItem};
 use crate::config::SystemConfig;
 use crate::workload::request::Completion;
@@ -53,6 +59,22 @@ pub trait PrefillPlanner {
 
     /// Requests currently queued.
     fn queued(&self) -> usize;
+
+    /// Full-context (prompt + expected generation) token footprint of the
+    /// queued requests — what KV-aware placement weighs a shard by.
+    fn queued_tokens(&self) -> u64;
+
+    /// Work-stealing donor side: give up to `max_n` queued requests from
+    /// the *tail* of the drain order (the least-urgent end of the queue
+    /// segment the next `plan` would serve), preserving their relative
+    /// order. Implementations must never surrender the head half of that
+    /// segment — the donor keeps what it was about to dispatch, so a
+    /// steal can move backlog but never the most urgent work.
+    fn steal_tail(&mut self, max_n: usize, now: Micros) -> Vec<QueuedReq>;
+
+    /// Work-stealing thief side: absorb requests stolen from another
+    /// shard's planner, as if they had been admitted here originally.
+    fn absorb(&mut self, reqs: Vec<QueuedReq>, now: Micros);
 
     /// Cumulative planning overhead (ns) — bucketing cost for Fig. 6.
     fn overhead_ns(&self) -> u64;
@@ -168,6 +190,40 @@ impl PrefillPlanner for BucketPlanner {
         self.mgr.total()
     }
 
+    fn queued_tokens(&self) -> u64 {
+        self.mgr
+            .buckets()
+            .iter()
+            .flat_map(|b| b.requests.iter())
+            .map(|r| (r.len + r.output_len) as u64)
+            .sum()
+    }
+
+    fn steal_tail(&mut self, max_n: usize, now: Micros) -> Vec<QueuedReq> {
+        if max_n == 0 {
+            return Vec::new();
+        }
+        // Same bucket the next drain would serve (highest-urgency bucket
+        // under the scorer, policy order otherwise), same drain sort —
+        // so the stolen tail is exactly the work the donor would have
+        // served last. Capped at half the bucket so the urgent head
+        // always stays with the donor (a one-request bucket yields
+        // nothing; rebalance just skips the move).
+        let Some(idx) = self.batcher.pick_bucket(&self.mgr, now) else {
+            return Vec::new();
+        };
+        let b = &mut self.mgr.buckets_mut()[idx];
+        self.batcher.sort_for_drain(b, now);
+        let take = max_n.min(b.requests.len() / 2);
+        b.requests.split_off(b.requests.len() - take)
+    }
+
+    fn absorb(&mut self, reqs: Vec<QueuedReq>, _now: Micros) {
+        for r in reqs {
+            self.mgr.assign(r);
+        }
+    }
+
     fn overhead_ns(&self) -> u64 {
         self.mgr.overhead_ns
     }
@@ -203,6 +259,14 @@ pub struct RunReport {
     pub prefill_exec_request_us: u64,
     /// Σ per-request queueing delay before prefill dispatch.
     pub queue_wait_us: u64,
+    /// Scheduler shards the run used (1 = the unsharded global queue).
+    pub n_shards: usize,
+    /// Requests migrated between shards by work-stealing.
+    pub steals: u64,
+    /// Per-shard arrivals routed by the placement policy.
+    pub shard_routed: Vec<u64>,
+    /// Per-shard prefill batches dispatched.
+    pub shard_batches: Vec<u64>,
     /// Set when the run ended abnormally (scheduler stall / livelock
     /// guard); carries the diagnostics the old panic printed. Completions
     /// gathered before the stall are still reported.
@@ -340,18 +404,24 @@ impl RunReport {
 // ---------------------------------------------------------------------------
 
 /// The P/D scheduler: a thin orchestrator that pops events and dispatches
-/// to the fleet state machines; engine-agnostic.
+/// to the fleet state machines; engine-agnostic. Scheduling state lives
+/// in per-decode-instance shards ([`ShardSet`]); the planner `factory` is
+/// invoked once per shard so every shard owns independent queue state.
 pub struct PdScheduler {
     cfg: SystemConfig,
-    planner: Box<dyn PrefillPlanner>,
+    shards: ShardSet,
     monitor: GlobalMonitor,
 }
 
 impl PdScheduler {
-    pub fn new(cfg: &SystemConfig, planner: Box<dyn PrefillPlanner>) -> PdScheduler {
+    pub fn new(
+        cfg: &SystemConfig,
+        factory: impl FnMut() -> Box<dyn PrefillPlanner>,
+    ) -> PdScheduler {
+        let n_decode = cfg.fleet.n_decode.max(1) as usize;
         PdScheduler {
             cfg: cfg.clone(),
-            planner,
+            shards: ShardSet::new(&cfg.sharding, n_decode, factory),
             monitor: GlobalMonitor::new(cfg.scheduler.monitor_window_us, 0),
         }
     }
@@ -368,9 +438,17 @@ impl PdScheduler {
             self.cfg.scheduler.mem_safety,
         );
         let per_decode_budget = mem.token_budget(engine.decode_mem_budget());
-        self.monitor = GlobalMonitor::new(
+        let n_shards = self.shards.n();
+        // Each shard monitors KV against the budget of the decode
+        // instances it fronts; the aggregate view sums to the fleet total.
+        let shard_budgets: Vec<u64> = (0..n_shards)
+            .map(|si| {
+                per_decode_budget * self.shards.get(si).owned.len() as u64
+            })
+            .collect();
+        self.monitor = GlobalMonitor::sharded(
             self.cfg.scheduler.monitor_window_us,
-            per_decode_budget * self.cfg.fleet.n_decode as u64,
+            &shard_budgets,
         );
         let n_prefill = self.cfg.fleet.n_prefill.max(1) as usize;
         let n_decode = self.cfg.fleet.n_decode.max(1) as usize;
@@ -379,13 +457,18 @@ impl PdScheduler {
         let realtime = engine.realtime();
 
         let mut core = RunCore {
-            planner: self.planner.as_mut(),
+            shards: &mut self.shards,
             monitor: &mut self.monitor,
             engine,
             events: EventQueue::new(),
             prefill: PrefillFleet::new(n_prefill),
             decode: DecodeFleet::new(n_decode),
-            report: RunReport { n_prefill, n_decode, ..Default::default() },
+            report: RunReport {
+                n_prefill,
+                n_decode,
+                n_shards,
+                ..Default::default()
+            },
             clock: 0,
             next_arrival: 0,
             total: trace.len(),
@@ -423,8 +506,13 @@ impl PdScheduler {
         }
 
         let mut report = core.report;
-        report.bucket_overhead_ns = self.planner.overhead_ns();
-        report.max_buckets = report.max_buckets.max(self.planner.n_buckets());
+        for shard in self.shards.iter() {
+            report.bucket_overhead_ns += shard.planner.overhead_ns();
+            report.max_buckets =
+                report.max_buckets.max(shard.planner.n_buckets());
+            report.shard_routed.push(shard.stats.routed);
+            report.shard_batches.push(shard.stats.batches);
+        }
         if let Some(last) = report.completions.iter().map(|c| c.finished).max() {
             report.makespan_us = report.makespan_us.max(last);
         }
@@ -434,12 +522,17 @@ impl PdScheduler {
     pub fn monitor(&mut self) -> &mut GlobalMonitor {
         &mut self.monitor
     }
+
+    /// The shard layer (inspection/tests).
+    pub fn shards(&self) -> &ShardSet {
+        &self.shards
+    }
 }
 
 /// Mutable run state threaded through the event handlers; split out of
 /// [`PdScheduler`] so `run` stays a thin pop-and-dispatch loop.
 struct RunCore<'a> {
-    planner: &'a mut dyn PrefillPlanner,
+    shards: &'a mut ShardSet,
     monitor: &'a mut GlobalMonitor,
     engine: &'a mut dyn Engine,
     events: EventQueue,
@@ -476,7 +569,13 @@ impl<'a> RunCore<'a> {
         match ev.kind {
             EventKind::Arrival => self.on_arrival(trace),
             EventKind::PrefillDone { instance } => self.on_prefill_done(instance),
-            EventKind::DecodeIterEnd { decode } => self.on_decode_iter_end(decode),
+            EventKind::DecodeIterEnd { decode } => {
+                self.on_decode_iter_end(decode);
+                // Decode-iteration boundaries are the work-stealing
+                // cadence: freed KV is when an idle shard can absorb a
+                // loaded shard's backlog. No-op unless sharded + enabled.
+                self.rebalance_shards();
+            }
             EventKind::HandoffReady { decode } => {
                 // Pure wake-up: admission happens in admit_handoffs.
                 self.decode.get_mut(decode).wake_at = None;
@@ -484,14 +583,16 @@ impl<'a> RunCore<'a> {
         }
     }
 
-    /// Admit every trace arrival due by now, then schedule the next one.
+    /// Admit every trace arrival due by now (each routed to a shard by
+    /// the placement policy), then schedule the next one.
     fn on_arrival(&mut self, trace: &Trace) {
         while self.next_arrival < self.total
             && trace.requests[self.next_arrival].arrival <= self.clock
         {
             let r = &trace.requests[self.next_arrival];
-            self.planner.admit(r, self.clock);
-            self.monitor.on_arrival(self.clock, r.input_len);
+            let si = self.shards.route(r.id, &self.decode, self.per_decode_budget);
+            self.shards.get_mut(si).planner.admit(r, self.clock);
+            self.monitor.on_arrival(si, self.clock, r.input_len);
             self.next_arrival += 1;
         }
         if self.next_arrival < self.total {
@@ -499,6 +600,20 @@ impl<'a> RunCore<'a> {
                 trace.requests[self.next_arrival].arrival,
                 EventKind::Arrival,
             );
+        }
+    }
+
+    /// Run a work-stealing pass and mirror any moves into the monitor's
+    /// per-shard queue depths and the run report.
+    fn rebalance_shards(&mut self) {
+        let moves = self.shards.rebalance(
+            self.clock,
+            &self.decode,
+            self.per_decode_budget,
+        );
+        for (from, to, n) in moves {
+            self.monitor.on_steal(from, to, n);
+            self.report.steals += n as u64;
         }
     }
 
@@ -541,6 +656,7 @@ impl<'a> RunCore<'a> {
     /// Decode iteration boundary: count the generated token, complete
     /// finished sequences, release their KV reservations.
     fn on_decode_iter_end(&mut self, di: usize) {
+        let shard = self.shards.owner_of(di);
         let d = self.decode.get_mut(di);
         let ended = matches!(d.iter_end, Some(t) if t <= self.clock);
         if !ended {
@@ -553,7 +669,7 @@ impl<'a> RunCore<'a> {
             if s.generated >= s.output_len {
                 let footprint = (s.input_len + s.output_len) as u64;
                 d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
-                self.monitor.kv_release(footprint);
+                self.monitor.kv_release(shard, footprint);
                 self.monitor.on_decode_exit(1);
                 self.engine.release(s.id);
                 self.report.completions.push(Completion {
@@ -584,24 +700,44 @@ impl<'a> RunCore<'a> {
         }
     }
 
-    /// Form and dispatch prefill batches onto idle instances, targeting
-    /// the decode instance with the most KV headroom (Eq. 6 admission).
+    /// Form and dispatch prefill batches onto idle instances. The shard
+    /// layer supplies the candidates: shards in descending order of their
+    /// best owned decode instance's KV headroom (Eq. 6 admission), each
+    /// paired with that target instance. The first shard whose planner
+    /// yields a batch wins; with one shard this is exactly the seed's
+    /// global max-headroom `best_target` scan.
     fn dispatch_prefill(&mut self) {
         for pi in 0..self.prefill.n() {
             if !self.prefill.is_idle(pi) {
                 continue;
             }
-            let (ti, headroom) = self.decode.best_target(self.per_decode_budget);
-            let formed = match self.planner.plan(self.clock, headroom) {
-                Some(f) => Some(f),
-                None => {
-                    // Deadlock breaker: nothing anywhere in flight and a
-                    // head request alone exceeds even an idle budget.
-                    let nothing_in_flight = !self.prefill.any_running()
-                        && self.decode.nothing_in_flight();
-                    if nothing_in_flight && self.planner.queued() > 0 {
-                        self.planner.force_pop(self.clock).map(|r| {
-                            let padded = r.len.max(1);
+            let order = self
+                .shards
+                .dispatch_order(&self.decode, self.per_decode_budget);
+            let mut chosen: Option<(usize, usize, FormedBatch)> = None;
+            for &(si, ti, headroom) in &order {
+                if let Some(f) =
+                    self.shards.get_mut(si).planner.plan(self.clock, headroom)
+                {
+                    chosen = Some((si, ti, f));
+                    break;
+                }
+            }
+            if chosen.is_none() {
+                // Deadlock breaker: nothing anywhere in flight and a head
+                // request alone exceeds even an idle budget — pop one
+                // solo from the first candidate shard with queued work.
+                let nothing_in_flight = !self.prefill.any_running()
+                    && self.decode.nothing_in_flight();
+                if nothing_in_flight && self.shards.queued_total() > 0 {
+                    for &(si, ti, _) in &order {
+                        let popped =
+                            self.shards.get_mut(si).planner.force_pop(self.clock);
+                        let Some(r) = popped else { continue };
+                        let padded = r.len.max(1);
+                        chosen = Some((
+                            si,
+                            ti,
                             FormedBatch {
                                 batch: PrefillBatch {
                                     items: vec![PrefillItem {
@@ -613,22 +749,22 @@ impl<'a> RunCore<'a> {
                                 },
                                 reqs: vec![r],
                                 bucket_up: padded,
-                            }
-                        })
-                    } else {
-                        None
+                            },
+                        ));
+                        break;
                     }
                 }
-            };
-            let Some(formed) = formed else { break };
+            }
+            let Some((si, ti, formed)) = chosen else { break };
             let footprint: u64 = formed
                 .reqs
                 .iter()
                 .map(|r| (r.len + r.output_len) as u64)
                 .sum();
             self.decode.get_mut(ti).reserved_tokens += footprint;
-            self.monitor.kv_reserve(footprint);
-            self.monitor.on_prefill_dispatch(formed.reqs.len());
+            self.monitor.kv_reserve(si, footprint);
+            self.monitor.on_prefill_dispatch(si, formed.reqs.len());
+            self.shards.get_mut(si).stats.batches += 1;
             let duration = self
                 .engine
                 .prefill(&formed.batch)
@@ -732,7 +868,7 @@ impl<'a> RunCore<'a> {
             self.clock,
             self.report.completions.len(),
             self.total,
-            self.planner.queued(),
+            self.shards.queued_total(),
             self.next_arrival,
             self.prefill.running_mask(),
             self.decode
@@ -766,8 +902,7 @@ mod tests {
     }
 
     fn run_bucketserve(cfg: &SystemConfig, trace: &Trace) -> RunReport {
-        let planner = BucketPlanner::new(cfg);
-        let mut sched = PdScheduler::new(cfg, Box::new(planner));
+        let mut sched = PdScheduler::new(cfg, || Box::new(BucketPlanner::new(cfg)));
         let mut engine = SimEngine::new(cfg);
         sched.run(trace, &mut engine)
     }
@@ -964,6 +1099,108 @@ mod tests {
         assert_eq!(on.makespan_us, off.makespan_us);
         assert_eq!(on.prefill_batches, off.prefill_batches);
         assert_eq!(on.decode_iters, off.decode_iters);
+    }
+
+    #[test]
+    fn sharded_run_completes_and_conserves() {
+        // One shard per decode instance, hash placement (deliberately
+        // load-blind) and stealing on: every request still completes
+        // exactly once and the shard accounting adds up.
+        use crate::config::Placement;
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.n_prefill = 4;
+        cfg.fleet.n_decode = 4;
+        cfg.sharding.shards = 0; // one per decode instance
+        cfg.sharding.placement = Placement::Hash;
+        cfg.sharding.steal = true;
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 60, 16.0, Dataset::LongBench, 40,
+            cfg.model.max_seq, 31,
+        );
+        let report = run_bucketserve(&cfg, &trace);
+        assert_eq!(report.completions.len(), trace.len());
+        assert!(report.error.is_none(), "{:?}", report.error);
+        let mut ids: Vec<_> = report.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "duplicated completions");
+        assert_eq!(report.n_shards, 4);
+        assert_eq!(
+            report.shard_routed.iter().sum::<u64>(),
+            trace.len() as u64,
+            "every arrival routed to exactly one shard"
+        );
+        assert_eq!(
+            report.shard_batches.len(),
+            4,
+            "per-shard batch counters reported"
+        );
+        // Hash placement spreads a 100-request trace across 4 shards.
+        assert!(
+            report.shard_routed.iter().filter(|&&n| n > 0).count() >= 2,
+            "hash placement landed everything on one shard: {:?}",
+            report.shard_routed
+        );
+    }
+
+    #[test]
+    fn sharded_runs_match_for_each_placement_policy() {
+        // All placement policies must conserve requests and finish clean;
+        // they may schedule differently, but totals agree.
+        use crate::config::Placement;
+        for placement in
+            [Placement::LeastLoaded, Placement::JoinShortestKv, Placement::Hash]
+        {
+            let mut cfg = SystemConfig::default();
+            cfg.fleet.n_prefill = 2;
+            cfg.fleet.n_decode = 2;
+            cfg.sharding.shards = 0;
+            cfg.sharding.placement = placement;
+            let trace = Trace::generate(
+                Dataset::Mixed, 50, 12.0, RequestClass::Online,
+                cfg.model.max_seq, 19,
+            );
+            let report = run_bucketserve(&cfg, &trace);
+            assert_eq!(
+                report.completions.len(),
+                50,
+                "{} lost requests",
+                placement.name()
+            );
+            assert!(report.error.is_none(), "{:?}", report.error);
+        }
+    }
+
+    #[test]
+    fn work_stealing_rebalances_skewed_queues() {
+        // Hash placement on a mixed trace leaves shards with uneven work;
+        // with stealing enabled some requests must migrate, and the run
+        // must stay lossless.
+        use crate::config::Placement;
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.n_prefill = 2;
+        cfg.fleet.n_decode = 4;
+        cfg.sharding.shards = 0;
+        cfg.sharding.placement = Placement::Hash;
+        cfg.sharding.steal = true;
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 40, 8.0, Dataset::LongBench, 60,
+            cfg.model.max_seq, 77,
+        );
+        let stolen = run_bucketserve(&cfg, &trace);
+        assert_eq!(stolen.completions.len(), trace.len());
+        assert!(
+            stolen.steals > 0,
+            "skewed offline backlog should trigger stealing"
+        );
+        cfg.sharding.steal = false;
+        let fixed = run_bucketserve(&cfg, &trace);
+        assert_eq!(fixed.completions.len(), trace.len());
+        assert_eq!(fixed.steals, 0, "steal=false must never migrate work");
+        // Whether stealing helps end-to-end is workload-dependent (the
+        // shard_scaling bench quantifies it); correctness-wise both runs
+        // must finish clean.
+        assert!(fixed.error.is_none() && stolen.error.is_none());
     }
 
     #[test]

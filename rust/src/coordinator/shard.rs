@@ -1,0 +1,501 @@
+//! Scheduler shards: per-decode-instance scheduling state.
+//!
+//! The seed funneled every decision through one global bucket queue and
+//! one global max-headroom scan. This module splits the coordinator into
+//! **N shards, one per decode instance** (or any coarser grouping): each
+//! [`SchedulerShard`] owns its own planner — bucket manager, dynamic
+//! batcher admitting against the shard's KV budget, and priority state —
+//! plus the slice of decode instances it fronts. The pieces compose as:
+//!
+//! ```text
+//! arrival ─▶ Router (balance.rs) ─▶ shard queue ─▶ plan() ─▶ owned decode
+//!                 ▲                      │
+//!                 └── work-stealing ◀────┘  (idle shard pulls the tail of
+//!                      at decode-iteration   the most-loaded shard's
+//!                      boundaries            highest-urgency bucket)
+//! ```
+//!
+//! With `sharding.shards = 1` (the default) a single shard owns the whole
+//! decode fleet and every path reduces to the seed's global behavior
+//! exactly; with one shard per decode instance the scheduler has no
+//! global scans left on the dispatch path, which is what makes a
+//! one-thread-per-shard executor a mechanical follow-up.
+//!
+//! Placement and victim-selection policy live in [`super::balance`]; the
+//! serving loop drives shards from [`super::scheduler`].
+
+use super::balance::{self, Router, ShardLoad};
+use super::fleet::DecodeFleet;
+use super::scheduler::PrefillPlanner;
+use crate::config::{Placement, ShardingSpec};
+use crate::workload::RequestId;
+use crate::Micros;
+
+/// Per-shard counters surfaced in `RunReport` / Summary JSON.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardStats {
+    /// Arrivals the placement policy routed here.
+    pub routed: u64,
+    /// Requests pulled in by work-stealing.
+    pub stolen_in: u64,
+    /// Requests other shards stole from here.
+    pub stolen_out: u64,
+    /// Prefill batches dispatched from this shard's queue.
+    pub batches: u64,
+}
+
+/// One scheduler shard: a planner plus the decode instances it fronts.
+pub struct SchedulerShard {
+    pub planner: Box<dyn PrefillPlanner>,
+    /// Decode instances this shard targets (stride partition of the
+    /// fleet: instance `d` belongs to shard `d % n_shards`).
+    pub owned: Vec<usize>,
+    pub stats: ShardStats,
+}
+
+/// The shard collection plus the balancing configuration.
+pub struct ShardSet {
+    shards: Vec<SchedulerShard>,
+    router: Router,
+    steal: bool,
+    /// Decode instance → owning shard.
+    owner: Vec<usize>,
+}
+
+impl ShardSet {
+    /// Build shards per `spec` over a fleet of `n_decode` decode
+    /// instances, constructing one planner per shard via `factory`.
+    /// `spec.shards == 0` means one shard per decode instance; any value
+    /// clamps to `[1, n_decode]` (a shard owning no decode instance could
+    /// never dispatch).
+    pub fn new(
+        spec: &ShardingSpec,
+        n_decode: usize,
+        mut factory: impl FnMut() -> Box<dyn PrefillPlanner>,
+    ) -> ShardSet {
+        let n_decode = n_decode.max(1);
+        let n = if spec.shards == 0 {
+            n_decode
+        } else {
+            (spec.shards as usize).min(n_decode)
+        };
+        let shards = (0..n)
+            .map(|i| SchedulerShard {
+                planner: factory(),
+                owned: (0..n_decode).filter(|d| d % n == i).collect(),
+                stats: ShardStats::default(),
+            })
+            .collect();
+        ShardSet {
+            shards,
+            router: Router::new(spec.placement),
+            steal: spec.steal,
+            owner: (0..n_decode).map(|d| d % n).collect(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard fronting decode instance `di`.
+    pub fn owner_of(&self, di: usize) -> usize {
+        self.owner[di]
+    }
+
+    pub fn get(&self, si: usize) -> &SchedulerShard {
+        &self.shards[si]
+    }
+
+    pub fn get_mut(&mut self, si: usize) -> &mut SchedulerShard {
+        &mut self.shards[si]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, SchedulerShard> {
+        self.shards.iter()
+    }
+
+    /// Requests queued across every shard.
+    pub fn queued_total(&self) -> usize {
+        self.shards.iter().map(|s| s.planner.queued()).sum()
+    }
+
+    /// Work-stealing is active (configured on and more than one shard).
+    pub fn steal_enabled(&self) -> bool {
+        self.steal && self.shards.len() > 1
+    }
+
+    /// Route one arrival: the placement policy picks the shard, the
+    /// caller admits into its planner. Single-shard fast path skips the
+    /// load snapshot entirely; multi-shard paths compute only the load
+    /// fields the active policy reads (this runs once per arrival, and
+    /// `queued_tokens` is an O(queue) walk per shard that only
+    /// join-shortest-KV is willing to pay for).
+    pub fn route(
+        &mut self,
+        id: RequestId,
+        decode: &DecodeFleet,
+        per_budget: u64,
+    ) -> usize {
+        let si = if self.shards.len() == 1 {
+            0
+        } else {
+            let placement = self.router.placement();
+            let loads: Vec<ShardLoad> = self
+                .shards
+                .iter()
+                .map(|s| {
+                    let mut l = ShardLoad::default();
+                    match placement {
+                        Placement::Hash => {}
+                        Placement::LeastLoaded => l.queued = s.planner.queued(),
+                        Placement::JoinShortestKv => {
+                            l.queued_tokens = s.planner.queued_tokens();
+                            l.kv_reserved = s
+                                .owned
+                                .iter()
+                                .map(|&d| decode.get(d).reserved_tokens)
+                                .sum();
+                        }
+                    }
+                    l
+                })
+                .collect();
+            self.router.choose(id, &loads)
+        };
+        self.shards[si].stats.routed += 1;
+        si
+    }
+
+    /// Full per-shard load snapshots (monitoring / debugging — the
+    /// routing hot path builds policy-trimmed snapshots instead).
+    pub fn loads(&self, decode: &DecodeFleet, per_budget: u64) -> Vec<ShardLoad> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let (_, best_headroom) =
+                    balance::best_decode_in(&s.owned, decode, per_budget);
+                ShardLoad {
+                    queued: s.planner.queued(),
+                    queued_tokens: s.planner.queued_tokens(),
+                    kv_reserved: s
+                        .owned
+                        .iter()
+                        .map(|&d| decode.get(d).reserved_tokens)
+                        .sum(),
+                    best_headroom,
+                }
+            })
+            .collect()
+    }
+
+    /// Shards in dispatch-preference order for an idle prefill worker:
+    /// descending best-owned-decode headroom, shard id breaking ties.
+    /// Each entry carries the shard, its target decode instance, and that
+    /// instance's headroom — `RunCore::dispatch_prefill` tries them in
+    /// order until a shard's planner yields a batch. With one shard this
+    /// is exactly the seed's single global `best_target` scan.
+    pub fn dispatch_order(
+        &self,
+        decode: &DecodeFleet,
+        per_budget: u64,
+    ) -> Vec<(usize, usize, u64)> {
+        let mut order: Vec<(usize, usize, u64)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(si, s)| {
+                let (ti, headroom) =
+                    balance::best_decode_in(&s.owned, decode, per_budget);
+                (si, ti, headroom)
+            })
+            .collect();
+        order.sort_by(|a, b| b.2.cmp(&a.2).then(a.0.cmp(&b.0)));
+        order
+    }
+
+    /// Work-stealing pass, run at decode-iteration boundaries: every
+    /// shard with an empty queue and free KV pulls up to half of the
+    /// most-loaded shard's queue — specifically the *tail* of its
+    /// highest-urgency bucket, never more than half of that bucket, so
+    /// the victim keeps the urgent head it would drain next and the
+    /// thief absorbs backlog. Returns the moves as `(victim, thief, n)`
+    /// so the caller can update monitors. No-op unless stealing is
+    /// enabled and there are at least two shards.
+    pub fn rebalance(
+        &mut self,
+        now: Micros,
+        decode: &DecodeFleet,
+        per_budget: u64,
+    ) -> Vec<(usize, usize, usize)> {
+        if !self.steal_enabled() {
+            return Vec::new();
+        }
+        let mut moves = Vec::new();
+        for thief in 0..self.shards.len() {
+            if self.shards[thief].planner.queued() > 0 {
+                continue;
+            }
+            let (_, headroom) = balance::best_decode_in(
+                &self.shards[thief].owned,
+                decode,
+                per_budget,
+            );
+            if headroom == 0 {
+                continue; // nowhere to put stolen work anyway
+            }
+            let queued: Vec<usize> =
+                self.shards.iter().map(|s| s.planner.queued()).collect();
+            let Some(victim) = balance::steal_victim(thief, &queued, 2) else {
+                continue;
+            };
+            let want = queued[victim] / 2;
+            let stolen = self.shards[victim].planner.steal_tail(want, now);
+            let n = stolen.len();
+            if n == 0 {
+                continue;
+            }
+            self.shards[victim].stats.stolen_out += n as u64;
+            self.shards[thief].stats.stolen_in += n as u64;
+            self.shards[thief].planner.absorb(stolen, now);
+            moves.push((victim, thief, n));
+        }
+        moves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Placement, SystemConfig};
+    use crate::coordinator::scheduler::BucketPlanner;
+    use crate::util::prop;
+    use crate::workload::{Request, RequestClass};
+
+    fn planner(cfg: &SystemConfig) -> Box<dyn PrefillPlanner> {
+        Box::new(BucketPlanner::new(cfg))
+    }
+
+    fn req(id: u64, len: u32, arrival: Micros) -> Request {
+        Request::new(id, RequestClass::Online, len, 10, arrival)
+    }
+
+    #[test]
+    fn shard_count_resolution_and_ownership() {
+        let cfg = SystemConfig::default();
+        let mut spec = ShardingSpec::default();
+        // Default: one shard owning every decode instance.
+        let set = ShardSet::new(&spec, 4, || planner(&cfg));
+        assert_eq!(set.n(), 1);
+        assert_eq!(set.get(0).owned, vec![0, 1, 2, 3]);
+        // 0 = one shard per decode instance (stride partition).
+        spec.shards = 0;
+        let set = ShardSet::new(&spec, 4, || planner(&cfg));
+        assert_eq!(set.n(), 4);
+        for d in 0..4 {
+            assert_eq!(set.owner_of(d), d);
+            assert_eq!(set.get(d).owned, vec![d]);
+        }
+        // Coarser than the fleet: stride ownership, every decode covered.
+        spec.shards = 2;
+        let set = ShardSet::new(&spec, 5, || planner(&cfg));
+        assert_eq!(set.n(), 2);
+        assert_eq!(set.get(0).owned, vec![0, 2, 4]);
+        assert_eq!(set.get(1).owned, vec![1, 3]);
+        assert_eq!(set.owner_of(3), 1);
+        // More shards than decode instances clamps down.
+        spec.shards = 8;
+        let set = ShardSet::new(&spec, 2, || planner(&cfg));
+        assert_eq!(set.n(), 2);
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { placement: Placement::Hash, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 3, || planner(&cfg));
+        let decode = DecodeFleet::new(3);
+        for id in 0..10u64 {
+            assert_eq!(set.route(id, &decode, 1000), 0);
+        }
+        assert_eq!(set.get(0).stats.routed, 10);
+    }
+
+    #[test]
+    fn least_loaded_routing_balances_queue_depth() {
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 2, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let decode = DecodeFleet::new(2);
+        for id in 0..8u64 {
+            let si = set.route(id, &decode, 10_000);
+            let r = req(id, 100, id);
+            set.get_mut(si).planner.admit(&r, id);
+        }
+        assert_eq!(set.get(0).planner.queued(), 4);
+        assert_eq!(set.get(1).planner.queued(), 4);
+        assert_eq!(set.queued_total(), 8);
+    }
+
+    #[test]
+    fn idle_shard_steals_half_the_loaded_shards_queue() {
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 2, steal: true, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let decode = DecodeFleet::new(2);
+        for id in 0..10u64 {
+            let r = req(id, 100, id);
+            set.get_mut(0).planner.admit(&r, id);
+        }
+        let moves = set.rebalance(100, &decode, 10_000);
+        assert_eq!(moves, vec![(0, 1, 5)]);
+        assert_eq!(set.get(0).planner.queued(), 5);
+        assert_eq!(set.get(1).planner.queued(), 5);
+        assert_eq!(set.get(0).stats.stolen_out, 5);
+        assert_eq!(set.get(1).stats.stolen_in, 5);
+        // The victim keeps the head of the drain order (earliest
+        // arrivals); the thief got the tail.
+        let fb = set.get_mut(0).planner.plan(100, u64::MAX / 4).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn stealing_respects_gates() {
+        let cfg = SystemConfig::default();
+        // Disabled: no moves even with skew.
+        let spec = ShardingSpec { shards: 2, steal: false, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let decode = DecodeFleet::new(2);
+        for id in 0..6u64 {
+            let r = req(id, 100, id);
+            set.get_mut(0).planner.admit(&r, id);
+        }
+        assert!(set.rebalance(10, &decode, 10_000).is_empty());
+        // Enabled but the thief has zero KV headroom: still no move.
+        let spec = ShardingSpec { shards: 2, steal: true, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let mut decode = DecodeFleet::new(2);
+        for id in 0..6u64 {
+            let r = req(id, 100, id);
+            set.get_mut(0).planner.admit(&r, id);
+        }
+        decode.get_mut(1).reserved_tokens = 10_000; // thief's instance full
+        assert!(set.rebalance(10, &decode, 10_000).is_empty());
+        // Victim below the minimum queue: nothing worth moving.
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let decode = DecodeFleet::new(2);
+        let r = req(0, 100, 0);
+        set.get_mut(0).planner.admit(&r, 0);
+        assert!(set.rebalance(10, &decode, 10_000).is_empty());
+    }
+
+    #[test]
+    fn dispatch_order_prefers_headroom_then_shard_id() {
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 0, ..Default::default() };
+        let set = ShardSet::new(&spec, 3, || planner(&cfg));
+        let mut decode = DecodeFleet::new(3);
+        decode.get_mut(0).reserved_tokens = 500;
+        decode.get_mut(1).reserved_tokens = 100;
+        decode.get_mut(2).reserved_tokens = 100;
+        let order = set.dispatch_order(&decode, 1000);
+        // Shards 1 and 2 tie at 900 headroom → shard id order; shard 0 last.
+        assert_eq!(order, vec![(1, 1, 900), (2, 2, 900), (0, 0, 500)]);
+    }
+
+    #[test]
+    fn prop_sharded_planner_conserves_requests() {
+        // The sharded mirror of PR 1's planner-conservation property:
+        // every admitted request survives any interleaving of routing,
+        // draining, force-pops, and work-stealing, and is drained exactly
+        // once across all shards.
+        prop::check("sharded route/steal/drain conserves requests", 40, |g| {
+            let mut cfg = SystemConfig::default();
+            cfg.priority.enabled = g.bool();
+            let n_decode = g.usize(1, 4);
+            let spec = ShardingSpec {
+                shards: g.usize(0, 4) as u32,
+                placement: *g.pick(&[
+                    Placement::LeastLoaded,
+                    Placement::JoinShortestKv,
+                    Placement::Hash,
+                ]),
+                steal: true,
+            };
+            let mut set = ShardSet::new(&spec, n_decode, || planner(&cfg));
+            let mut decode = DecodeFleet::new(n_decode);
+            let per_budget = g.u64(1_000, 50_000);
+            let mut admitted = 0u64;
+            let mut drained: Vec<u64> = Vec::new();
+            let mut now: Micros = 0;
+            let n_ops = g.usize(1, 100);
+            for _ in 0..n_ops {
+                now += g.u64(0, 50_000);
+                match g.usize(0, 9) {
+                    0..=4 => {
+                        let r = Request::new(
+                            admitted,
+                            if g.bool() {
+                                RequestClass::Online
+                            } else {
+                                RequestClass::Offline
+                            },
+                            g.u64(1, 4000) as u32,
+                            g.u64(1, 400) as u32,
+                            now,
+                        );
+                        let si = set.route(r.id, &decode, per_budget);
+                        set.get_mut(si).planner.admit(&r, now);
+                        admitted += 1;
+                    }
+                    5..=7 => {
+                        let si = g.usize(0, set.n() - 1);
+                        let budget = g.u64(0, 20_000);
+                        if let Some(fb) =
+                            set.get_mut(si).planner.plan(now, budget)
+                        {
+                            drained.extend(fb.reqs.iter().map(|r| r.id));
+                        }
+                    }
+                    8 => {
+                        // Perturb decode load, then steal.
+                        for d in 0..n_decode {
+                            decode.get_mut(d).reserved_tokens =
+                                g.u64(0, per_budget + 1000);
+                        }
+                        set.rebalance(now, &decode, per_budget);
+                    }
+                    _ => {
+                        let si = g.usize(0, set.n() - 1);
+                        if let Some(r) = set.get_mut(si).planner.force_pop(now)
+                        {
+                            drained.push(r.id);
+                        }
+                    }
+                }
+            }
+            // Drain everything left, shard by shard.
+            for si in 0..set.n() {
+                while let Some(fb) =
+                    set.get_mut(si).planner.plan(now, u64::MAX / 4)
+                {
+                    drained.extend(fb.reqs.iter().map(|r| r.id));
+                    now += 1;
+                }
+                while let Some(r) = set.get_mut(si).planner.force_pop(now) {
+                    drained.push(r.id);
+                }
+            }
+            assert_eq!(set.queued_total(), 0);
+            drained.sort();
+            assert_eq!(
+                drained,
+                (0..admitted).collect::<Vec<_>>(),
+                "requests lost or duplicated across shards"
+            );
+        });
+    }
+}

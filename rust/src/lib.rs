@@ -15,8 +15,8 @@
 //!   DESIGN.md §2).
 //! * [`cluster`] — the simulated GPU cluster substrate: an A100 roofline
 //!   cost model, NVLink transfer model, and the discrete-event engine.
-//! * [`coordinator`] — **the paper's contribution**, an event-driven
-//!   scheduling core in seven modules:
+//! * [`coordinator`] — **the paper's contribution**, an event-driven,
+//!   sharded scheduling core in nine modules:
 //!   [`coordinator::bucket`] (Request Bucketing Manager, Algorithm 1),
 //!   [`coordinator::batcher`] (Dynamic Batching Controller, Eqs. 1–6),
 //!   [`coordinator::priority`] (SLO-deadline urgency scoring: online TTFT
@@ -25,7 +25,12 @@
 //!   in timestamp order),
 //!   [`coordinator::fleet`] (prefill/decode instance state machines with
 //!   KV reservations),
-//!   [`coordinator::monitor`] (Global Monitor sliding-window metrics), and
+//!   [`coordinator::shard`] (per-decode-instance scheduler shards with
+//!   work-stealing),
+//!   [`coordinator::balance`] (arrival placement and load-balancing
+//!   policies),
+//!   [`coordinator::monitor`] (Global Monitor: per-shard sliding-window
+//!   metrics, aggregated), and
 //!   [`coordinator::scheduler`] (the thin P/D orchestrator + the
 //!   [`coordinator::PrefillPlanner`] plug-in point the baselines reuse).
 //! * [`runtime`] — the PJRT runtime that loads `artifacts/*.hlo.txt`

@@ -227,6 +227,9 @@ USAGE:
 
 Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
                   --fleet.n_prefill 2 --fleet.n_decode 2 --seed 42
-                  --slo.ttft_us 400000 --slo.tbt_us 100000"
+                  --slo.ttft_us 400000 --slo.tbt_us 100000
+                  --sharding.shards 0|N (0 = one per decode instance)
+                  --sharding.placement least_loaded|kv|hash
+                  --sharding.steal on|off"
     );
 }

@@ -32,6 +32,12 @@ pub struct Summary {
     pub peak_batch: usize,
     pub max_buckets: usize,
     pub bucket_overhead_ms: f64,
+    /// Scheduler shards the run used (1 = the unsharded global queue).
+    pub n_shards: usize,
+    /// Requests migrated between shards by work-stealing.
+    pub steals: u64,
+    /// Per-shard arrivals routed by the placement policy.
+    pub shard_routed: Vec<u64>,
     /// Abnormal-termination diagnostics from the run (scheduler stall);
     /// a summary carrying this must not be read as a clean result.
     pub error: Option<String>,
@@ -79,6 +85,9 @@ impl Summary {
             peak_batch: r.peak_batch,
             max_buckets: r.max_buckets,
             bucket_overhead_ms: r.bucket_overhead_ns as f64 / 1e6,
+            n_shards: r.n_shards.max(1),
+            steals: r.steals,
+            shard_routed: r.shard_routed.clone(),
             error: r.error.clone(),
         }
     }
@@ -107,6 +116,19 @@ impl Summary {
             ("max_buckets", Json::from(self.max_buckets)),
             ("bucket_overhead_ms", Json::num(self.bucket_overhead_ms)),
         ];
+        // Sharding block only when sharding is actually on: a default
+        // (shards = 1) run's Summary JSON stays byte-identical to the
+        // pre-sharding scheduler's output.
+        if self.n_shards > 1 {
+            fields.push(("n_shards", Json::from(self.n_shards)));
+            fields.push(("steals", Json::from(self.steals)));
+            fields.push((
+                "shard_routed",
+                Json::Arr(
+                    self.shard_routed.iter().map(|&n| Json::from(n)).collect(),
+                ),
+            ));
+        }
         if let Some(e) = &self.error {
             fields.push(("error", Json::from(e.as_str())));
         }
@@ -145,6 +167,36 @@ mod tests {
         assert!((0.0..=1.0).contains(&s.slo_offline));
         assert!(!parsed.get("slo_online").is_null());
         assert!(!parsed.get("slo_offline").is_null());
+    }
+
+    #[test]
+    fn sharding_block_only_when_sharded() {
+        let cfg = SystemConfig::default();
+        let trace =
+            Trace::batch(Dataset::Alpaca, 20, RequestClass::Offline, 4096, 5);
+        // Default config: single shard → no sharding keys in the JSON.
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert_eq!(r.n_shards, 1);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let j = s.to_json();
+        assert!(j.get("n_shards").is_null());
+        assert!(j.get("steals").is_null());
+        assert!(j.get("shard_routed").is_null());
+        // Sharded run: the block appears and is parseable.
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.n_decode = 2;
+        cfg.sharding.shards = 0;
+        cfg.sharding.steal = true;
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert_eq!(r.n_shards, 2);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("n_shards").as_usize(), Some(2));
+        assert!(!parsed.get("steals").is_null());
+        let routed = parsed.get("shard_routed").as_arr().unwrap();
+        assert_eq!(routed.len(), 2);
+        let total: u64 = routed.iter().filter_map(|v| v.as_u64()).sum();
+        assert_eq!(total, 20);
     }
 
     #[test]
