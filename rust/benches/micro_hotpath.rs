@@ -150,6 +150,69 @@ fn main() {
         .print();
     }
 
+    // Preemption checkpoint/restore hot path: victim selection over a
+    // loaded decode instance, then the full evict cycle (selection +
+    // checkpoint + requeue into a bucket manager). Runs inside the
+    // scheduler's event loop when enabled, so it must stay well under
+    // the per-event budget.
+    {
+        use bucketserve::coordinator::fleet::DecodeSeqState;
+        use bucketserve::coordinator::preempt::PreemptionEngine;
+        let mut spec = cfg.preempt.clone();
+        spec.enabled = true;
+        spec.max_evictions = 8;
+        let engine = PreemptionEngine::new(
+            spec.clone(),
+            cfg.priority.clone(),
+            cfg.slo.clone(),
+        );
+        let mut rng = Pcg::seeded(11);
+        let active: Vec<DecodeSeqState> = (0..64u64)
+            .map(|i| DecodeSeqState {
+                id: i,
+                class: RequestClass::Offline,
+                arrival: i * 1000,
+                input_len: rng.range(100, 3000) as u32,
+                padded_len: 4096,
+                output_len: rng.range(50, 400) as u32,
+                generated: rng.range(1, 40) as u32,
+                first_token: i * 1000 + 500,
+                ready_at: 0,
+            })
+            .collect();
+        time_it("preempt: pick_decode_victims (64 active)", || {
+            engine.pick_decode_victims(&active, 6_000, 10_000_000)
+        })
+        .print();
+        // Engine and empty manager hoisted out of the closure: the
+        // measured body is only what the scheduler's event loop runs —
+        // victim selection, checkpoint, requeue-assign, and the restore
+        // lookup the recompute prefill pays later. take_restore also
+        // keeps the checkpoint map bounded across iterations.
+        let mut eng = PreemptionEngine::new(
+            spec.clone(),
+            cfg.priority.clone(),
+            cfg.slo.clone(),
+        );
+        let mgr0 = BucketManager::new(4096, 0.5, 16);
+        time_it("preempt: evict+restore cycle (8 victims)", || {
+            let mut mgr = mgr0.clone();
+            let victims = eng.pick_decode_victims(&active, 6_000, 10_000_000);
+            for id in &victims {
+                let s = active.iter().find(|s| s.id == *id).unwrap();
+                let entry = eng.checkpoint_seq(s);
+                mgr.assign(entry);
+            }
+            for id in &victims {
+                eng.take_restore(*id);
+            }
+            victims.len()
+        })
+        .print();
+        // Isolate the (empty) manager clone cost to subtract mentally.
+        time_it("  (manager clone baseline)", || mgr0.clone().total()).print();
+    }
+
     // Gateway JSON parse (TCP protocol hot path).
     {
         let line = r#"{"op":"req","input_len":182,"output_len":96,"class":"online","arrival":123456}"#;

@@ -11,7 +11,9 @@ use crate::cluster::{PrefillBatch, PrefillItem};
 use crate::config::SystemConfig;
 use crate::coordinator::batcher::FormedBatch;
 use crate::coordinator::bucket::QueuedReq;
-use crate::coordinator::scheduler::{PdScheduler, PrefillPlanner, RunReport};
+use crate::coordinator::scheduler::{
+    kv_capped_take, oldest_online_in, PdScheduler, PrefillPlanner, RunReport,
+};
 use crate::cluster::Engine;
 use crate::workload::{Request, Trace};
 use crate::Micros;
@@ -58,7 +60,7 @@ impl PrefillPlanner for FcfsPlanner {
             if take >= self.max_batch {
                 break;
             }
-            let footprint = (r.len + r.output_len) as u64;
+            let footprint = r.footprint();
             if acc + footprint > headroom_tokens {
                 break;
             }
@@ -92,14 +94,21 @@ impl PrefillPlanner for FcfsPlanner {
     }
 
     fn queued_tokens(&self) -> u64 {
-        self.queue.iter().map(|r| (r.len + r.output_len) as u64).sum()
+        self.queue.iter().map(QueuedReq::footprint).sum()
     }
 
-    fn steal_tail(&mut self, max_n: usize, _now: Micros) -> Vec<QueuedReq> {
+    fn steal_tail(
+        &mut self,
+        max_n: usize,
+        max_tokens: u64,
+        _now: Micros,
+    ) -> Vec<QueuedReq> {
         // The FIFO tail is the least-urgent end by construction; cap at
         // half the queue so the donor always keeps the head it would
-        // dispatch next.
-        let take = max_n.min(self.queue.len() / 2);
+        // dispatch next, and at `max_tokens` of full-context footprint so
+        // the thief is never handed more than its KV headroom can admit.
+        let cap = max_n.min(self.queue.len() / 2);
+        let take = kv_capped_take(self.queue.iter().rev().take(cap), max_tokens);
         self.queue.split_off(self.queue.len() - take).into_iter().collect()
     }
 
@@ -110,6 +119,16 @@ impl PrefillPlanner for FcfsPlanner {
             let pos = self.queue.partition_point(|q| q.arrival <= r.arrival);
             self.queue.insert(pos, r);
         }
+    }
+
+    fn oldest_online(&self) -> Option<QueuedReq> {
+        oldest_online_in(self.queue.iter())
+    }
+
+    fn drain_follows_urgency(&self) -> bool {
+        // Strict FIFO: an aborted batch's earlier arrivals would re-form
+        // ahead of the urgent candidate, so prefill abort buys nothing.
+        false
     }
 
     fn overhead_ns(&self) -> u64 {
@@ -188,7 +207,7 @@ mod tests {
             99, crate::workload::RequestClass::Online, 100, 10, 550,
         );
         thief.admit(&mid, 550);
-        let stolen = victim.steal_tail(3, 800);
+        let stolen = victim.steal_tail(3, u64::MAX / 4, 800);
         assert_eq!(
             stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![5, 6, 7],
@@ -203,6 +222,29 @@ mod tests {
             "absorbed requests interleave by arrival time"
         );
         assert_eq!(victim.queued_tokens(), 5 * 110);
+    }
+
+    #[test]
+    fn fcfs_steal_respects_token_cap_and_oldest_online_peeks() {
+        let cfg = SystemConfig::default();
+        let mut p = FcfsPlanner::new(&cfg);
+        assert!(p.oldest_online().is_none());
+        for i in 0..8u64 {
+            let r = Request::new(
+                i, crate::workload::RequestClass::Online, 100, 10, i * 100,
+            );
+            p.admit(&r, i * 100);
+        }
+        assert_eq!(p.oldest_online().unwrap().id, 0);
+        // Footprint 110/request: a 250-token cap admits only 2 of the 4
+        // requests the half-queue rule would otherwise surrender.
+        let stolen = p.steal_tail(4, 250, 800);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![6, 7]
+        );
+        assert_eq!(p.queued(), 6);
+        assert_eq!(p.oldest_online().unwrap().id, 0, "head never stolen");
     }
 
     #[test]

@@ -78,6 +78,19 @@ impl CostModel {
         us as Micros + 20
     }
 
+    /// Checkpoint cost of an evicted decode sequence: only the generated
+    /// token ids (4 B each) leave the device — recompute-from-checkpoint
+    /// discards the KV instead of migrating it, which is the whole point
+    /// of the eviction — plus the same fixed coordination latency as a
+    /// KV hand-off. The restore side needs no extra model: the requeued
+    /// entry's prompt grows by `generated`, so the standard
+    /// [`CostModel::prefill_time`] already prices the replayed context.
+    pub fn checkpoint_time(&self, generated_tokens: u32) -> Micros {
+        let bytes = generated_tokens as f64 * 4.0;
+        let us = bytes / self.gpu.nvlink * 1e6;
+        us as Micros + 20
+    }
+
     /// M_remain (Eq. 5 input): GPU memory left after weights + a fixed
     /// activation reservation.
     pub fn mem_remaining(&self) -> u64 {
@@ -164,6 +177,19 @@ mod tests {
         let m = cm();
         let t = m.kv_transfer_time(1024);
         assert!(t > 1_000 && t < 10_000, "transfer {t} µs");
+    }
+
+    #[test]
+    fn checkpoint_is_orders_cheaper_than_kv_migration() {
+        // Evicting by checkpoint moves ~4 B/token of ids; migrating the
+        // KV would move ~0.8 MB/token. The gap is what makes
+        // recompute-from-checkpoint the right eviction mechanism.
+        let m = cm();
+        let ckpt = m.checkpoint_time(1024);
+        let kv = m.kv_transfer_time(1024);
+        assert!(ckpt >= 20, "fixed coordination latency applies");
+        assert!(ckpt < 100, "token-id checkpoint is near-instant: {ckpt} µs");
+        assert!(kv > 50 * ckpt, "ckpt {ckpt} µs vs KV hand-off {kv} µs");
     }
 
     #[test]

@@ -123,6 +123,16 @@ pub trait Engine {
 
     /// Drop any per-request engine state (KV cache) for a finished request.
     fn release(&mut self, _id: RequestId) {}
+
+    /// Duration of checkpointing an evicted decode sequence's generation
+    /// progress (`generated` token ids — the recompute-from-checkpoint
+    /// state; the KV itself is discarded, not migrated) so the sequence
+    /// can re-enter the queue. Defaults to free: the checkpoint is tiny,
+    /// and engines without an explicit transfer model may treat it as
+    /// instantaneous.
+    fn checkpoint(&mut self, _generated: u32) -> Micros {
+        0
+    }
 }
 
 #[cfg(test)]

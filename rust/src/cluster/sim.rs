@@ -56,6 +56,10 @@ impl Engine for SimEngine {
     fn decode_mem_budget(&self) -> u64 {
         self.cost.mem_remaining()
     }
+
+    fn checkpoint(&mut self, generated: u32) -> Micros {
+        self.cost.checkpoint_time(generated)
+    }
 }
 
 #[cfg(test)]

@@ -267,6 +267,42 @@ impl Default for PrioritySpec {
     }
 }
 
+/// Preemption knobs: urgency-triggered prefill abort-and-requeue and
+/// decode KV eviction with checkpoint-and-restore (consumed by
+/// [`crate::coordinator::preempt::PreemptionEngine`]). Off by default —
+/// with the master switch off the scheduler takes no preemption path at
+/// all and its output (including Summary JSON) is byte-identical to the
+/// pre-preemption system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreemptSpec {
+    /// Master switch; off = no preemption checks anywhere.
+    pub enabled: bool,
+    /// Fraction of the TTFT budget a queued online request must have
+    /// consumed before it can trigger preemption. Should sit at or above
+    /// the priority layer's `urgency_threshold`: preemption is the
+    /// last-resort escalation after plan-time reordering has already
+    /// failed to find the request a slot.
+    pub urgency_threshold: f64,
+    /// Abort an in-flight prefill batch only while its progress fraction
+    /// is below this — past it, letting the batch finish wastes less
+    /// FLOP-time than discarding and re-running it.
+    pub max_abort_progress: f64,
+    /// Ceiling on decode sequences evicted per trigger (bounds the
+    /// recompute debt a single urgent request can create).
+    pub max_evictions: u32,
+}
+
+impl Default for PreemptSpec {
+    fn default() -> Self {
+        PreemptSpec {
+            enabled: false,
+            urgency_threshold: 0.9,
+            max_abort_progress: 0.5,
+            max_evictions: 4,
+        }
+    }
+}
+
 /// SLO targets for online requests (DistServe-style TTFT + TBT).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloSpec {
@@ -294,6 +330,7 @@ pub struct SystemConfig {
     pub sharding: ShardingSpec,
     pub slo: SloSpec,
     pub priority: PrioritySpec,
+    pub preempt: PreemptSpec,
     pub seed: u64,
 }
 
@@ -307,6 +344,7 @@ impl Default for SystemConfig {
             sharding: ShardingSpec::default(),
             slo: SloSpec::default(),
             priority: PrioritySpec::default(),
+            preempt: PreemptSpec::default(),
             seed: 42,
         }
     }
@@ -392,6 +430,14 @@ impl SystemConfig {
             if let Some(v) = p.get("aging_rate").as_f64() { d.aging_rate = v; }
             if let Some(v) = p.get("urgency_threshold").as_f64() { d.urgency_threshold = v; }
         }
+        let pr = j.get("preempt");
+        if !pr.is_null() {
+            let d = &mut c.preempt;
+            if let Some(v) = pr.get("enabled").as_bool() { d.enabled = v; }
+            if let Some(v) = pr.get("urgency_threshold").as_f64() { d.urgency_threshold = v; }
+            if let Some(v) = pr.get("max_abort_progress").as_f64() { d.max_abort_progress = v; }
+            if let Some(v) = pr.get("max_evictions").as_u64() { d.max_evictions = v as u32; }
+        }
         let o = j.get("slo");
         if !o.is_null() {
             if let Some(v) = o.get("ttft_us").as_u64() { c.slo.ttft_us = v; }
@@ -438,6 +484,22 @@ impl SystemConfig {
                 "priority.aging_rate" => set_f64(&mut self.priority.aging_rate, v),
                 "priority.urgency_threshold" => {
                     set_f64(&mut self.priority.urgency_threshold, v)
+                }
+                // Boolean handled like priority.enabled: a typo must not
+                // silently flip the preemption switch.
+                "preempt.enabled" => match v.to_ascii_lowercase().as_str() {
+                    "true" | "1" | "yes" | "on" => self.preempt.enabled = true,
+                    "false" | "0" | "no" | "off" => self.preempt.enabled = false,
+                    _ => {}
+                },
+                "preempt.urgency_threshold" => {
+                    set_f64(&mut self.preempt.urgency_threshold, v)
+                }
+                "preempt.max_abort_progress" => {
+                    set_f64(&mut self.preempt.max_abort_progress, v)
+                }
+                "preempt.max_evictions" => {
+                    set_u32(&mut self.preempt.max_evictions, v)
                 }
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
@@ -493,6 +555,12 @@ impl SystemConfig {
                 ("offline_weight", Json::num(self.priority.offline_weight)),
                 ("aging_rate", Json::num(self.priority.aging_rate)),
                 ("urgency_threshold", Json::num(self.priority.urgency_threshold)),
+            ])),
+            ("preempt", Json::obj(vec![
+                ("enabled", Json::from(self.preempt.enabled)),
+                ("urgency_threshold", Json::num(self.preempt.urgency_threshold)),
+                ("max_abort_progress", Json::num(self.preempt.max_abort_progress)),
+                ("max_evictions", Json::from(self.preempt.max_evictions as u64)),
             ])),
             ("slo", Json::obj(vec![
                 ("ttft_us", Json::from(self.slo.ttft_us)),
@@ -649,6 +717,51 @@ mod tests {
         for p in [Placement::LeastLoaded, Placement::JoinShortestKv, Placement::Hash] {
             assert_eq!(Placement::parse(p.name()), p, "name/parse round-trip");
         }
+    }
+
+    #[test]
+    fn preempt_defaults_off_and_overridable() {
+        let c = SystemConfig::default();
+        assert!(!c.preempt.enabled, "preemption must be opt-in");
+        assert!(c.preempt.urgency_threshold >= c.priority.urgency_threshold);
+        assert!((0.0..=1.0).contains(&c.preempt.max_abort_progress));
+        assert!(c.preempt.max_evictions >= 1);
+
+        let args = Args::parse(
+            ["--preempt.enabled", "on", "--preempt.urgency_threshold", "0.8",
+             "--preempt.max_abort_progress", "0.3",
+             "--preempt.max_evictions", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(c.preempt.enabled);
+        assert_eq!(c.preempt.urgency_threshold, 0.8);
+        assert_eq!(c.preempt.max_abort_progress, 0.3);
+        assert_eq!(c.preempt.max_evictions, 8);
+
+        // A typo'd boolean must not silently enable preemption.
+        let args = Args::parse(
+            ["--preempt.enabled", "yep"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(!c.preempt.enabled);
+    }
+
+    #[test]
+    fn preempt_json_block_parses() {
+        let j = Json::parse(
+            r#"{"preempt":{"enabled":true,"max_evictions":2}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert!(c.preempt.enabled);
+        assert_eq!(c.preempt.max_evictions, 2);
+        // Untouched fields keep defaults.
+        assert_eq!(c.preempt.urgency_threshold, 0.9);
+        assert_eq!(c.preempt.max_abort_progress, 0.5);
     }
 
     #[test]

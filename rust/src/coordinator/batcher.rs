@@ -207,7 +207,7 @@ impl DynamicBatcher {
             if take >= self.max_batch {
                 break;
             }
-            let footprint = (r.len + r.output_len) as u64;
+            let footprint = r.footprint();
             if acc + footprint > budget_tokens {
                 break;
             }
@@ -505,7 +505,7 @@ mod tests {
                 let footprint: u64 = fb
                     .reqs
                     .iter()
-                    .map(|r| (r.len + r.output_len) as u64)
+                    .map(QueuedReq::footprint)
                     .sum();
                 // Eq. 6: Σ S_i ≤ M_safe / (2LHDB).
                 assert!(footprint <= budget);

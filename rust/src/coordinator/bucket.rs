@@ -32,6 +32,15 @@ pub struct QueuedReq {
     pub class: RequestClass,
 }
 
+impl QueuedReq {
+    /// Full-context KV token footprint (prompt + expected generation) —
+    /// the single definition every reserve/admission/steal/eviction site
+    /// must share, or the KV reserve/release books stop balancing.
+    pub fn footprint(&self) -> u64 {
+        (self.len + self.output_len) as u64
+    }
+}
+
 /// One sequence-length bucket `[low, up)`.
 #[derive(Debug, Clone)]
 pub struct Bucket {

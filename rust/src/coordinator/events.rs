@@ -5,13 +5,19 @@
 //! `BinaryHeap` with reversed ordering). The scheduler pops the earliest
 //! event, advances the clock (virtual or wall), applies the handler for
 //! its [`EventKind`], and then runs the state-driven phases (hand-off
-//! admission, prefill dispatch, decode launch) that may schedule further
-//! events. Ties on the timestamp pop in FIFO push order, which keeps runs
-//! bit-for-bit deterministic for a given trace.
+//! admission, preemption, prefill dispatch, decode launch) that may
+//! schedule further events. Ties on the timestamp pop in FIFO push order,
+//! which keeps runs bit-for-bit deterministic for a given trace.
+//!
+//! Scheduled events can be **cancelled**: [`EventQueue::push`] returns an
+//! [`EventId`], and [`EventQueue::cancel`] tombstones the entry so
+//! `pop`/`pop_due` skip it lazily. The preemption subsystem relies on this
+//! to retract the `PrefillDone` completion of a batch it aborts mid-flight.
 
 use crate::Micros;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::collections::HashSet;
 
 /// What happens when an event fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -25,6 +31,27 @@ pub enum EventKind {
     HandoffReady { decode: usize },
     /// Decode instance `decode` reaches its iteration boundary.
     DecodeIterEnd { decode: usize },
+    /// Preemption: abort the prefill batch in flight on `instance`,
+    /// tombstone its completion, and requeue its requests.
+    PreemptPrefill { instance: usize },
+    /// Preemption: an evicted decode sequence's checkpoint has landed;
+    /// its recompute-from-checkpoint work re-enters the owning shard's
+    /// queue (the payload waits in the scheduler's restore buffer).
+    RestoreReady { decode: usize },
+    /// Preemption: wake-up at the instant the oldest queued online
+    /// request crosses the urgency threshold, so a trigger cannot be
+    /// missed in an otherwise event-free window (the check itself is
+    /// state-driven and runs after every event).
+    PreemptCheck,
+}
+
+/// Handle to a scheduled event, used only for cancellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventId(u64);
+
+impl EventId {
+    /// Placeholder for fixtures that never cancel (tests/benches).
+    pub const NONE: EventId = EventId(u64::MAX);
 }
 
 /// A scheduled event. `seq` is a push counter used only for deterministic
@@ -58,49 +85,81 @@ impl Ord for Event {
     }
 }
 
-/// Min-ordered event queue.
+/// Min-ordered event queue with lazy cancellation.
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Event>,
     seq: u64,
+    /// Cancelled-but-not-yet-popped sequence numbers. Never iterated, so
+    /// the hash order cannot leak into scheduling decisions.
+    tombstones: HashSet<u64>,
 }
 
 impl EventQueue {
     pub fn new() -> EventQueue {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        EventQueue::default()
     }
 
-    /// Schedule `kind` to fire at `at`.
-    pub fn push(&mut self, at: Micros, kind: EventKind) {
+    /// Schedule `kind` to fire at `at`; the returned id can cancel it.
+    pub fn push(&mut self, at: Micros, kind: EventKind) -> EventId {
         let seq = self.seq;
         self.seq += 1;
         self.heap.push(Event { at, kind, seq });
+        EventId(seq)
     }
 
-    /// Pop the earliest event.
+    /// Tombstone a *pending* event so `pop`/`pop_due` skip it. Returns
+    /// true when the id was newly cancelled. Cancelling an event that has
+    /// already fired is a caller bug (it would desynchronize `len`);
+    /// every live id is handed out by `push` exactly once and consumed by
+    /// the pop that fires it.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id == EventId::NONE {
+            return false;
+        }
+        debug_assert!(id.0 < self.seq, "cancelling an id never issued");
+        self.tombstones.insert(id.0)
+    }
+
+    /// Drop cancelled entries sitting at the top of the heap.
+    fn purge_cancelled_top(&mut self) {
+        while matches!(
+            self.heap.peek(),
+            Some(ev) if self.tombstones.contains(&ev.seq)
+        ) {
+            let ev = self.heap.pop().unwrap();
+            self.tombstones.remove(&ev.seq);
+        }
+    }
+
+    /// Pop the earliest live event.
     pub fn pop(&mut self) -> Option<Event> {
+        self.purge_cancelled_top();
         self.heap.pop()
     }
 
-    /// Pop the earliest event only if it is due at or before `now`.
+    /// Pop the earliest live event only if it is due at or before `now`.
     pub fn pop_due(&mut self, now: Micros) -> Option<Event> {
+        self.purge_cancelled_top();
         match self.heap.peek() {
             Some(ev) if ev.at <= now => self.heap.pop(),
             _ => None,
         }
     }
 
-    /// Timestamp of the earliest scheduled event.
-    pub fn peek_at(&self) -> Option<Micros> {
+    /// Timestamp of the earliest live scheduled event.
+    pub fn peek_at(&mut self) -> Option<Micros> {
+        self.purge_cancelled_top();
         self.heap.peek().map(|e| e.at)
     }
 
+    /// Live (non-cancelled) scheduled events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.tombstones.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
@@ -147,5 +206,74 @@ mod tests {
         assert!(q.pop_due(150).is_none());
         assert_eq!(q.peek_at(), Some(200));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn cancelled_events_are_skipped_by_pop() {
+        let mut q = EventQueue::new();
+        q.push(10, EventKind::Arrival);
+        let mid = q.push(20, EventKind::PrefillDone { instance: 0 });
+        q.push(30, EventKind::DecodeIterEnd { decode: 0 });
+        assert!(q.cancel(mid));
+        let order: Vec<Micros> = std::iter::from_fn(|| q.pop().map(|e| e.at)).collect();
+        assert_eq!(order, vec![10, 30], "tombstoned event must not fire");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancelled_events_are_skipped_by_pop_due() {
+        let mut q = EventQueue::new();
+        let first = q.push(100, EventKind::PreemptPrefill { instance: 0 });
+        q.push(100, EventKind::RestoreReady { decode: 1 });
+        q.push(300, EventKind::Arrival);
+        q.cancel(first);
+        // The due pop must see straight through the cancelled head.
+        let ev = q.pop_due(150).unwrap();
+        assert_eq!(ev.kind, EventKind::RestoreReady { decode: 1 });
+        assert!(q.pop_due(150).is_none());
+        assert_eq!(q.peek_at(), Some(300));
+    }
+
+    #[test]
+    fn cancellation_preserves_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(5, EventKind::PrefillDone { instance: 0 });
+        let second = q.push(5, EventKind::PrefillDone { instance: 1 });
+        q.push(5, EventKind::PrefillDone { instance: 2 });
+        q.cancel(second);
+        let kinds: Vec<EventKind> =
+            std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::PrefillDone { instance: 0 },
+                EventKind::PrefillDone { instance: 2 },
+            ],
+            "survivors keep push order at equal timestamps"
+        );
+    }
+
+    #[test]
+    fn len_stays_consistent_under_cancellation() {
+        let mut q = EventQueue::new();
+        let a = q.push(1, EventKind::Arrival);
+        let b = q.push(2, EventKind::Arrival);
+        assert_eq!(q.len(), 2);
+        assert!(q.cancel(a));
+        assert_eq!(q.len(), 1);
+        assert!(!q.is_empty());
+        // Double-cancel is a no-op, not a double decrement.
+        assert!(!q.cancel(a));
+        assert_eq!(q.len(), 1);
+        assert!(q.cancel(b));
+        assert_eq!(q.len(), 0);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+        // NONE is inert.
+        assert!(!q.cancel(EventId::NONE));
+        // The queue keeps working after a full drain of tombstones.
+        q.push(7, EventKind::Arrival);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().at, 7);
     }
 }

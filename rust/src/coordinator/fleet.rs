@@ -10,6 +10,7 @@
 //! owns *what state* each instance is in. Both are engine-agnostic.
 
 use super::batcher::FormedBatch;
+use super::events::EventId;
 use crate::workload::RequestClass;
 use crate::Micros;
 
@@ -21,6 +22,12 @@ pub struct InFlightPrefill {
     pub duration: Micros,
     /// Decode instance whose KV budget the batch was reserved against.
     pub target_decode: usize,
+    /// When the batch started executing (progress/wasted-work accounting
+    /// for the preemption subsystem).
+    pub started_at: Micros,
+    /// The scheduled `PrefillDone` completion event — tombstoned when the
+    /// batch is aborted mid-flight.
+    pub done_event: EventId,
 }
 
 /// The prefill side: per-instance busy slots.
@@ -56,6 +63,19 @@ impl PrefillFleet {
         } else {
             None
         }
+    }
+
+    /// The batch in flight on `pi`, if any (preemption victim scans).
+    pub fn get(&self, pi: usize) -> Option<&InFlightPrefill> {
+        self.running[pi].as_ref()
+    }
+
+    /// Abort the batch in flight on `pi`: the slot frees immediately.
+    /// The caller owns the rest of the cancellation — tombstoning the
+    /// batch's completion event, releasing its KV reservation, charging
+    /// the wasted work, and requeueing its requests.
+    pub fn abort(&mut self, pi: usize) -> Option<InFlightPrefill> {
+        self.running[pi].take()
     }
 
     pub fn any_running(&self) -> bool {
@@ -98,6 +118,16 @@ pub struct DecodeInstance {
     pub iter_end: Option<Micros>,
     /// Timestamp of an already-scheduled idle wake-up (dedupe guard).
     pub wake_at: Option<Micros>,
+}
+
+impl DecodeSeqState {
+    /// Full-context KV token footprint — must mirror
+    /// [`crate::coordinator::bucket::QueuedReq::footprint`] (the entry
+    /// this sequence was reserved as), or release would not balance
+    /// reserve.
+    pub fn footprint(&self) -> u64 {
+        (self.input_len + self.output_len) as u64
+    }
 }
 
 impl DecodeInstance {
@@ -191,6 +221,8 @@ mod tests {
             done_at,
             duration: done_at,
             target_decode: target,
+            started_at: 0,
+            done_event: EventId::NONE,
         }
     }
 
@@ -225,6 +257,20 @@ mod tests {
         assert_eq!(p.done_at, 100);
         assert!(f.is_idle(0));
         assert!(!f.any_running());
+    }
+
+    #[test]
+    fn abort_frees_a_busy_slot_mid_flight() {
+        let mut f = PrefillFleet::new(2);
+        f.dispatch(1, in_flight(1000, 0));
+        assert!(f.get(1).is_some());
+        assert!(f.get(0).is_none());
+        // Not done yet — but abort takes it anyway.
+        assert!(f.take_done(1, 500).is_none());
+        let p = f.abort(1).unwrap();
+        assert_eq!(p.done_at, 1000);
+        assert!(f.is_idle(1), "aborted slot frees immediately");
+        assert!(f.abort(1).is_none(), "idle slot aborts to None");
     }
 
     #[test]

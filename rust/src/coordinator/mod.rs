@@ -1,5 +1,5 @@
 //! The paper's contribution: bucket-based dynamic batching with
-//! priority-aware, event-driven scheduling.
+//! priority-aware, preemptive, event-driven scheduling.
 //!
 //! * [`bucket`] — the Request Bucketing Manager (Algorithm 1): adaptive
 //!   split/merge of sequence-length buckets.
@@ -8,14 +8,18 @@
 //! * [`priority`] — SLO-deadline urgency scoring: online slack to
 //!   `arrival + slo.ttft_us`, offline throughput class with starvation
 //!   aging; replaces pure earliest-arrival drain when enabled.
-//! * [`events`] — the typed event queue (arrivals, prefill completions,
-//!   KV hand-off landings, decode iteration boundaries) the serving loop
-//!   pops in timestamp order.
+//! * [`events`] — the typed event queue the serving loop pops in
+//!   timestamp order, with tombstone cancellation for retracting
+//!   scheduled completions.
 //! * [`fleet`] — instance state machines: prefill busy slots and decode
 //!   continuous-batching instances with KV reservations.
+//! * [`preempt`] — the preemption subsystem: urgency-triggered prefill
+//!   abort-and-requeue and decode KV eviction with
+//!   checkpoint-and-restore (off by default, `PreemptSpec`-gated).
 //! * [`shard`] — per-decode-instance scheduler shards: each owns its own
-//!   bucket queue, KV admission, and priority state; work-stealing pulls
-//!   backlog onto idle shards at decode-iteration boundaries.
+//!   bucket queue, KV admission, and priority state; KV-aware
+//!   work-stealing pulls backlog onto idle shards at decode-iteration
+//!   boundaries.
 //! * [`balance`] — the placement layer: arrival→shard routing policies
 //!   (least-loaded / join-shortest-KV / hash), per-shard decode
 //!   targeting, and steal-victim selection.
@@ -26,6 +30,39 @@
 //!   the disaggregated baseline: pops events, dispatches to the fleet,
 //!   plans batches through per-shard [`PrefillPlanner`] plug-ins.
 //!
+//! # Event flow
+//!
+//! A request moves through the system as a chain of typed events and
+//! state-driven phases:
+//!
+//! ```text
+//! Arrival ─▶ placement ─▶ shard queue ─▶ plan (Eq. 6) ─▶ prefill in flight
+//!                             ▲                              │         │
+//!                             │              PrefillDone ◀───┘         │
+//!   (abort: completion event  │                   │      PreemptPrefill│
+//!    tombstoned, waste        ├───────────────────│──────◀─────────────┘
+//!    charged, KV released,    │                   ▼
+//!    requests requeued)       │         HandoffReady (NVLink)
+//!                             │                   ▼
+//!   (evict-with-checkpoint:   │        decode pending ─▶ active
+//!    KV released, generated   │                   │
+//!    tokens checkpointed,     │       DecodeIterEnd (token++, completions,
+//!    RestoreReady requeues    │                   │       KV release)
+//!    recompute work whose     ├──────◀────────────┤
+//!    prefill replays the      │                   └─▶ work-stealing
+//!    full context)            │                       rebalance (KV-capped)
+//! ```
+//!
+//! Preemption states: an in-flight prefill batch is either *completed*
+//! (`PrefillDone` fires) or *aborted* (`PreemptPrefill` fires first and
+//! tombstones the completion); an active decode sequence is either
+//! *finished* (at an iteration boundary) or *evicted* (checkpointed,
+//! requeued at `RestoreReady`, and resumed after its recompute prefill
+//! with its original TTFT intact). Both preemption paths trigger only
+//! while an online request has burned past `preempt.urgency_threshold`
+//! of its TTFT budget, and at most one preemption is outstanding at a
+//! time (see [`preempt::PreemptionEngine`]).
+//!
 //! [`BucketServe`] ties them together behind a single façade used by the
 //! CLI, the examples, and every figure bench.
 
@@ -35,6 +72,7 @@ pub mod balance;
 pub mod events;
 pub mod fleet;
 pub mod monitor;
+pub mod preempt;
 pub mod priority;
 pub mod scheduler;
 pub mod shard;
@@ -42,9 +80,10 @@ pub mod shard;
 pub use bucket::{Bucket, BucketManager};
 pub use batcher::{DynamicBatcher, KvMemoryModel};
 pub use balance::{Router, ShardLoad};
-pub use events::{Event, EventKind, EventQueue};
+pub use events::{Event, EventId, EventKind, EventQueue};
 pub use fleet::{DecodeFleet, PrefillFleet};
 pub use monitor::{GlobalMonitor, MonitorView, ShardView};
+pub use preempt::{PreemptionEngine, RestoreInfo};
 pub use priority::PriorityScorer;
 pub use scheduler::{PdScheduler, RunReport, PrefillPlanner};
 pub use shard::{SchedulerShard, ShardSet, ShardStats};

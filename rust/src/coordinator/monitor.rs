@@ -132,6 +132,13 @@ impl GlobalMonitor {
         self.shards[to].prefill_queue += n;
     }
 
+    /// Preemption returned `n` requests to `shard`'s queue (an aborted
+    /// prefill batch or checkpoint-restored evictees). A requeue is not
+    /// an arrival: the rate window must not double-count it.
+    pub fn on_requeue(&mut self, shard: usize, n: usize) {
+        self.shards[shard].prefill_queue += n;
+    }
+
     pub fn on_batch_done(&mut self, latency_us: Micros) {
         self.batch_latency.push(latency_us as f64);
     }
@@ -248,6 +255,18 @@ mod tests {
         assert!(v.arrival_rps > v.shards[1].arrival_rps);
         // Mean input length is a global aggregate: (6·100 + 2·200) / 8.
         assert!((v.mean_input_len - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn requeue_restores_queue_depth_without_counting_an_arrival() {
+        let mut m = GlobalMonitor::new(1_000_000, 1000);
+        m.on_arrival(0, 0, 100);
+        m.on_prefill_dispatch(0, 1);
+        let before = m.view(500_000).arrival_rps;
+        m.on_requeue(0, 1);
+        let v = m.view(500_000);
+        assert_eq!(v.prefill_queue, 1, "requeued work is queued again");
+        assert_eq!(v.arrival_rps, before, "requeue is not an arrival");
     }
 
     #[test]

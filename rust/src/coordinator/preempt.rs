@@ -1,0 +1,526 @@
+//! Preemption subsystem: urgency-triggered prefill abort and decode KV
+//! eviction with checkpoint-and-restore.
+//!
+//! The priority layer (PR 1) reorders work at *plan time* only: once an
+//! offline prefill batch is dispatched, or a decode instance's KV fills
+//! up, a deadline-critical online request can do nothing but wait. The
+//! [`PreemptionEngine`] converts priority scores into action after that
+//! point, driven by two triggers evaluated each scheduling round (only
+//! when [`crate::config::PreemptSpec::enabled`] — the default is off and
+//! the subsystem is then completely inert):
+//!
+//! * **(a) Prefill abort-and-requeue** — a queued online request has
+//!   consumed more than `urgency_threshold` of its TTFT budget while
+//!   every prefill slot is held by a lower-urgency batch. The least
+//!   urgent in-flight batch (canonical [`PriorityScorer`] order on its
+//!   most-urgent member) whose progress is still below
+//!   `max_abort_progress` is cancelled via an event tombstone; its
+//!   elapsed FLOP-time is charged as waste and its requests return to the
+//!   owning shard's bucket manager (drain order restores arrival order).
+//! * **(b) Decode evict-with-checkpoint** — the same urgent request
+//!   cannot be admitted because its full-context KV footprint exceeds its
+//!   shard's best decode headroom while *offline* sequences hold
+//!   reclaimable KV there. The least-urgent offline victims checkpoint
+//!   their generated-token progress ([`RestoreInfo`]), release their KV
+//!   reservations, and re-enter the queue as recompute-from-checkpoint
+//!   work: the requeued entry's prompt is `input + generated` (so its
+//!   prefill time covers the replayed context) and its remaining
+//!   generation shrinks by the tokens already produced. The original
+//!   prompt/output split and the already-paid first token are restored
+//!   when the recompute prefill completes.
+//!
+//! Anti-thrash guard: at most one preemption is outstanding at a time —
+//! after a trigger fires for a candidate, no further preemption happens
+//! until that candidate is dispatched ([`PreemptionEngine::on_dispatch`]).
+//! This bounds the wasted work any single urgent request can cause to one
+//! aborted batch plus one eviction pass. Drain orders that do not serve
+//! by urgency (FCFS without priority, SJF/LJF, the FIFO baseline) would
+//! hand every freed slot or KV token back to the very work that was
+//! preempted, so the scheduler arms the subsystem only when the
+//! planner's drain follows urgency and warns otherwise.
+//!
+//! A request stolen onto another shard needs no special handling: the
+//! trigger scan walks *every* shard's most urgent queued online request,
+//! so an urgent request a thief shard absorbed preempts the thief's
+//! in-flight work through the same two paths.
+
+use super::bucket::QueuedReq;
+use super::fleet::{DecodeSeqState, InFlightPrefill};
+use super::priority::PriorityScorer;
+use crate::config::{PreemptSpec, PrioritySpec, SloSpec};
+use crate::workload::{RequestClass, RequestId};
+use crate::Micros;
+use std::cmp::Ordering;
+use std::collections::HashMap;
+
+/// Checkpointed progress of an evicted decode sequence, keyed by request
+/// id until its recompute prefill completes.
+#[derive(Debug, Clone, Copy)]
+pub struct RestoreInfo {
+    /// When the sequence's first token originally landed (TTFT is paid
+    /// once; eviction must not reset it).
+    pub first_token: Micros,
+    /// Original prompt length (the requeued entry's `len` grew by
+    /// `generated` to cover the replayed context).
+    pub input_len: u32,
+    /// Original target generation length.
+    pub output_len: u32,
+    /// Tokens generated before eviction; decode resumes after them.
+    pub generated: u32,
+    /// Padded length of the sequence's *original* prefill batch, carried
+    /// through so completion records (and their padding-waste metric)
+    /// describe the prefill that actually served the prompt, not the
+    /// recompute replay.
+    pub padded_len: u32,
+}
+
+/// The preemption decision engine: trigger detection, victim selection
+/// (through the canonical priority comparator), and checkpoint storage.
+/// Pure policy — all fleet/queue mutation stays in the scheduler.
+#[derive(Debug)]
+pub struct PreemptionEngine {
+    spec: PreemptSpec,
+    scorer: PriorityScorer,
+    /// Queueing time (µs) at which an online request crosses the
+    /// preemption urgency threshold: `urgency_threshold · slo.ttft_us`,
+    /// rounded up so a wake at the crossing is never a hair early.
+    threshold_wait_us: u64,
+    /// Candidate with an outstanding preemption (anti-thrash guard);
+    /// cleared when the candidate is dispatched.
+    pending: Option<RequestId>,
+    /// Checkpoints of evicted sequences awaiting recompute. Accessed only
+    /// by key, so the map's hash order cannot affect scheduling.
+    restore: HashMap<RequestId, RestoreInfo>,
+}
+
+impl PreemptionEngine {
+    pub fn new(
+        spec: PreemptSpec,
+        priority: PrioritySpec,
+        slo: SloSpec,
+    ) -> PreemptionEngine {
+        let threshold_wait_us =
+            (spec.urgency_threshold * slo.ttft_us as f64).ceil() as u64;
+        PreemptionEngine {
+            spec,
+            scorer: PriorityScorer::new(priority, slo),
+            threshold_wait_us,
+            pending: None,
+            restore: HashMap::new(),
+        }
+    }
+
+    /// The instant at which `r` (a queued online request) crosses the
+    /// preemption urgency threshold — where the scheduler plants its
+    /// wake-up when no candidate is ripe yet.
+    pub fn crossing_at(&self, r: &QueuedReq) -> Micros {
+        r.arrival.saturating_add(self.threshold_wait_us)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.spec.enabled
+    }
+
+    /// The candidate whose outstanding preemption blocks further triggers.
+    pub fn pending(&self) -> Option<RequestId> {
+        self.pending
+    }
+
+    /// The preemption candidate: the globally most urgent queued online
+    /// request across the per-shard `oldest_online` peeks (online urgency
+    /// is monotone in waiting time, so earliest arrival = most urgent;
+    /// ties break on id, then shard scan order). Returns the owning shard
+    /// and the request, or None when disabled, a preemption is already
+    /// outstanding, or nothing has burned past `urgency_threshold`.
+    pub fn candidate(
+        &self,
+        oldest: &[Option<QueuedReq>],
+        now: Micros,
+    ) -> Option<(usize, QueuedReq)> {
+        if !self.spec.enabled || self.pending.is_some() {
+            return None;
+        }
+        let mut best: Option<(usize, QueuedReq)> = None;
+        for (si, r) in oldest.iter().enumerate() {
+            let Some(r) = r else { continue };
+            debug_assert_eq!(r.class, RequestClass::Online);
+            if self.scorer.urgency(r, now) < self.spec.urgency_threshold {
+                continue;
+            }
+            let better = match &best {
+                None => true,
+                Some((_, cur)) => (r.arrival, r.id) < (cur.arrival, cur.id),
+            };
+            if better {
+                best = Some((si, *r));
+            }
+        }
+        best
+    }
+
+    /// Trigger (a) victim: among the in-flight prefill batches, the one
+    /// whose *most urgent* member still ranks strictly below `cand` under
+    /// the canonical comparator, choosing the least-urgent such batch.
+    /// Batches holding any urgent member are never aborted, and neither
+    /// is a batch whose progress passed `max_abort_progress` (finishing
+    /// it wastes less than re-running it). Returns the instance index.
+    pub fn pick_prefill_victim(
+        &self,
+        cand: &QueuedReq,
+        running: &[(usize, &InFlightPrefill)],
+        now: Micros,
+    ) -> Option<usize> {
+        let mut victim: Option<(usize, QueuedReq)> = None;
+        for &(pi, p) in running {
+            let elapsed = now.saturating_sub(p.started_at);
+            if elapsed as f64 >= self.spec.max_abort_progress * p.duration as f64
+            {
+                continue;
+            }
+            let Some(best_member) = p
+                .formed
+                .reqs
+                .iter()
+                .min_by(|a, b| self.scorer.compare(a, b, now))
+                .copied()
+            else {
+                continue;
+            };
+            if self.scorer.is_urgent(&best_member, now) {
+                continue; // never abort urgent work
+            }
+            if self.scorer.compare(cand, &best_member, now) != Ordering::Less {
+                continue; // the candidate does not outrank this batch
+            }
+            let less_urgent = match &victim {
+                None => true,
+                Some((_, cur)) => {
+                    self.scorer.least_urgent_first(&best_member, cur, now)
+                        == Ordering::Less
+                }
+            };
+            if less_urgent {
+                victim = Some((pi, best_member));
+            }
+        }
+        victim.map(|(pi, _)| pi)
+    }
+
+    /// Trigger (b) victims on one decode instance: offline sequences in
+    /// `active`, least urgent first (canonical order reversed, ties on
+    /// id), until their freed full-context KV covers `deficit` tokens,
+    /// capped at `max_evictions`. Eviction is all-or-nothing per trigger:
+    /// if the deficit cannot be covered within the cap, nothing is
+    /// evicted — a partial eviction would strand recompute debt without
+    /// admitting the urgent request. Returns victim ids in eviction order.
+    pub fn pick_decode_victims(
+        &self,
+        active: &[DecodeSeqState],
+        deficit: u64,
+        now: Micros,
+    ) -> Vec<RequestId> {
+        let mut pool: Vec<QueuedReq> = active
+            .iter()
+            // Offline only — and never a sequence within one token of
+            // done: a finished one can sit in `active` with
+            // `generated == output_len` until the boundary that formally
+            // completes it (evicting it would requeue zero remaining
+            // generation, or underflow on a repeat), and a
+            // one-token-remaining victim would pay a full-context
+            // recompute for KV that frees at the very next boundary
+            // anyway — while its restore would arrive already complete
+            // and burn an extra decode iteration.
+            .filter(|s| {
+                s.class == RequestClass::Offline
+                    && s.generated + 1 < s.output_len
+            })
+            .map(|s| QueuedReq {
+                id: s.id,
+                len: s.input_len,
+                output_len: s.output_len,
+                arrival: s.arrival,
+                class: s.class,
+            })
+            .collect();
+        pool.sort_by(|a, b| {
+            self.scorer
+                .least_urgent_first(a, b, now)
+                .then(a.id.cmp(&b.id))
+        });
+        let mut out = Vec::new();
+        let mut freed = 0u64;
+        for r in pool {
+            if freed >= deficit || out.len() >= self.spec.max_evictions as usize
+            {
+                break;
+            }
+            freed += r.footprint();
+            out.push(r.id);
+        }
+        if freed >= deficit {
+            out
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Checkpoint an evicted sequence's progress and hand back the queue
+    /// entry it re-enters the scheduler as: the prompt grows to cover the
+    /// replayed context (original prompt + tokens generated so far), the
+    /// remaining generation shrinks by the same amount, so the entry's
+    /// full-context footprint — and hence its KV reservation — is
+    /// unchanged. Safe to call repeatedly for a sequence evicted more
+    /// than once: the stored originals are taken from the restored
+    /// [`DecodeSeqState`], which carries them forward.
+    pub fn checkpoint_seq(&mut self, s: &DecodeSeqState) -> QueuedReq {
+        debug_assert!(s.generated < s.output_len, "completed seqs never evict");
+        self.restore.insert(
+            s.id,
+            RestoreInfo {
+                first_token: s.first_token,
+                input_len: s.input_len,
+                output_len: s.output_len,
+                generated: s.generated,
+                padded_len: s.padded_len,
+            },
+        );
+        QueuedReq {
+            id: s.id,
+            len: s.input_len + s.generated,
+            output_len: s.output_len - s.generated,
+            arrival: s.arrival,
+            class: s.class,
+        }
+    }
+
+    /// Take the checkpoint for a request whose recompute prefill just
+    /// completed (None for requests that were never evicted).
+    pub fn take_restore(&mut self, id: RequestId) -> Option<RestoreInfo> {
+        self.restore.remove(&id)
+    }
+
+    /// Record that a preemption fired for `id`; blocks further triggers
+    /// until the candidate is dispatched.
+    pub fn note_preempt(&mut self, id: RequestId) {
+        self.pending = Some(id);
+    }
+
+    /// A prefill batch was dispatched; if it carries the pending
+    /// candidate, the outstanding preemption is resolved.
+    pub fn on_dispatch(&mut self, reqs: &[QueuedReq]) {
+        if let Some(id) = self.pending {
+            if reqs.iter().any(|r| r.id == id) {
+                self.pending = None;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{PrefillBatch, PrefillItem};
+    use crate::config::SystemConfig;
+    use crate::coordinator::batcher::FormedBatch;
+
+    fn engine(enabled: bool) -> PreemptionEngine {
+        let cfg = SystemConfig::default();
+        let mut spec = cfg.preempt.clone();
+        spec.enabled = enabled;
+        PreemptionEngine::new(spec, cfg.priority.clone(), cfg.slo.clone())
+    }
+
+    fn req(id: u64, class: RequestClass, arrival: Micros) -> QueuedReq {
+        QueuedReq { id, len: 100, output_len: 20, arrival, class }
+    }
+
+    fn in_flight(
+        reqs: Vec<QueuedReq>,
+        started_at: Micros,
+        duration: Micros,
+    ) -> InFlightPrefill {
+        let items = reqs
+            .iter()
+            .map(|r| PrefillItem { id: r.id, len: r.len, tokens: vec![] })
+            .collect();
+        InFlightPrefill {
+            formed: FormedBatch {
+                batch: PrefillBatch { items, padded_len: 100 },
+                reqs,
+                bucket_up: 128,
+            },
+            done_at: started_at + duration,
+            duration,
+            target_decode: 0,
+            started_at,
+            done_event: crate::coordinator::events::EventId::NONE,
+        }
+    }
+
+    fn seq(
+        id: u64,
+        class: RequestClass,
+        arrival: Micros,
+        input: u32,
+        output: u32,
+        generated: u32,
+    ) -> DecodeSeqState {
+        DecodeSeqState {
+            id,
+            class,
+            arrival,
+            input_len: input,
+            padded_len: input,
+            output_len: output,
+            generated,
+            first_token: arrival + 1000,
+            ready_at: 0,
+        }
+    }
+
+    #[test]
+    fn candidate_requires_enabled_threshold_and_no_pending() {
+        // Default TTFT budget 400 ms, preempt threshold 0.9 → urgent after
+        // 360 ms of queueing.
+        let now = 1_000_000;
+        let urgent = req(7, RequestClass::Online, now - 500_000);
+        let fresh = req(8, RequestClass::Online, now - 10_000);
+        let oldest = vec![Some(fresh), Some(urgent)];
+
+        assert!(engine(false).candidate(&oldest, now).is_none(), "disabled");
+        let mut e = engine(true);
+        let (si, c) = e.candidate(&oldest, now).unwrap();
+        assert_eq!((si, c.id), (1, 7), "most urgent wins, not shard order");
+        assert!(e.candidate(&[Some(fresh)], now).is_none(), "below threshold");
+        e.note_preempt(7);
+        assert!(e.candidate(&oldest, now).is_none(), "pending blocks");
+        e.on_dispatch(&[urgent]);
+        assert!(e.pending().is_none());
+        assert!(e.candidate(&oldest, now).is_some(), "cleared on dispatch");
+        // The wake point is exactly where the threshold check flips:
+        // 0.9 × 400 ms TTFT budget = 360 ms after arrival.
+        assert_eq!(e.crossing_at(&fresh), fresh.arrival + 360_000);
+        assert!(e.candidate(&[Some(fresh)], e.crossing_at(&fresh)).is_some());
+    }
+
+    #[test]
+    fn candidate_ties_break_on_arrival_then_id() {
+        let now = 1_000_000;
+        let a = req(3, RequestClass::Online, 100_000);
+        let b = req(1, RequestClass::Online, 100_000);
+        let e = engine(true);
+        let (si, c) = e.candidate(&[Some(a), Some(b)], now).unwrap();
+        assert_eq!((si, c.id), (1, 1), "equal arrival → lower id");
+    }
+
+    #[test]
+    fn prefill_victim_is_least_urgent_eligible_batch() {
+        let e = engine(true);
+        let now = 1_000_000;
+        let cand = req(99, RequestClass::Online, now - 500_000);
+        // Batch 0: offline, barely started → eligible.
+        let b0 = in_flight(
+            vec![req(0, RequestClass::Offline, 0)],
+            now - 10_000,
+            1_000_000,
+        );
+        // Batch 1: offline that has aged less (later arrival) → even less
+        // urgent, also eligible; the victim choice must prefer it.
+        let b1 = in_flight(
+            vec![req(1, RequestClass::Offline, now - 1_000)],
+            now - 10_000,
+            1_000_000,
+        );
+        // Batch 2: contains an urgent online member → protected.
+        let b2 = in_flight(
+            vec![
+                req(2, RequestClass::Offline, 0),
+                req(3, RequestClass::Online, now - 390_000),
+            ],
+            now - 10_000,
+            1_000_000,
+        );
+        // Batch 3: past the abort-progress gate → protected.
+        let b3 = in_flight(
+            vec![req(4, RequestClass::Offline, now)],
+            now - 900_000,
+            1_000_000,
+        );
+        let running = vec![(0, &b0), (1, &b1), (2, &b2), (3, &b3)];
+        assert_eq!(e.pick_prefill_victim(&cand, &running, now), Some(1));
+        // A candidate that outranks no eligible batch → None (a fresh
+        // offline request ranks below every aged offline member).
+        let weak = req(98, RequestClass::Offline, now);
+        assert_eq!(e.pick_prefill_victim(&weak, &running, now), None);
+    }
+
+    #[test]
+    fn decode_victims_cover_deficit_least_urgent_first() {
+        let e = engine(true);
+        let now = 10_000_000;
+        // Offline seqs: footprints 1100 each (1000 + 100); the online seq
+        // must never be a victim. Aging makes the *latest* offline arrival
+        // the least urgent.
+        let active = vec![
+            seq(0, RequestClass::Offline, 0, 1000, 100, 5),
+            seq(1, RequestClass::Online, 0, 1000, 100, 5),
+            seq(2, RequestClass::Offline, 5_000_000, 1000, 100, 5),
+            seq(3, RequestClass::Offline, 2_000_000, 1000, 100, 5),
+        ];
+        // Deficit of 2000 tokens → two victims, least urgent first.
+        let v = e.pick_decode_victims(&active, 2000, now);
+        assert_eq!(v, vec![2, 3], "latest offline arrivals evict first");
+        // Sequences at or within one token of done are never victims,
+        // even as the least-urgent offline entries: a finished one is
+        // only waiting for the boundary that completes it, and a
+        // one-token-remaining one frees its KV at that same boundary
+        // cheaper than any recompute could.
+        let mut with_done = active.clone();
+        with_done.push(seq(4, RequestClass::Offline, 9_000_000, 1000, 1, 1));
+        with_done.push(seq(5, RequestClass::Offline, 9_500_000, 1000, 100, 99));
+        assert_eq!(
+            e.pick_decode_victims(&with_done, 2000, now),
+            vec![2, 3],
+            "finished or one-token-remaining seqs are not evictable"
+        );
+        // Deficit one victim covers.
+        assert_eq!(e.pick_decode_victims(&active, 500, now), vec![2]);
+        // Deficit the whole offline pool cannot cover → evict nothing.
+        assert!(e.pick_decode_victims(&active, 10_000, now).is_empty());
+        // Cap bounds the pass even when the deficit would need more.
+        let cfg = SystemConfig::default();
+        let mut spec = cfg.preempt.clone();
+        spec.enabled = true;
+        spec.max_evictions = 1;
+        let capped =
+            PreemptionEngine::new(spec, cfg.priority.clone(), cfg.slo.clone());
+        assert!(
+            capped.pick_decode_victims(&active, 2000, now).is_empty(),
+            "cap of 1 cannot cover a 2-victim deficit → all-or-nothing"
+        );
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_and_conserves_footprint() {
+        let mut e = engine(true);
+        let s = seq(9, RequestClass::Offline, 42, 800, 200, 60);
+        let qr = e.checkpoint_seq(&s);
+        assert_eq!(qr.id, 9);
+        assert_eq!(qr.arrival, 42, "arrival (and aging credit) preserved");
+        assert_eq!(qr.len, 860, "prefill replays prompt + generated context");
+        assert_eq!(qr.output_len, 140, "remaining generation shrinks");
+        assert_eq!(
+            (qr.len + qr.output_len),
+            (s.input_len + s.output_len),
+            "full-context KV footprint unchanged by checkpointing"
+        );
+        let ri = e.take_restore(9).unwrap();
+        assert_eq!(ri.input_len, 800);
+        assert_eq!(ri.output_len, 200);
+        assert_eq!(ri.generated, 60);
+        assert_eq!(ri.first_token, 42 + 1000);
+        assert_eq!(ri.padded_len, 800, "original batch padding preserved");
+        assert!(e.take_restore(9).is_none(), "checkpoint consumed once");
+        assert!(e.take_restore(123).is_none(), "never-evicted id is None");
+    }
+}

@@ -86,6 +86,20 @@ impl PriorityScorer {
             .then(a.arrival.cmp(&b.arrival))
     }
 
+    /// The canonical order reversed: `Less` when `a` is *less* urgent
+    /// than `b`. This is the victim-selection order of the preemption
+    /// subsystem (evict/abort the least-urgent work first) — sharing the
+    /// comparator with the drain order is what guarantees a victim can
+    /// never outrank the request preempting it.
+    pub fn least_urgent_first(
+        &self,
+        a: &QueuedReq,
+        b: &QueuedReq,
+        now: Micros,
+    ) -> Ordering {
+        self.compare(b, a, now)
+    }
+
     /// Precomputed drain key: a *stable* ascending sort on it reproduces
     /// the old stable `sort_by(compare)` exactly — urgent first, then
     /// score descending, then arrival, ties keeping queue order — while
@@ -237,6 +251,18 @@ mod tests {
         assert_eq!(s.compare(&fresh_online, &offline, now), Ordering::Less);
         assert_eq!(s.compare(&offline, &urgent_online, now), Ordering::Greater);
         assert_eq!(s.compare(&offline, &offline, now), Ordering::Equal);
+    }
+
+    #[test]
+    fn least_urgent_first_is_compare_reversed() {
+        let s = scorer();
+        let now = 1_000_000;
+        let urgent = req(RequestClass::Online, 100_000);
+        let offline = req(RequestClass::Offline, 0);
+        assert_eq!(s.compare(&urgent, &offline, now), Ordering::Less);
+        assert_eq!(s.least_urgent_first(&offline, &urgent, now), Ordering::Less);
+        assert_eq!(s.least_urgent_first(&urgent, &offline, now), Ordering::Greater);
+        assert_eq!(s.least_urgent_first(&offline, &offline, now), Ordering::Equal);
     }
 
     #[test]

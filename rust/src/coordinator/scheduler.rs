@@ -24,17 +24,20 @@
 //! DistServe-like baseline differ only in the [`PrefillPlanner`] plugged
 //! in; priority-aware SLO scheduling rides inside the bucket planner.
 
+use super::balance;
 use super::batcher::{DynamicBatcher, FormedBatch, KvMemoryModel};
 use super::bucket::{BucketManager, QueuedReq};
-use super::events::{Event, EventKind, EventQueue};
+use super::events::{Event, EventId, EventKind, EventQueue};
 use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
 use super::monitor::GlobalMonitor;
+use super::preempt::PreemptionEngine;
 use super::priority::PriorityScorer;
 use super::shard::ShardSet;
 use crate::cluster::{DecodeBatch, DecodeSeq, Engine, PrefillBatch, PrefillItem};
 use crate::config::SystemConfig;
 use crate::workload::request::Completion;
 use crate::workload::{Request, RequestClass, Trace};
+use crate::workload::RequestId;
 use crate::Micros;
 use std::time::Instant;
 
@@ -66,15 +69,40 @@ pub trait PrefillPlanner {
 
     /// Work-stealing donor side: give up to `max_n` queued requests from
     /// the *tail* of the drain order (the least-urgent end of the queue
-    /// segment the next `plan` would serve), preserving their relative
+    /// segment the next `plan` would serve), whose cumulative
+    /// full-context footprint stays within `max_tokens` (the thief's KV
+    /// admission headroom — stealing more than the thief can admit just
+    /// parks backlog behind a different fence), preserving their relative
     /// order. Implementations must never surrender the head half of that
     /// segment — the donor keeps what it was about to dispatch, so a
     /// steal can move backlog but never the most urgent work.
-    fn steal_tail(&mut self, max_n: usize, now: Micros) -> Vec<QueuedReq>;
+    fn steal_tail(
+        &mut self,
+        max_n: usize,
+        max_tokens: u64,
+        now: Micros,
+    ) -> Vec<QueuedReq>;
 
     /// Work-stealing thief side: absorb requests stolen from another
     /// shard's planner, as if they had been admitted here originally.
+    /// Preemption reuses this for its requeues (aborted prefill batches,
+    /// checkpoint-restored evictees).
     fn absorb(&mut self, reqs: Vec<QueuedReq>, now: Micros);
+
+    /// The queued online request with the earliest arrival — online TTFT
+    /// urgency is monotone in waiting time, so this is the request whose
+    /// slack the preemption triggers weigh. Ties break on id so the peek
+    /// is deterministic. None when no online request is queued.
+    fn oldest_online(&self) -> Option<QueuedReq>;
+
+    /// True when this planner's drain order serves by SLO urgency, i.e.
+    /// an urgent requeued request is dispatched ahead of the work it
+    /// preempted. The whole preemption subsystem arms only when this
+    /// holds: under a pure-FIFO drain the aborted batch's members — or
+    /// the earlier-arrival queue head, for an eviction — would simply
+    /// re-take the freed slot/KV, making every preemption pure wasted
+    /// FLOP-time (the scheduler warns and stays inert instead).
+    fn drain_follows_urgency(&self) -> bool;
 
     /// Cumulative planning overhead (ns) — bucketing cost for Fig. 6.
     fn overhead_ns(&self) -> u64;
@@ -83,6 +111,38 @@ pub trait PrefillPlanner {
     fn n_buckets(&self) -> usize {
         1
     }
+}
+
+/// Number of entries from `tail` (iterated least-urgent-first, i.e. the
+/// donor queue's back-to-front) whose cumulative full-context footprint
+/// stays within `max_tokens` — the KV-aware steal-sizing rule shared by
+/// both planner families so their donor behavior cannot silently
+/// diverge.
+pub(crate) fn kv_capped_take<'a>(
+    tail: impl Iterator<Item = &'a QueuedReq>,
+    max_tokens: u64,
+) -> usize {
+    let mut take = 0usize;
+    let mut tokens = 0u64;
+    for r in tail {
+        let footprint = r.footprint();
+        if tokens + footprint > max_tokens {
+            break;
+        }
+        tokens += footprint;
+        take += 1;
+    }
+    take
+}
+
+/// The queued online request with the earliest arrival, ties on id —
+/// the shared [`PrefillPlanner::oldest_online`] implementation.
+pub(crate) fn oldest_online_in<'a>(
+    reqs: impl Iterator<Item = &'a QueuedReq>,
+) -> Option<QueuedReq> {
+    reqs.filter(|r| r.class == RequestClass::Online)
+        .min_by_key(|r| (r.arrival, r.id))
+        .copied()
 }
 
 /// BucketServe's planner: Bucketing Manager + Dynamic Batching Controller
@@ -145,7 +205,7 @@ impl PrefillPlanner for BucketPlanner {
                 .buckets()
                 .iter()
                 .flat_map(|b| b.requests.iter())
-                .map(|r| (r.len + r.output_len) as f64)
+                .map(|r| r.footprint() as f64)
                 .sum::<f64>()
                 / queued as f64;
             let n_max = (headroom_tokens as f64 / mean_len.max(1.0))
@@ -195,11 +255,16 @@ impl PrefillPlanner for BucketPlanner {
             .buckets()
             .iter()
             .flat_map(|b| b.requests.iter())
-            .map(|r| (r.len + r.output_len) as u64)
+            .map(QueuedReq::footprint)
             .sum()
     }
 
-    fn steal_tail(&mut self, max_n: usize, now: Micros) -> Vec<QueuedReq> {
+    fn steal_tail(
+        &mut self,
+        max_n: usize,
+        max_tokens: u64,
+        now: Micros,
+    ) -> Vec<QueuedReq> {
         if max_n == 0 {
             return Vec::new();
         }
@@ -208,13 +273,16 @@ impl PrefillPlanner for BucketPlanner {
         // so the stolen tail is exactly the work the donor would have
         // served last. Capped at half the bucket so the urgent head
         // always stays with the donor (a one-request bucket yields
-        // nothing; rebalance just skips the move).
+        // nothing; rebalance just skips the move), and KV-capped so the
+        // donor never surrenders more full-context tokens than the
+        // thief's decode headroom (`max_tokens`) can admit.
         let Some(idx) = self.batcher.pick_bucket(&self.mgr, now) else {
             return Vec::new();
         };
         let b = &mut self.mgr.buckets_mut()[idx];
         self.batcher.sort_for_drain(b, now);
-        let take = max_n.min(b.requests.len() / 2);
+        let cap = max_n.min(b.requests.len() / 2);
+        let take = kv_capped_take(b.requests.iter().rev().take(cap), max_tokens);
         b.requests.split_off(b.requests.len() - take)
     }
 
@@ -222,6 +290,16 @@ impl PrefillPlanner for BucketPlanner {
         for r in reqs {
             self.mgr.assign(r);
         }
+    }
+
+    fn oldest_online(&self) -> Option<QueuedReq> {
+        oldest_online_in(self.mgr.buckets().iter().flat_map(|b| b.requests.iter()))
+    }
+
+    fn drain_follows_urgency(&self) -> bool {
+        // Exactly when the priority scorer governs the drain (priority
+        // enabled + FCFS policy) — the same gate the batcher applies.
+        self.batcher.scorer().is_some()
     }
 
     fn overhead_ns(&self) -> u64 {
@@ -267,6 +345,21 @@ pub struct RunReport {
     pub shard_routed: Vec<u64>,
     /// Per-shard prefill batches dispatched.
     pub shard_batches: Vec<u64>,
+    /// Whether the preemption subsystem was armed for this run (gates the
+    /// Summary JSON block so disabled runs stay byte-identical).
+    pub preempt_enabled: bool,
+    /// Prefill batches aborted mid-flight by preemption.
+    pub prefill_aborts: u64,
+    /// Decode sequences evicted (checkpoint-and-restore) by preemption.
+    pub decode_evictions: u64,
+    /// GPU time burned by aborted prefill batches (busy, zero useful).
+    pub wasted_prefill_us: u64,
+    /// Padded prefill tokens whose FLOPs were discarded by aborts.
+    pub wasted_prefill_tokens: u64,
+    /// Full-context KV tokens released by decode evictions.
+    pub evicted_kv_tokens: u64,
+    /// Context tokens evicted sequences must replay at re-prefill.
+    pub recompute_tokens: u64,
     /// Set when the run ended abnormally (scheduler stall / livelock
     /// guard); carries the diagnostics the old panic printed. Completions
     /// gathered before the stall are still reported.
@@ -411,6 +504,7 @@ pub struct PdScheduler {
     cfg: SystemConfig,
     shards: ShardSet,
     monitor: GlobalMonitor,
+    preempt: PreemptionEngine,
 }
 
 impl PdScheduler {
@@ -420,10 +514,22 @@ impl PdScheduler {
     ) -> PdScheduler {
         let n_decode = cfg.fleet.n_decode.max(1) as usize;
         PdScheduler {
-            cfg: cfg.clone(),
             shards: ShardSet::new(&cfg.sharding, n_decode, factory),
             monitor: GlobalMonitor::new(cfg.scheduler.monitor_window_us, 0),
+            preempt: Self::make_preempt(cfg),
+            cfg: cfg.clone(),
         }
+    }
+
+    /// The one place the config turns into a [`PreemptionEngine`] —
+    /// built at construction and rebuilt fresh for every run (checkpoints
+    /// and the anti-thrash guard must not leak across traces).
+    fn make_preempt(cfg: &SystemConfig) -> PreemptionEngine {
+        PreemptionEngine::new(
+            cfg.preempt.clone(),
+            cfg.priority.clone(),
+            cfg.slo.clone(),
+        )
     }
 
     /// Serve the whole trace; returns the run report.
@@ -450,6 +556,22 @@ impl PdScheduler {
             self.cfg.scheduler.monitor_window_us,
             &shard_budgets,
         );
+        self.preempt = Self::make_preempt(&self.cfg);
+        // Preemption only converts freed capacity into TTFT wins when
+        // the drain order serves by urgency; surface the dead
+        // combination (e.g. `--preempt.enabled on --priority.enabled
+        // false`, an SJF/LJF policy, or the FIFO baseline) instead of
+        // silently reporting all-zero counters. Shards share one
+        // planner factory, so shard 0 speaks for all of them.
+        let preempt_active = self.cfg.preempt.enabled
+            && self.shards.get(0).planner.drain_follows_urgency();
+        if self.cfg.preempt.enabled && !preempt_active {
+            crate::log_warn!(
+                "preempt.enabled is inert: the drain order is not \
+                 urgency-ordered (requires priority.enabled with the \
+                 fcfs policy); no trigger will ever fire"
+            );
+        }
         let n_prefill = self.cfg.fleet.n_prefill.max(1) as usize;
         let n_decode = self.cfg.fleet.n_decode.max(1) as usize;
         let weight_bytes = engine.model().weight_bytes() as f64;
@@ -459,6 +581,8 @@ impl PdScheduler {
         let mut core = RunCore {
             shards: &mut self.shards,
             monitor: &mut self.monitor,
+            preempt: &mut self.preempt,
+            preempt_active,
             engine,
             events: EventQueue::new(),
             prefill: PrefillFleet::new(n_prefill),
@@ -467,6 +591,7 @@ impl PdScheduler {
                 n_prefill,
                 n_decode,
                 n_shards,
+                preempt_enabled: self.cfg.preempt.enabled,
                 ..Default::default()
             },
             clock: 0,
@@ -477,6 +602,10 @@ impl PdScheduler {
             wall_start: Instant::now(),
             weight_bytes,
             kv_per_token,
+            boost_shard: None,
+            preempt_wake: None,
+            recheck_preempt: false,
+            restore_buf: Vec::new(),
         };
         if core.total > 0 {
             core.events.push(trace.requests[0].arrival, EventKind::Arrival);
@@ -495,11 +624,31 @@ impl PdScheduler {
             };
             core.advance_to(ev.at);
             core.handle(ev, trace);
-            while let Some(due) = core.events.pop_due(core.clock) {
-                core.handle(due, trace);
+            // Drain same-instant events and run the preemption check; a
+            // trigger schedules its own same-instant events (the
+            // `PreemptPrefill` abort, a zero-latency `RestoreReady`), so
+            // loop until the instant is quiescent. The anti-thrash guard
+            // in the engine bounds this to one extra pass per candidate,
+            // and with preemption disabled the check is a constant-time
+            // `false` — one pass, exactly the pre-preemption behavior.
+            loop {
+                while let Some(due) = core.events.pop_due(core.clock) {
+                    core.handle(due, trace);
+                }
+                core.admit_handoffs();
+                if !core.check_preemption() {
+                    break;
+                }
             }
-            core.admit_handoffs();
             core.dispatch_prefill();
+            if std::mem::take(&mut core.recheck_preempt) {
+                // Dispatch just resolved the outstanding preemption; run
+                // the check once more so the next candidate acts (its
+                // events pop at this same instant) or plants its wake,
+                // instead of waiting for the next — possibly distant —
+                // event.
+                core.check_preemption();
+            }
             core.launch_decode();
             core.schedule_idle_wakes();
             core.report.makespan_us = core.report.makespan_us.max(core.clock);
@@ -534,6 +683,11 @@ impl PdScheduler {
 struct RunCore<'a> {
     shards: &'a mut ShardSet,
     monitor: &'a mut GlobalMonitor,
+    preempt: &'a mut PreemptionEngine,
+    /// Preemption armed *and* able to pay off: `preempt.enabled` with an
+    /// urgency-ordered drain (uniform across shards — one factory).
+    /// False short-circuits every preemption path to a single branch.
+    preempt_active: bool,
     engine: &'a mut dyn Engine,
     events: EventQueue,
     prefill: PrefillFleet,
@@ -547,6 +701,22 @@ struct RunCore<'a> {
     wall_start: Instant,
     weight_bytes: f64,
     kv_per_token: f64,
+    /// One-shot dispatch preference set by a prefill abort: the next
+    /// dispatch tries the preempting candidate's shard first, so the slot
+    /// freed for it cannot be consumed by another shard's backlog.
+    boost_shard: Option<usize>,
+    /// The outstanding `PreemptCheck` wake, if any: its timestamp (for
+    /// dedupe) and its event id (so a superseded wake is tombstoned
+    /// instead of left to fire stale).
+    preempt_wake: Option<(Micros, EventId)>,
+    /// Set when this round's dispatch resolved the outstanding
+    /// preemption: the check already ran this round, so it must run once
+    /// more or the next candidate's trigger/wake waits for the next
+    /// event, which may be arbitrarily far away.
+    recheck_preempt: bool,
+    /// Checkpoint-restored requests awaiting their `RestoreReady` event:
+    /// (due time, decode instance whose owner shard requeues them, entry).
+    restore_buf: Vec<(Micros, usize, QueuedReq)>,
 }
 
 impl<'a> RunCore<'a> {
@@ -579,6 +749,15 @@ impl<'a> RunCore<'a> {
             EventKind::HandoffReady { decode } => {
                 // Pure wake-up: admission happens in admit_handoffs.
                 self.decode.get_mut(decode).wake_at = None;
+            }
+            EventKind::PreemptPrefill { instance } => {
+                self.on_preempt_prefill(instance)
+            }
+            EventKind::RestoreReady { decode } => self.on_restore_ready(decode),
+            EventKind::PreemptCheck => {
+                // Pure wake-up: the preemption check itself runs in the
+                // state-driven phases after every event.
+                self.preempt_wake = None;
             }
         }
     }
@@ -632,23 +811,47 @@ impl<'a> RunCore<'a> {
             p.duration * p.formed.batch.n() as u64;
         self.monitor.on_batch_done(p.duration);
         let transfer = self.engine.kv_transfer(p.formed.batch.useful_tokens());
-        let d = self.decode.get_mut(p.target_decode);
         for r in &p.formed.reqs {
-            self.report.queue_wait_us += p
-                .done_at
-                .saturating_sub(p.duration)
-                .saturating_sub(r.arrival);
-            d.pending.push(DecodeSeqState {
-                id: r.id,
-                class: r.class,
-                arrival: r.arrival,
-                input_len: r.len,
-                padded_len: p.formed.batch.padded_len,
-                output_len: r.output_len,
-                generated: 1, // prefill produced the first token
-                first_token: p.done_at,
-                ready_at: p.done_at + transfer,
-            });
+            // A checkpoint-restored sequence resumes where eviction cut
+            // it off: the recompute prefill replayed `input + generated`
+            // context and produced token `generated + 1`; the original
+            // prompt/output split and the already-paid first token come
+            // back from the checkpoint so completion records (and TTFT)
+            // are indistinguishable from an uninterrupted run. Its queue
+            // wait was charged at the original prefill — counting
+            // dispatch-to-dispatch again would book decode time and the
+            // first prefill as "queueing" in the Fig. 6a breakdown.
+            let seq = match self.preempt.take_restore(r.id) {
+                Some(ri) => DecodeSeqState {
+                    id: r.id,
+                    class: r.class,
+                    arrival: r.arrival,
+                    input_len: ri.input_len,
+                    padded_len: ri.padded_len,
+                    output_len: ri.output_len,
+                    generated: ri.generated + 1,
+                    first_token: ri.first_token,
+                    ready_at: p.done_at + transfer,
+                },
+                None => {
+                    self.report.queue_wait_us += p
+                        .done_at
+                        .saturating_sub(p.duration)
+                        .saturating_sub(r.arrival);
+                    DecodeSeqState {
+                        id: r.id,
+                        class: r.class,
+                        arrival: r.arrival,
+                        input_len: r.len,
+                        padded_len: p.formed.batch.padded_len,
+                        output_len: r.output_len,
+                        generated: 1, // prefill produced the first token
+                        first_token: p.done_at,
+                        ready_at: p.done_at + transfer,
+                    }
+                }
+            };
+            self.decode.get_mut(p.target_decode).pending.push(seq);
         }
         self.monitor.on_decode_enter(p.formed.reqs.len());
     }
@@ -667,7 +870,7 @@ impl<'a> RunCore<'a> {
         for mut s in d.active.drain(..) {
             s.generated += 1;
             if s.generated >= s.output_len {
-                let footprint = (s.input_len + s.output_len) as u64;
+                let footprint = s.footprint();
                 d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
                 self.monitor.kv_release(shard, footprint);
                 self.monitor.on_decode_exit(1);
@@ -700,6 +903,258 @@ impl<'a> RunCore<'a> {
         }
     }
 
+    /// Preemption pass (constant-time false unless `preempt.enabled`):
+    /// find the most urgent queued online request across shards; if one
+    /// has burned past the urgency threshold, (a) schedule a
+    /// `PreemptPrefill` abort of the least-urgent in-flight batch when
+    /// every prefill slot is busy with work the candidate outranks, and
+    /// (b) evict least-urgent offline decode sequences when the
+    /// candidate's KV admission would fail on its shard's best instance.
+    /// Returns true when it acted, so the caller re-drains same-instant
+    /// events before dispatching.
+    ///
+    /// Cost note: the candidate scan peeks every shard's oldest online
+    /// request, an O(queued) walk per event while preemption is enabled
+    /// (the default-off path pays one branch). A cached per-planner
+    /// min-arrival peek would make it O(shards); see the ROADMAP
+    /// follow-up before enabling preemption at very deep queues.
+    fn check_preemption(&mut self) -> bool {
+        if !self.preempt_active || self.preempt.pending().is_some() {
+            // Disabled (or armed but inert under a non-urgency drain —
+            // warned at run start), or an outstanding preemption blocks
+            // new candidates anyway — skip the queue walk entirely.
+            return false;
+        }
+        let oldest: Vec<Option<QueuedReq>> = (0..self.shards.n())
+            .map(|si| self.shards.get(si).planner.oldest_online())
+            .collect();
+        let Some((csi, cand)) = self.preempt.candidate(&oldest, self.clock)
+        else {
+            // Nobody is ripe yet: plant a wake at the earliest
+            // threshold crossing, or an urgency trigger landing in an
+            // otherwise event-free window (e.g. the trace tail, one
+            // long offline wave in flight, decode idle) would only be
+            // noticed when that wave completes — too late to abort it.
+            self.schedule_preempt_wake(&oldest);
+            return false;
+        };
+        // Decide first, commit only if the plan actually leaves the
+        // candidate dispatchable — an abort or eviction whose freed
+        // capacity the candidate still could not use would be pure
+        // wasted work that also ties up the pending guard.
+        //
+        // Trigger (a) selection: abort candidate when every prefill slot
+        // is busy with work the candidate outranks. What the abort frees
+        // (its target instance's KV reservation) counts toward the
+        // candidate's projected headroom below, so trigger (b) never
+        // evicts to cover a deficit the abort already covers.
+        let abort: Option<(usize, usize, u64)> = if (0..self.prefill.n())
+            .all(|pi| !self.prefill.is_idle(pi))
+        {
+            let n = self.prefill.n();
+            let running: Vec<(usize, &InFlightPrefill)> = (0..n)
+                .filter_map(|pi| self.prefill.get(pi).map(|p| (pi, p)))
+                .collect();
+            self.preempt
+                .pick_prefill_victim(&cand, &running, self.clock)
+                .map(|pi| {
+                    let p = running.iter().find(|(i, _)| *i == pi).unwrap().1;
+                    let freed: u64 =
+                        p.formed.reqs.iter().map(QueuedReq::footprint).sum();
+                    (pi, p.target_decode, freed)
+                })
+        } else {
+            None
+        };
+        // Projected KV headroom on the candidate shard's best owned
+        // instance (admission is per-instance, so that is where freed
+        // capacity becomes usable). The abort's released reservation
+        // counts wherever it lands: if the victim's target instance
+        // belongs to the candidate shard and ends up with more projected
+        // headroom than the current best, admission (and any eviction)
+        // retargets there — evicting elsewhere to cover a deficit the
+        // abort already covers would be pure recompute waste.
+        let (mut ti, mut headroom) = balance::best_decode_in(
+            &self.shards.get(csi).owned,
+            &self.decode,
+            self.per_decode_budget,
+        );
+        if let Some((_, di, freed)) = abort {
+            if self.shards.owner_of(di) == csi {
+                let projected = self
+                    .per_decode_budget
+                    .saturating_sub(self.decode.get(di).reserved_tokens)
+                    + freed;
+                if projected >= headroom {
+                    ti = di;
+                    headroom = projected;
+                }
+            }
+        }
+        let need = cand.footprint();
+        // Trigger (b) selection: evict for any remaining deficit, but
+        // only at an iteration boundary (mid-iteration KV is pinned by
+        // the running kernel) and only when the candidate has a path to
+        // a prefill slot this round (one idle, or the abort frees one).
+        let slot_reachable = abort.is_some()
+            || (0..self.prefill.n()).any(|pi| self.prefill.is_idle(pi));
+        let victims = if slot_reachable
+            && need > headroom
+            && self.decode.get(ti).at_boundary()
+        {
+            self.preempt.pick_decode_victims(
+                &self.decode.get(ti).active,
+                need - headroom,
+                self.clock,
+            )
+        } else {
+            Vec::new()
+        };
+        // Commit gate: the plan must end with the candidate admissible
+        // (pick_decode_victims is all-or-nothing, so non-empty victims
+        // cover the whole deficit). Otherwise do nothing — the blocking
+        // condition (a boundary, a completion, more headroom) arrives as
+        // a later event and the check re-fires then.
+        let dispatchable = need <= headroom || !victims.is_empty();
+        let acted = dispatchable && (abort.is_some() || !victims.is_empty());
+        if !acted {
+            return false;
+        }
+        if let Some((pi, _, _)) = abort {
+            self.events
+                .push(self.clock, EventKind::PreemptPrefill { instance: pi });
+        }
+        for id in victims {
+            self.evict_decode_seq(ti, id);
+        }
+        // Whichever trigger fired, the freed capacity (slot or KV) was
+        // bought for this candidate: the next dispatch must try its
+        // shard first or another shard's backlog can consume it.
+        self.preempt.note_preempt(cand.id);
+        self.boost_shard = Some(csi);
+        true
+    }
+
+    /// No candidate has crossed the urgency threshold yet: schedule a
+    /// `PreemptCheck` wake at the earliest crossing among the queued
+    /// online peeks (deduped via `preempt_wake_at`). Conditions other
+    /// than the clock (slots freeing, boundaries, arrivals) already
+    /// arrive as events, so the crossing is the only trigger edge that
+    /// needs its own wake-up.
+    fn schedule_preempt_wake(&mut self, oldest: &[Option<QueuedReq>]) {
+        let Some(crossing) = oldest
+            .iter()
+            .flatten()
+            .map(|r| self.preempt.crossing_at(r))
+            .min()
+        else {
+            // No online work queued anywhere: retire any planted wake
+            // instead of letting it fire stale and burn a scan.
+            if let Some((_, id)) = self.preempt_wake.take() {
+                self.events.cancel(id);
+            }
+            return;
+        };
+        if crossing <= self.clock {
+            return; // float-rounding edge: the next real event re-checks
+        }
+        if let Some((at, _)) = self.preempt_wake {
+            if at == crossing {
+                return; // already planted
+            }
+        }
+        // A superseded wake (its request dispatched or stolen away) is
+        // tombstoned rather than left to fire stale and burn a scan.
+        if let Some((_, id)) = self.preempt_wake.take() {
+            self.events.cancel(id);
+        }
+        let id = self.events.push(crossing, EventKind::PreemptCheck);
+        self.preempt_wake = Some((crossing, id));
+    }
+
+    /// Trigger (a) mechanism: abort the batch in flight on `pi`,
+    /// tombstone its completion event, charge the burned GPU time (and
+    /// the FLOP-proportional share of its padded tokens) as waste,
+    /// release its KV reservation, and return its requests to the owning
+    /// shard's queue. The drain sort restores arrival order among them.
+    fn on_preempt_prefill(&mut self, pi: usize) {
+        let Some(p) = self.prefill.abort(pi) else {
+            return; // the batch completed in this same instant
+        };
+        self.events.cancel(p.done_event);
+        let elapsed = self.clock.saturating_sub(p.started_at).min(p.duration);
+        self.report.prefill_busy_us += elapsed;
+        self.report.wasted_prefill_us += elapsed;
+        self.report.wasted_prefill_tokens += (p.formed.batch.padded_tokens()
+            as u128
+            * elapsed as u128
+            / p.duration.max(1) as u128) as u64;
+        self.report.prefill_aborts += 1;
+        let footprint: u64 = p
+            .formed
+            .reqs
+            .iter()
+            .map(QueuedReq::footprint)
+            .sum();
+        let si = self.shards.owner_of(p.target_decode);
+        let d = self.decode.get_mut(p.target_decode);
+        d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
+        self.monitor.kv_release(si, footprint);
+        self.monitor.on_requeue(si, p.formed.reqs.len());
+        self.shards.get_mut(si).planner.absorb(p.formed.reqs, self.clock);
+    }
+
+    /// Trigger (b) mechanism, per victim: drop the sequence from the
+    /// active set, release its full-context KV reservation, checkpoint
+    /// its generated-token progress, and schedule the `RestoreReady`
+    /// requeue once the (tiny) checkpoint transfer lands.
+    fn evict_decode_seq(&mut self, di: usize, id: RequestId) {
+        let si = self.shards.owner_of(di);
+        let (s, footprint) = {
+            let d = self.decode.get_mut(di);
+            let Some(pos) = d.active.iter().position(|s| s.id == id) else {
+                return;
+            };
+            let s = d.active.remove(pos);
+            let footprint = s.footprint();
+            d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
+            (s, footprint)
+        };
+        self.monitor.kv_release(si, footprint);
+        self.monitor.on_decode_exit(1);
+        self.engine.release(s.id);
+        let ckpt = self.engine.checkpoint(s.generated);
+        let entry = self.preempt.checkpoint_seq(&s);
+        self.report.decode_evictions += 1;
+        self.report.evicted_kv_tokens += footprint;
+        self.report.recompute_tokens += entry.len as u64;
+        let due = self.clock + ckpt;
+        self.restore_buf.push((due, di, entry));
+        self.events.push(due, EventKind::RestoreReady { decode: di });
+    }
+
+    /// A checkpoint landed: requeue every restore-buffer entry that is
+    /// due for this decode instance's owner shard, as
+    /// recompute-from-checkpoint work.
+    fn on_restore_ready(&mut self, di: usize) {
+        let si = self.shards.owner_of(di);
+        let clock = self.clock;
+        let mut ready = Vec::new();
+        self.restore_buf.retain(|&(due, d, entry)| {
+            if d == di && due <= clock {
+                ready.push(entry);
+                false
+            } else {
+                true
+            }
+        });
+        if ready.is_empty() {
+            return;
+        }
+        self.monitor.on_requeue(si, ready.len());
+        self.shards.get_mut(si).planner.absorb(ready, clock);
+    }
+
     /// Form and dispatch prefill batches onto idle instances. The shard
     /// layer supplies the candidates: shards in descending order of their
     /// best owned decode instance's KV headroom (Eq. 6 admission), each
@@ -711,9 +1166,18 @@ impl<'a> RunCore<'a> {
             if !self.prefill.is_idle(pi) {
                 continue;
             }
-            let order = self
+            let mut order = self
                 .shards
                 .dispatch_order(&self.decode, self.per_decode_budget);
+            // A prefill abort promised its slot to the preempting
+            // candidate's shard; honor that before the headroom order.
+            if let Some(bs) = self.boost_shard.take() {
+                if let Some(pos) = order.iter().position(|&(si, _, _)| si == bs)
+                {
+                    let entry = order.remove(pos);
+                    order.insert(0, entry);
+                }
+            }
             let mut chosen: Option<(usize, usize, FormedBatch)> = None;
             for &(si, ti, headroom) in &order {
                 if let Some(f) =
@@ -756,10 +1220,15 @@ impl<'a> RunCore<'a> {
                 }
             }
             let Some((si, ti, formed)) = chosen else { break };
+            let had_pending = self.preempt.pending().is_some();
+            self.preempt.on_dispatch(&formed.reqs);
+            if had_pending && self.preempt.pending().is_none() {
+                self.recheck_preempt = true;
+            }
             let footprint: u64 = formed
                 .reqs
                 .iter()
-                .map(|r| (r.len + r.output_len) as u64)
+                .map(QueuedReq::footprint)
                 .sum();
             self.decode.get_mut(ti).reserved_tokens += footprint;
             self.monitor.kv_reserve(si, footprint);
@@ -776,11 +1245,19 @@ impl<'a> RunCore<'a> {
             } else {
                 self.clock + duration
             };
+            let done_event =
+                self.events.push(done_at, EventKind::PrefillDone { instance: pi });
             self.prefill.dispatch(
                 pi,
-                InFlightPrefill { formed, done_at, duration, target_decode: ti },
+                InFlightPrefill {
+                    formed,
+                    done_at,
+                    duration,
+                    target_decode: ti,
+                    started_at: self.clock,
+                    done_event,
+                },
             );
-            self.events.push(done_at, EventKind::PrefillDone { instance: pi });
         }
     }
 
@@ -1201,6 +1678,142 @@ mod tests {
         // shard_scaling bench quantifies it); correctness-wise both runs
         // must finish clean.
         assert!(fixed.error.is_none() && stolen.error.is_none());
+    }
+
+    #[test]
+    fn oldest_online_peeks_min_arrival_online() {
+        let cfg = small_cfg();
+        let mut planner = BucketPlanner::new(&cfg);
+        assert!(planner.oldest_online().is_none());
+        // Offline requests never surface, whatever their age.
+        planner.admit(&Request::new(0, RequestClass::Offline, 50, 10, 0), 0);
+        assert!(planner.oldest_online().is_none());
+        // Spread online requests across both ends of the length range so
+        // a bucket split cannot hide the oldest one.
+        planner.admit(&Request::new(1, RequestClass::Online, 3000, 10, 500), 500);
+        planner.admit(&Request::new(2, RequestClass::Online, 20, 10, 100), 500);
+        for i in 3..20u64 {
+            planner.admit(
+                &Request::new(i, RequestClass::Online, 10, 10, 1000 + i),
+                1000 + i,
+            );
+        }
+        let _ = planner.plan(2000, 0); // adjust() may split; peek must work
+        assert_eq!(planner.oldest_online().unwrap().id, 2);
+        // Draining the oldest promotes the next-oldest.
+        let r = planner.force_pop(2000).unwrap();
+        assert_eq!(r.id, 2);
+        assert_eq!(planner.oldest_online().unwrap().id, 1);
+    }
+
+    #[test]
+    fn bucket_steal_tail_respects_token_cap() {
+        let cfg = small_cfg();
+        let mut planner = BucketPlanner::new(&cfg);
+        for i in 0..10u64 {
+            planner.admit(&Request::new(i, RequestClass::Online, 100, 10, i), i);
+        }
+        // Footprint 110/request; the half-queue rule alone would give 4.
+        let stolen = planner.steal_tail(4, 230, 100);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![8, 9],
+            "token cap trims the steal to what the thief can admit"
+        );
+        assert_eq!(planner.queued(), 8);
+        // A cap below a single footprint steals nothing.
+        assert!(planner.steal_tail(4, 50, 100).is_empty());
+        assert_eq!(planner.queued(), 8);
+    }
+
+    #[test]
+    fn preemption_disabled_is_inert() {
+        // The default config must take zero preemption paths: counters
+        // stay at zero, the report flag is off, and the schedule is
+        // identical whether the spec's knobs are default or aggressive
+        // (the master switch gates everything).
+        let mut cfg = small_cfg();
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 30, 8.0, Dataset::LongBench, 20,
+            cfg.model.max_seq, 41,
+        );
+        let off = run_bucketserve(&cfg, &trace);
+        assert!(!off.preempt_enabled);
+        assert_eq!(off.prefill_aborts, 0);
+        assert_eq!(off.decode_evictions, 0);
+        assert_eq!(off.wasted_prefill_us, 0);
+        assert_eq!(off.evicted_kv_tokens, 0);
+        cfg.preempt.urgency_threshold = 0.01;
+        cfg.preempt.max_abort_progress = 1.0;
+        cfg.preempt.max_evictions = 64;
+        let knobs = run_bucketserve(&cfg, &trace);
+        assert_eq!(off.makespan_us, knobs.makespan_us);
+        assert_eq!(off.prefill_batches, knobs.prefill_batches);
+        assert_eq!(off.decode_iters, knobs.decode_iters);
+        assert_eq!(knobs.prefill_aborts, 0);
+    }
+
+    #[test]
+    fn preemption_rescues_urgent_online_under_offline_overload() {
+        // The subsystem's acceptance scenario: a large offline LongBench
+        // backlog at t=0 holds both the single prefill instance (batches
+        // run for seconds) and the decode KV; an online Alpaca stream
+        // arrives on top. Priority-only scheduling reorders the queue but
+        // cannot touch dispatched work, so online requests still stall
+        // behind multi-second offline waves. Timing: KV-bound LongBench
+        // waves run ~3 s, so with a 2 s TTFT budget and a 0.6 trigger the
+        // escalation fires 1.2 s after arrival — inside the abortable
+        // half of a wave (max_abort_progress 0.5) for requests landing
+        // early in it, and with ~0.8 s of budget left to re-prefill,
+        // which is what converts aborts into met deadlines.
+        let mut cfg = small_cfg();
+        cfg.slo.ttft_us = 2_000_000;
+        cfg.preempt.urgency_threshold = 0.6;
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 40, 4.0, Dataset::LongBench, 40,
+            cfg.model.max_seq, 51,
+        );
+        let base = run_bucketserve(&cfg, &trace);
+        cfg.preempt.enabled = true;
+        let pre = run_bucketserve(&cfg, &trace);
+
+        // Conservation first: preemption must never lose or duplicate a
+        // request, aborted/evicted ones included.
+        assert_eq!(base.completions.len(), trace.len());
+        assert_eq!(pre.completions.len(), trace.len());
+        assert!(pre.error.is_none(), "{:?}", pre.error);
+        let mut ids: Vec<_> = pre.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "exactly-once completion");
+
+        // The scenario must actually exercise the subsystem...
+        assert!(
+            pre.prefill_aborts + pre.decode_evictions > 0,
+            "overload this deliberate must trigger preemption"
+        );
+        // ...whose whole point is the online class: mean TTFT must drop
+        // against the priority-only baseline, and attainment not regress.
+        let tb = base.mean_ttft_class_us(RequestClass::Online);
+        let tp = pre.mean_ttft_class_us(RequestClass::Online);
+        assert!(
+            tp < tb,
+            "preemption online mean TTFT {tp}µs not better than {tb}µs"
+        );
+        let ab = base.slo_attainment_class(
+            RequestClass::Online, cfg.slo.ttft_us, cfg.slo.tbt_us,
+        );
+        let ap = pre.slo_attainment_class(
+            RequestClass::Online, cfg.slo.ttft_us, cfg.slo.tbt_us,
+        );
+        assert!(ap >= ab, "online attainment regressed: {ap} < {ab}");
+        // Waste accounting is only ever nonzero alongside its trigger.
+        if pre.prefill_aborts == 0 {
+            assert_eq!(pre.wasted_prefill_us, 0);
+            assert_eq!(pre.wasted_prefill_tokens, 0);
+        }
+        assert_eq!(pre.evicted_kv_tokens > 0, pre.decode_evictions > 0);
+        assert_eq!(pre.recompute_tokens > 0, pre.decode_evictions > 0);
     }
 
     #[test]

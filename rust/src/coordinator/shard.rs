@@ -219,9 +219,13 @@ impl ShardSet {
     /// most-loaded shard's queue — specifically the *tail* of its
     /// highest-urgency bucket, never more than half of that bucket, so
     /// the victim keeps the urgent head it would drain next and the
-    /// thief absorbs backlog. Returns the moves as `(victim, thief, n)`
-    /// so the caller can update monitors. No-op unless stealing is
-    /// enabled and there are at least two shards.
+    /// thief absorbs backlog. The steal is KV-aware: the donor also caps
+    /// the surrendered full-context tokens at the thief's best decode
+    /// instance's current admission headroom, so an over-greedy steal
+    /// can no longer move work the thief could not dispatch anyway.
+    /// Returns the moves as `(victim, thief, n)` so the caller can
+    /// update monitors. No-op unless stealing is enabled and there are
+    /// at least two shards.
     pub fn rebalance(
         &mut self,
         now: Micros,
@@ -250,7 +254,8 @@ impl ShardSet {
                 continue;
             };
             let want = queued[victim] / 2;
-            let stolen = self.shards[victim].planner.steal_tail(want, now);
+            let stolen =
+                self.shards[victim].planner.steal_tail(want, headroom, now);
             let n = stolen.len();
             if n == 0 {
                 continue;
@@ -359,6 +364,34 @@ mod tests {
         assert_eq!(
             fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![0, 1, 2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn steal_sizing_respects_thief_kv_headroom() {
+        // Each queued request's full-context footprint is 110 tokens
+        // (len 100 + output 10). The thief's only decode instance has
+        // 250 tokens of headroom left: the old fixed-half steal would
+        // grab 5 requests (550 tokens, overshooting by 300); KV-aware
+        // sizing stops at 2 (220 ≤ 250).
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 2, steal: true, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let mut decode = DecodeFleet::new(2);
+        for id in 0..10u64 {
+            let r = req(id, 100, id);
+            set.get_mut(0).planner.admit(&r, id);
+        }
+        decode.get_mut(1).reserved_tokens = 10_000 - 250;
+        let moves = set.rebalance(100, &decode, 10_000);
+        assert_eq!(moves, vec![(0, 1, 2)], "steal capped by thief headroom");
+        assert_eq!(set.get(0).planner.queued(), 8);
+        assert_eq!(set.get(1).planner.queued(), 2);
+        // The thief got the least-urgent tail, in order.
+        let fb = set.get_mut(1).planner.plan(100, u64::MAX / 4).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![8, 9]
         );
     }
 

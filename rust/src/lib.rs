@@ -16,17 +16,19 @@
 //! * [`cluster`] — the simulated GPU cluster substrate: an A100 roofline
 //!   cost model, NVLink transfer model, and the discrete-event engine.
 //! * [`coordinator`] — **the paper's contribution**, an event-driven,
-//!   sharded scheduling core in nine modules:
+//!   sharded, preemptive scheduling core in ten modules:
 //!   [`coordinator::bucket`] (Request Bucketing Manager, Algorithm 1),
 //!   [`coordinator::batcher`] (Dynamic Batching Controller, Eqs. 1–6),
 //!   [`coordinator::priority`] (SLO-deadline urgency scoring: online TTFT
 //!   slack, offline starvation aging),
+//!   [`coordinator::preempt`] (urgency-triggered prefill abort and decode
+//!   KV eviction with checkpoint-and-restore),
 //!   [`coordinator::events`] (the typed event queue the serving loop pops
-//!   in timestamp order),
+//!   in timestamp order, with tombstone cancellation),
 //!   [`coordinator::fleet`] (prefill/decode instance state machines with
 //!   KV reservations),
 //!   [`coordinator::shard`] (per-decode-instance scheduler shards with
-//!   work-stealing),
+//!   KV-aware work-stealing),
 //!   [`coordinator::balance`] (arrival placement and load-balancing
 //!   policies),
 //!   [`coordinator::monitor`] (Global Monitor: per-shard sliding-window

@@ -38,6 +38,21 @@ pub struct Summary {
     pub steals: u64,
     /// Per-shard arrivals routed by the placement policy.
     pub shard_routed: Vec<u64>,
+    /// Whether the preemption subsystem was armed (gates the preempt
+    /// JSON block so disabled runs stay byte-identical to legacy output).
+    pub preempt_enabled: bool,
+    /// Prefill batches aborted mid-flight by preemption.
+    pub prefill_aborts: u64,
+    /// Decode sequences evicted (checkpoint-and-restore) by preemption.
+    pub decode_evictions: u64,
+    /// GPU time burned by aborted prefill batches, ms.
+    pub wasted_prefill_ms: f64,
+    /// Padded prefill tokens whose FLOPs were discarded by aborts.
+    pub wasted_prefill_tokens: u64,
+    /// Full-context KV tokens released by decode evictions.
+    pub evicted_kv_tokens: u64,
+    /// Context tokens evicted sequences replayed at re-prefill.
+    pub recompute_tokens: u64,
     /// Abnormal-termination diagnostics from the run (scheduler stall);
     /// a summary carrying this must not be read as a clean result.
     pub error: Option<String>,
@@ -88,6 +103,13 @@ impl Summary {
             n_shards: r.n_shards.max(1),
             steals: r.steals,
             shard_routed: r.shard_routed.clone(),
+            preempt_enabled: r.preempt_enabled,
+            prefill_aborts: r.prefill_aborts,
+            decode_evictions: r.decode_evictions,
+            wasted_prefill_ms: r.wasted_prefill_us as f64 / 1e3,
+            wasted_prefill_tokens: r.wasted_prefill_tokens,
+            evicted_kv_tokens: r.evicted_kv_tokens,
+            recompute_tokens: r.recompute_tokens,
             error: r.error.clone(),
         }
     }
@@ -128,6 +150,20 @@ impl Summary {
                     self.shard_routed.iter().map(|&n| Json::from(n)).collect(),
                 ),
             ));
+        }
+        // Preemption block only when the subsystem is armed: a default
+        // (preempt disabled) run's Summary JSON stays byte-identical to
+        // the pre-preemption scheduler's output.
+        if self.preempt_enabled {
+            fields.push(("prefill_aborts", Json::from(self.prefill_aborts)));
+            fields.push(("decode_evictions", Json::from(self.decode_evictions)));
+            fields.push(("wasted_prefill_ms", Json::num(self.wasted_prefill_ms)));
+            fields.push((
+                "wasted_prefill_tokens",
+                Json::from(self.wasted_prefill_tokens),
+            ));
+            fields.push(("evicted_kv_tokens", Json::from(self.evicted_kv_tokens)));
+            fields.push(("recompute_tokens", Json::from(self.recompute_tokens)));
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::from(e.as_str())));
@@ -197,6 +233,37 @@ mod tests {
         assert_eq!(routed.len(), 2);
         let total: u64 = routed.iter().filter_map(|v| v.as_u64()).sum();
         assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn preempt_block_only_when_enabled() {
+        let cfg = SystemConfig::default();
+        let trace =
+            Trace::batch(Dataset::Alpaca, 20, RequestClass::Offline, 4096, 9);
+        // Default config: preemption off → no preempt keys in the JSON.
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(!r.preempt_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let j = s.to_json();
+        assert!(j.get("prefill_aborts").is_null());
+        assert!(j.get("decode_evictions").is_null());
+        assert!(j.get("wasted_prefill_tokens").is_null());
+        // Enabled run: the block appears (zeros included — "armed but
+        // never fired" is a result worth reporting) and parses back.
+        let mut cfg = SystemConfig::default();
+        cfg.preempt.enabled = true;
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(r.preempt_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert!(!parsed.get("prefill_aborts").is_null());
+        assert!(!parsed.get("decode_evictions").is_null());
+        assert!(!parsed.get("evicted_kv_tokens").is_null());
+        assert!(!parsed.get("recompute_tokens").is_null());
+        // An all-offline batch trace has no online requests: the urgency
+        // trigger can never fire, so every counter is zero.
+        assert_eq!(parsed.get("prefill_aborts").as_u64(), Some(0));
+        assert_eq!(parsed.get("decode_evictions").as_u64(), Some(0));
     }
 
     #[test]

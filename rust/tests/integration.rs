@@ -124,10 +124,13 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
     // with shards = 1 (the default) the placement policy and the steal
     // flag are inert, so every such configuration must produce the exact
     // same schedule — asserted at the strongest observable level, the
-    // Summary JSON byte string. bucket_overhead_ns is the one wall-clock
-    // (hence nondeterministic) field and is normalized before comparison;
-    // everything else (makespans, per-class SLOs, counts) is virtual-time
-    // deterministic.
+    // Summary JSON byte string. The preemption subsystem extends the same
+    // contract: with `preempt.enabled = false` (the default) every other
+    // preemption knob is inert too, however aggressive, across all the
+    // sharding/placement settings swept here. bucket_overhead_ns is the
+    // one wall-clock (hence nondeterministic) field and is normalized
+    // before comparison; everything else (makespans, per-class SLOs,
+    // counts) is virtual-time deterministic.
     let trace = Trace::mixed_classes(
         Dataset::Alpaca, 40, 8.0, Dataset::LongBench, 20, 4096, 33,
     );
@@ -144,6 +147,11 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
             !baseline.contains("n_shards"),
             "shards=1 must not grow the Summary JSON: {baseline}"
         );
+        assert!(
+            !baseline.contains("prefill_aborts")
+                && !baseline.contains("evicted_kv_tokens"),
+            "preempt disabled must not grow the Summary JSON: {baseline}"
+        );
         for placement in
             [Placement::LeastLoaded, Placement::JoinShortestKv, Placement::Hash]
         {
@@ -152,10 +160,16 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 cfg.sharding.shards = 1;
                 cfg.sharding.placement = placement;
                 cfg.sharding.steal = steal;
+                // Arm every preemption knob except the master switch: a
+                // disabled spec must be byte-for-byte inert.
+                cfg.preempt.urgency_threshold = 0.01;
+                cfg.preempt.max_abort_progress = 1.0;
+                cfg.preempt.max_evictions = 64;
                 assert_eq!(
                     summary(system, &cfg),
                     baseline,
-                    "{} diverged with shards=1 placement={} steal={steal}",
+                    "{} diverged with shards=1 placement={} steal={steal} \
+                     preempt-knobs-armed",
                     system.name(),
                     placement.name(),
                 );
@@ -167,8 +181,13 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
 #[test]
 fn prop_sharded_serving_conserves_requests() {
     // The end-to-end mirror of the shard-layer conservation property:
-    // random fleets, shard counts, placements, and steal settings never
-    // lose or duplicate a request, for both planner families.
+    // random fleets, shard counts, placements, steal settings, and
+    // preemption specs never lose or duplicate a request, for both
+    // planner families. Preemption is the interesting half: every
+    // aborted prefill batch and every evicted (checkpoint-restored)
+    // decode sequence must still complete exactly once, and the
+    // aggressive random thresholds make triggers fire across many of the
+    // sampled mixed-class cases.
     prop::check("sharded serving conserves requests", 25, |g| {
         let mut cfg = SystemConfig::default();
         cfg.fleet.n_prefill = g.usize(1, 3) as u32;
@@ -181,28 +200,58 @@ fn prop_sharded_serving_conserves_requests() {
         ]);
         cfg.sharding.steal = g.bool();
         cfg.priority.enabled = g.bool();
+        cfg.preempt.enabled = g.bool();
+        cfg.preempt.urgency_threshold = g.f64_in(0.05, 1.2);
+        cfg.preempt.max_abort_progress = g.f64_in(0.1, 1.0);
+        cfg.preempt.max_evictions = g.usize(1, 8) as u32;
         let n = g.usize(5, 60);
         let rps = g.f64_in(1.0, 40.0);
         let seed = g.u64(0, 1 << 30);
-        let trace = Trace::generate(
-            Dataset::Mixed, n, rps, RequestClass::Online, cfg.model.max_seq, seed,
-        );
+        // Mixed-class traces exercise the eviction path (victims are
+        // offline-only); single-class online traces exercise the abort
+        // path against less-urgent online batches.
+        let trace = if g.bool() {
+            Trace::mixed_classes(
+                Dataset::Alpaca, n, rps, Dataset::LongBench, g.usize(5, 25),
+                cfg.model.max_seq, seed,
+            )
+        } else {
+            Trace::generate(
+                Dataset::Mixed, n, rps, RequestClass::Online,
+                cfg.model.max_seq, seed,
+            )
+        };
+        let total = trace.len();
         let sys = *g.pick(&[System::BucketServe, System::DistServe]);
         let r = sys.run_sim(&cfg, &trace);
-        assert_eq!(r.completions.len(), n, "{} lost requests", sys.name());
+        assert_eq!(r.completions.len(), total, "{} lost requests", sys.name());
         let mut ids: Vec<_> = r.completions.iter().map(|c| c.id).collect();
         ids.sort();
         ids.dedup();
-        assert_eq!(ids.len(), n, "{} duplicated requests", sys.name());
+        assert_eq!(ids.len(), total, "{} duplicated requests", sys.name());
         assert_eq!(
             r.shard_routed.iter().sum::<u64>(),
-            n as u64,
+            total as u64,
             "routing accounting broken"
         );
+        if !cfg.preempt.enabled {
+            assert_eq!(r.prefill_aborts + r.decode_evictions, 0);
+        }
         for c in &r.completions {
             assert!(c.first_token >= c.arrival);
             assert!(c.finished >= c.first_token);
         }
+        // Token conservation holds through abort/requeue and
+        // evict/recompute: completions carry the original prompt/output
+        // split whatever was replayed in between.
+        let in_tokens: u64 =
+            trace.requests.iter().map(|q| q.total_len() as u64).sum();
+        let out_tokens: u64 = r
+            .completions
+            .iter()
+            .map(|c| (c.input_len + c.output_len) as u64)
+            .sum();
+        assert_eq!(in_tokens, out_tokens, "{} token books", sys.name());
     });
 }
 
