@@ -30,6 +30,7 @@ fn drive(k_target: u32, n_requests: usize, linear: bool) -> (usize, f64) {
             output_len: 1,
             arrival: i as u64,
             class: RequestClass::Offline,
+            tbt_us: 0,
         });
         if i % 16 == 15 {
             mgr.adjust(n_max);

@@ -24,6 +24,7 @@ fn filled_manager(n: usize, buckets: bool) -> BucketManager {
             output_len: rng.range(1, 400) as u32,
             arrival: i as u64,
             class: RequestClass::Online,
+            tbt_us: 0,
         });
     }
     if buckets {
@@ -54,6 +55,7 @@ fn main() {
                 output_len: 10,
                 arrival: id,
                 class: RequestClass::Online,
+                tbt_us: 0,
             });
             // Bound queue growth.
             if mgr.total() > 4096 {
@@ -141,6 +143,7 @@ fn main() {
                 } else {
                     RequestClass::Offline
                 },
+                tbt_us: 0,
             });
         }
         time_it("form_batch priority (1024 queued, cached key)", || {
@@ -178,6 +181,8 @@ fn main() {
                 generated: rng.range(1, 40) as u32,
                 first_token: i * 1000 + 500,
                 ready_at: 0,
+                tbt_us: 0,
+                last_token_at: 0,
             })
             .collect();
         time_it("preempt: pick_decode_victims (64 active)", || {

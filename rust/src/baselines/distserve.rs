@@ -12,7 +12,8 @@ use crate::config::SystemConfig;
 use crate::coordinator::batcher::FormedBatch;
 use crate::coordinator::bucket::QueuedReq;
 use crate::coordinator::scheduler::{
-    kv_capped_take, oldest_online_in, PdScheduler, PrefillPlanner, RunReport,
+    kv_capped_take, oldest_online_in, OnlinePeek, PdScheduler, PrefillPlanner,
+    RunReport,
 };
 use crate::cluster::Engine;
 use crate::workload::{Request, Trace};
@@ -25,6 +26,7 @@ pub struct FcfsPlanner {
     queue: VecDeque<QueuedReq>,
     max_batch: usize,
     overhead_ns: u64,
+    online_peek: OnlinePeek,
 }
 
 impl FcfsPlanner {
@@ -37,19 +39,23 @@ impl FcfsPlanner {
                 cfg.scheduler.max_batch as usize
             },
             overhead_ns: 0,
+            online_peek: OnlinePeek::new(),
         }
     }
 }
 
 impl PrefillPlanner for FcfsPlanner {
     fn admit(&mut self, req: &Request, _now: Micros) {
-        self.queue.push_back(QueuedReq {
+        let q = QueuedReq {
             id: req.id,
             len: req.input_len,
             output_len: req.output_len,
             arrival: req.arrival,
             class: req.class,
-        });
+            tbt_us: req.tbt_deadline_us,
+        };
+        self.online_peek.note_insert(&q);
+        self.queue.push_back(q);
     }
 
     fn plan(&mut self, _now: Micros, headroom_tokens: u64) -> Option<FormedBatch> {
@@ -72,6 +78,7 @@ impl PrefillPlanner for FcfsPlanner {
             return None;
         }
         let reqs: Vec<QueuedReq> = self.queue.drain(..take).collect();
+        self.online_peek.note_removed(reqs.iter());
         let padded_len = reqs.iter().map(|r| r.len).max().unwrap_or(1).max(1);
         let items = reqs
             .iter()
@@ -86,7 +93,11 @@ impl PrefillPlanner for FcfsPlanner {
     }
 
     fn force_pop(&mut self, _now: Micros) -> Option<QueuedReq> {
-        self.queue.pop_front()
+        let popped = self.queue.pop_front();
+        if let Some(r) = &popped {
+            self.online_peek.note_removed(std::iter::once(r));
+        }
+        popped
     }
 
     fn queued(&self) -> usize {
@@ -109,20 +120,25 @@ impl PrefillPlanner for FcfsPlanner {
         // the thief is never handed more than its KV headroom can admit.
         let cap = max_n.min(self.queue.len() / 2);
         let take = kv_capped_take(self.queue.iter().rev().take(cap), max_tokens);
-        self.queue.split_off(self.queue.len() - take).into_iter().collect()
+        let stolen: Vec<QueuedReq> =
+            self.queue.split_off(self.queue.len() - take).into_iter().collect();
+        self.online_peek.note_removed(stolen.iter());
+        stolen
     }
 
     fn absorb(&mut self, reqs: Vec<QueuedReq>, _now: Micros) {
         // Keep the queue FIFO: stolen requests slot in by arrival, after
         // any already-queued request that arrived at the same instant.
         for r in reqs {
+            self.online_peek.note_insert(&r);
             let pos = self.queue.partition_point(|q| q.arrival <= r.arrival);
             self.queue.insert(pos, r);
         }
     }
 
-    fn oldest_online(&self) -> Option<QueuedReq> {
-        oldest_online_in(self.queue.iter())
+    fn oldest_online(&mut self) -> Option<QueuedReq> {
+        let queue = &self.queue;
+        self.online_peek.get(|| oldest_online_in(queue.iter()))
     }
 
     fn drain_follows_urgency(&self) -> bool {

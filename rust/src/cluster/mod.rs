@@ -114,6 +114,18 @@ pub trait Engine {
     /// Execute (or cost) one decode iteration; returns its duration.
     fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros>;
 
+    /// Pure cost *projection* of one decode iteration over `n` sequences
+    /// whose context lengths sum to `total_ctx` tokens — what the
+    /// TBT-aware admission layer asks before committing a batch to an
+    /// instance ("what would the iteration time become?"). Unlike
+    /// [`Engine::decode_step`] this must execute nothing and mutate no
+    /// accounting. Defaults to 0 ("no projection available"), under
+    /// which the admission triggers only react to sequences that are
+    /// already past their inter-token deadline.
+    fn projected_decode_us(&self, _n: usize, _total_ctx: u64) -> Micros {
+        0
+    }
+
     /// Duration of the prefill→decode KV hand-off for `tokens` cache tokens.
     fn kv_transfer(&mut self, tokens: u64) -> Micros;
 

@@ -49,6 +49,13 @@ impl Engine for SimEngine {
         Ok(self.cost.decode_step_time(batch.n(), batch.total_ctx()))
     }
 
+    fn projected_decode_us(&self, n: usize, total_ctx: u64) -> Micros {
+        // Same oracle as decode_step, but a pure projection: no call
+        // counting, so admission probing cannot skew the overhead
+        // accounting tests.
+        self.cost.decode_step_time(n, total_ctx)
+    }
+
     fn kv_transfer(&mut self, tokens: u64) -> Micros {
         self.cost.kv_transfer_time(tokens)
     }
@@ -88,5 +95,19 @@ mod tests {
     fn not_realtime() {
         let e = SimEngine::new(&SystemConfig::default());
         assert!(!e.realtime());
+    }
+
+    #[test]
+    fn projection_matches_decode_cost_without_executing() {
+        let cfg = SystemConfig::default();
+        let mut e = SimEngine::new(&cfg);
+        let projected = e.projected_decode_us(4, 4 * 512);
+        assert_eq!(projected, e.cost_model().decode_step_time(4, 4 * 512));
+        assert_eq!(e.decode_calls, 0, "projection must not count as a call");
+        let d = DecodeBatch {
+            seqs: (0..4).map(|i| DecodeSeq { id: i, ctx_len: 512 }).collect(),
+        };
+        assert_eq!(e.decode_step(&d).unwrap(), projected);
+        assert_eq!(e.decode_calls, 1);
     }
 }

@@ -303,6 +303,53 @@ impl Default for PreemptSpec {
     }
 }
 
+/// TBT-aware decode admission knobs: per-iteration deferral of new batch
+/// admission and TBT-triggered eviction of offline decode work (consumed
+/// by [`crate::coordinator::admission::AdmissionEngine`]). Off by default
+/// — with the master switch off the scheduler takes no admission path at
+/// all and its output (including Summary JSON) is byte-identical to the
+/// pre-admission system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionSpec {
+    /// Master switch; off = no TBT-aware admission anywhere.
+    pub enabled: bool,
+    /// Trigger (a): defer admission of a formed batch onto a decode
+    /// instance whose projected iteration time would push a resident
+    /// online sequence past its inter-token budget (the batch retargets
+    /// to the shard's next-best instance or returns to the queue).
+    pub defer: bool,
+    /// Trigger (b): at an iteration boundary, evict least-urgent offline
+    /// actives (checkpoint-and-restore, the preemption machinery) from an
+    /// instance whose projected iteration would blow an online active's
+    /// inter-token budget.
+    pub evict: bool,
+    /// Safety margin: triggers compare against `(1 − slack_margin) ×`
+    /// the per-token budget, so a batch is deferred (or offline work
+    /// shed) slightly *before* the projection reaches the deadline.
+    pub slack_margin: f64,
+    /// Offline per-token budget as a multiple of `slo.tbt_us` (offline
+    /// throughput work has no interactive reader but still gets a lax
+    /// pacing bound so starvation is visible in the TBT metrics).
+    pub offline_tbt_factor: f64,
+    /// Ceiling on offline sequences shed per TBT trigger (bounds the
+    /// recompute debt one at-risk online sequence can create per
+    /// boundary).
+    pub max_evictions: u32,
+}
+
+impl Default for AdmissionSpec {
+    fn default() -> Self {
+        AdmissionSpec {
+            enabled: false,
+            defer: true,
+            evict: true,
+            slack_margin: 0.1,
+            offline_tbt_factor: 8.0,
+            max_evictions: 2,
+        }
+    }
+}
+
 /// SLO targets for online requests (DistServe-style TTFT + TBT).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloSpec {
@@ -331,6 +378,7 @@ pub struct SystemConfig {
     pub slo: SloSpec,
     pub priority: PrioritySpec,
     pub preempt: PreemptSpec,
+    pub admission: AdmissionSpec,
     pub seed: u64,
 }
 
@@ -345,6 +393,7 @@ impl Default for SystemConfig {
             slo: SloSpec::default(),
             priority: PrioritySpec::default(),
             preempt: PreemptSpec::default(),
+            admission: AdmissionSpec::default(),
             seed: 42,
         }
     }
@@ -438,6 +487,16 @@ impl SystemConfig {
             if let Some(v) = pr.get("max_abort_progress").as_f64() { d.max_abort_progress = v; }
             if let Some(v) = pr.get("max_evictions").as_u64() { d.max_evictions = v as u32; }
         }
+        let ad = j.get("admission");
+        if !ad.is_null() {
+            let d = &mut c.admission;
+            if let Some(v) = ad.get("enabled").as_bool() { d.enabled = v; }
+            if let Some(v) = ad.get("defer").as_bool() { d.defer = v; }
+            if let Some(v) = ad.get("evict").as_bool() { d.evict = v; }
+            if let Some(v) = ad.get("slack_margin").as_f64() { d.slack_margin = v; }
+            if let Some(v) = ad.get("offline_tbt_factor").as_f64() { d.offline_tbt_factor = v; }
+            if let Some(v) = ad.get("max_evictions").as_u64() { d.max_evictions = v as u32; }
+        }
         let o = j.get("slo");
         if !o.is_null() {
             if let Some(v) = o.get("ttft_us").as_u64() { c.slo.ttft_us = v; }
@@ -464,34 +523,15 @@ impl SystemConfig {
                 "sharding.placement" => {
                     self.sharding.placement = Placement::parse(v)
                 }
-                // Boolean: unrecognized values keep the default (a typo
-                // must not silently enable/disable stealing).
-                "sharding.steal" => match v.to_ascii_lowercase().as_str() {
-                    "true" | "1" | "yes" | "on" => self.sharding.steal = true,
-                    "false" | "0" | "no" | "off" => self.sharding.steal = false,
-                    _ => {}
-                },
-                // Like set_f64/set_u32, unrecognized values are ignored
-                // rather than coerced (a typo must not silently disable
-                // the priority subsystem).
-                "priority.enabled" => match v.to_ascii_lowercase().as_str() {
-                    "true" | "1" | "yes" | "on" => self.priority.enabled = true,
-                    "false" | "0" | "no" | "off" => self.priority.enabled = false,
-                    _ => {}
-                },
+                "sharding.steal" => set_bool(&mut self.sharding.steal, v),
+                "priority.enabled" => set_bool(&mut self.priority.enabled, v),
                 "priority.online_weight" => set_f64(&mut self.priority.online_weight, v),
                 "priority.offline_weight" => set_f64(&mut self.priority.offline_weight, v),
                 "priority.aging_rate" => set_f64(&mut self.priority.aging_rate, v),
                 "priority.urgency_threshold" => {
                     set_f64(&mut self.priority.urgency_threshold, v)
                 }
-                // Boolean handled like priority.enabled: a typo must not
-                // silently flip the preemption switch.
-                "preempt.enabled" => match v.to_ascii_lowercase().as_str() {
-                    "true" | "1" | "yes" | "on" => self.preempt.enabled = true,
-                    "false" | "0" | "no" | "off" => self.preempt.enabled = false,
-                    _ => {}
-                },
+                "preempt.enabled" => set_bool(&mut self.preempt.enabled, v),
                 "preempt.urgency_threshold" => {
                     set_f64(&mut self.preempt.urgency_threshold, v)
                 }
@@ -500,6 +540,20 @@ impl SystemConfig {
                 }
                 "preempt.max_evictions" => {
                     set_u32(&mut self.preempt.max_evictions, v)
+                }
+                "admission.enabled" => {
+                    set_bool(&mut self.admission.enabled, v)
+                }
+                "admission.defer" => set_bool(&mut self.admission.defer, v),
+                "admission.evict" => set_bool(&mut self.admission.evict, v),
+                "admission.slack_margin" => {
+                    set_f64(&mut self.admission.slack_margin, v)
+                }
+                "admission.offline_tbt_factor" => {
+                    set_f64(&mut self.admission.offline_tbt_factor, v)
+                }
+                "admission.max_evictions" => {
+                    set_u32(&mut self.admission.max_evictions, v)
                 }
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
@@ -562,6 +616,14 @@ impl SystemConfig {
                 ("max_abort_progress", Json::num(self.preempt.max_abort_progress)),
                 ("max_evictions", Json::from(self.preempt.max_evictions as u64)),
             ])),
+            ("admission", Json::obj(vec![
+                ("enabled", Json::from(self.admission.enabled)),
+                ("defer", Json::from(self.admission.defer)),
+                ("evict", Json::from(self.admission.evict)),
+                ("slack_margin", Json::num(self.admission.slack_margin)),
+                ("offline_tbt_factor", Json::num(self.admission.offline_tbt_factor)),
+                ("max_evictions", Json::from(self.admission.max_evictions as u64)),
+            ])),
             ("slo", Json::obj(vec![
                 ("ttft_us", Json::from(self.slo.ttft_us)),
                 ("tbt_us", Json::from(self.slo.tbt_us)),
@@ -580,6 +642,17 @@ fn set_f64(slot: &mut f64, v: &str) {
 fn set_u32(slot: &mut u32, v: &str) {
     if let Ok(x) = v.parse() {
         *slot = x;
+    }
+}
+
+/// Boolean override parser shared by every on/off knob: unrecognized
+/// values keep the default, so a typo can never silently flip a
+/// subsystem switch (the knob-specific tests pin this).
+fn set_bool(slot: &mut bool, v: &str) {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" | "on" => *slot = true,
+        "false" | "0" | "no" | "off" => *slot = false,
+        _ => {}
     }
 }
 
@@ -762,6 +835,57 @@ mod tests {
         // Untouched fields keep defaults.
         assert_eq!(c.preempt.urgency_threshold, 0.9);
         assert_eq!(c.preempt.max_abort_progress, 0.5);
+    }
+
+    #[test]
+    fn admission_defaults_off_and_overridable() {
+        let c = SystemConfig::default();
+        assert!(!c.admission.enabled, "TBT admission must be opt-in");
+        assert!(c.admission.defer && c.admission.evict);
+        assert!((0.0..1.0).contains(&c.admission.slack_margin));
+        assert!(c.admission.offline_tbt_factor >= 1.0);
+        assert!(c.admission.max_evictions >= 1);
+
+        let args = Args::parse(
+            ["--admission.enabled", "on", "--admission.defer", "off",
+             "--admission.slack_margin", "0.25",
+             "--admission.offline_tbt_factor", "4",
+             "--admission.max_evictions", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(c.admission.enabled);
+        assert!(!c.admission.defer);
+        assert!(c.admission.evict, "untouched trigger keeps its default");
+        assert_eq!(c.admission.slack_margin, 0.25);
+        assert_eq!(c.admission.offline_tbt_factor, 4.0);
+        assert_eq!(c.admission.max_evictions, 8);
+
+        // A typo'd boolean must not silently arm the subsystem.
+        let args = Args::parse(
+            ["--admission.enabled", "yep"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(!c.admission.enabled);
+    }
+
+    #[test]
+    fn admission_json_block_parses() {
+        let j = Json::parse(
+            r#"{"admission":{"enabled":true,"evict":false,"slack_margin":0.2}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert!(c.admission.enabled);
+        assert!(!c.admission.evict);
+        assert_eq!(c.admission.slack_margin, 0.2);
+        // Untouched fields keep defaults.
+        assert!(c.admission.defer);
+        assert_eq!(c.admission.offline_tbt_factor, 8.0);
+        assert_eq!(c.admission.max_evictions, 2);
     }
 
     #[test]

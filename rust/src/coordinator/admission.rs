@@ -1,0 +1,290 @@
+//! TBT-aware decode admission and deferral (the two-sided SLO layer).
+//!
+//! The priority (PR 1) and preemption (PR 3) subsystems protect the
+//! *first* token: they reorder the queue and reclaim capacity when a
+//! queued online request's TTFT budget burns down. But the paper's SLO
+//! model — like the UELLM comparison it cites — is two-sided: once a
+//! sequence is decoding, every further token carries its own
+//! time-between-tokens (TBT) budget, and a decode instance oversubscribed
+//! with offline context can stretch its iteration time past that budget
+//! with nobody watching. The [`AdmissionEngine`] closes that gap with two
+//! triggers, both evaluated only when
+//! [`crate::config::AdmissionSpec::enabled`] (the default is off and the
+//! subsystem is then completely inert — disabled Summary JSON is pinned
+//! byte-identical):
+//!
+//! * **(a) Admission deferral** — before a formed prefill batch is
+//!   committed to a decode instance, the scheduler asks the engine for a
+//!   pure projection of that instance's next iteration time *with the
+//!   batch aboard* ([`crate::cluster::Engine::projected_decode_us`]). If
+//!   the projection would land any resident online sequence past its
+//!   effective inter-token deadline, the batch retargets to the shard's
+//!   next-best owned instance; if none can absorb it, the batch returns
+//!   to the shard's queue and waits (`admission_deferrals` counts these).
+//! * **(b) TBT eviction** — at a decode-iteration boundary, if the next
+//!   projected iteration would blow a resident online sequence's budget,
+//!   least-urgent *offline* actives are shed through the preemption
+//!   subsystem's checkpoint-and-restore machinery (KV released, generated
+//!   progress checkpointed, recompute requeued) until the projection
+//!   fits, bounded by `max_evictions` per trigger. Victim order is the
+//!   canonical priority comparator extended with a TBT-slack term
+//!   ([`PriorityScorer::compare_tbt`]), so a victim can never be more
+//!   TBT-urgent than an equal-priority survivor.
+//!
+//! Budgets are per class — the SLO's `tbt_us` for online, a lax
+//! `offline_tbt_factor ×` multiple for offline — with per-request
+//! overrides stamped by [`crate::workload::Trace::stamp_tbt`] carried all
+//! the way into decode state ([`DecodeSeqState::tbt_us`]). Both triggers
+//! compare against a margin-derated *effective* budget
+//! (`(1 − slack_margin) × budget`) so they fire a little before the
+//! deadline, not on it.
+//!
+//! This engine is pure policy (budget resolution, risk predicates, victim
+//! ordering); all fleet/queue mutation and the projection plumbing stay
+//! in [`super::scheduler`]. Inter-token gaps themselves are measured at
+//! iteration boundaries from [`DecodeSeqState::last_token_at`] and
+//! reported per class (p50/p99 gap, violations, attainment) in
+//! `RunReport`/Summary JSON.
+
+use super::bucket::QueuedReq;
+use super::fleet::DecodeSeqState;
+use super::preempt::evictable_entry;
+use super::priority::PriorityScorer;
+use crate::config::{AdmissionSpec, PrioritySpec, SloSpec};
+use crate::workload::request::class_tbt_budget_us;
+use crate::workload::{RequestClass, RequestId};
+use crate::Micros;
+
+/// The TBT-admission decision engine: budget resolution, deadline-risk
+/// predicates, and eviction-victim ordering.
+#[derive(Debug)]
+pub struct AdmissionEngine {
+    spec: AdmissionSpec,
+    scorer: PriorityScorer,
+    slo: SloSpec,
+}
+
+impl AdmissionEngine {
+    pub fn new(
+        spec: AdmissionSpec,
+        priority: PrioritySpec,
+        slo: SloSpec,
+    ) -> AdmissionEngine {
+        AdmissionEngine {
+            spec,
+            scorer: PriorityScorer::new(priority, slo.clone()),
+            slo,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.spec.enabled
+    }
+
+    /// Trigger (a) armed: master switch plus the defer knob.
+    pub fn defer_enabled(&self) -> bool {
+        self.spec.enabled && self.spec.defer
+    }
+
+    /// Trigger (b) armed: master switch plus the evict knob.
+    pub fn evict_enabled(&self) -> bool {
+        self.spec.enabled && self.spec.evict
+    }
+
+    pub fn max_evictions(&self) -> u32 {
+        self.spec.max_evictions
+    }
+
+    /// Per-token TBT budget (µs) of a sequence: its stamped override or
+    /// the class default (see
+    /// [`crate::workload::request::class_tbt_budget_us`]).
+    pub fn budget_us(&self, class: RequestClass, override_us: u64) -> u64 {
+        class_tbt_budget_us(
+            class,
+            override_us,
+            &self.slo,
+            self.spec.offline_tbt_factor,
+        )
+    }
+
+    /// The margin-derated budget the triggers compare against: firing at
+    /// `(1 − slack_margin) ×` the budget converts near-misses into
+    /// deferrals/evictions *before* the deadline instead of violations
+    /// after it.
+    pub fn effective_budget_us(&self, class: RequestClass, override_us: u64) -> u64 {
+        let b = self.budget_us(class, override_us) as f64;
+        (b * (1.0 - self.spec.slack_margin).max(0.0)) as u64
+    }
+
+    /// Signed slack (µs) of `s` to its effective next-token deadline at
+    /// `now` (negative = already past it).
+    pub fn slack_us(&self, s: &DecodeSeqState, now: Micros) -> i64 {
+        let deadline = s
+            .last_token_at
+            .saturating_add(self.effective_budget_us(s.class, s.tbt_us));
+        deadline as i64 - now as i64
+    }
+
+    /// True when an iteration of `projected_us` starting at `now` would
+    /// land any *online* member past its effective next-token deadline —
+    /// the shared predicate of both triggers. Offline members never gate
+    /// admission: their lax budget exists for metrics, not for blocking
+    /// throughput work on its own behalf.
+    pub fn deadline_at_risk<'a>(
+        &self,
+        members: impl Iterator<Item = &'a DecodeSeqState>,
+        projected_us: Micros,
+        now: Micros,
+    ) -> bool {
+        members
+            .filter(|s| s.class == RequestClass::Online)
+            .any(|s| projected_us as i64 > self.slack_us(s, now))
+    }
+
+    /// Trigger (b) victim order over one instance's active set:
+    /// reclaimable sequences under the eligibility rule shared with the
+    /// preemption engine (`evictable_entry`: never online, never
+    /// within one token of done), least urgent first under the canonical
+    /// comparator extended with the TBT-slack term, ties on id. The
+    /// scheduler evicts down this list, re-projecting after each shed,
+    /// so the engine returns the full ordering rather than a prefix.
+    pub fn victim_order(
+        &self,
+        active: &[DecodeSeqState],
+        now: Micros,
+    ) -> Vec<RequestId> {
+        let mut pool: Vec<(QueuedReq, i64)> = active
+            .iter()
+            .filter_map(|s| {
+                Some((evictable_entry(s)?, self.slack_us(s, now)))
+            })
+            .collect();
+        pool.sort_by(|a, b| {
+            self.scorer
+                .compare_tbt(&b.0, b.1, &a.0, a.1, now)
+                .then(a.0.id.cmp(&b.0.id))
+        });
+        pool.into_iter().map(|(q, _)| q.id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn engine(enabled: bool) -> AdmissionEngine {
+        let cfg = SystemConfig::default();
+        let mut spec = cfg.admission.clone();
+        spec.enabled = enabled;
+        AdmissionEngine::new(spec, cfg.priority.clone(), cfg.slo.clone())
+    }
+
+    fn seq(
+        id: u64,
+        class: RequestClass,
+        arrival: Micros,
+        generated: u32,
+        output: u32,
+        last_token_at: Micros,
+    ) -> DecodeSeqState {
+        DecodeSeqState {
+            id,
+            class,
+            arrival,
+            input_len: 1000,
+            padded_len: 1000,
+            output_len: output,
+            generated,
+            first_token: arrival + 1000,
+            ready_at: 0,
+            tbt_us: 0,
+            last_token_at,
+        }
+    }
+
+    #[test]
+    fn trigger_gates_follow_spec_knobs() {
+        let off = engine(false);
+        assert!(!off.enabled() && !off.defer_enabled() && !off.evict_enabled());
+        let on = engine(true);
+        assert!(on.enabled() && on.defer_enabled() && on.evict_enabled());
+        let cfg = SystemConfig::default();
+        let mut spec = cfg.admission.clone();
+        spec.enabled = true;
+        spec.defer = false;
+        let e = AdmissionEngine::new(spec, cfg.priority.clone(), cfg.slo.clone());
+        assert!(!e.defer_enabled() && e.evict_enabled());
+    }
+
+    #[test]
+    fn budgets_resolve_class_defaults_margin_and_overrides() {
+        let e = engine(true);
+        let slo = SystemConfig::default().slo;
+        assert_eq!(e.budget_us(RequestClass::Online, 0), slo.tbt_us);
+        assert_eq!(
+            e.budget_us(RequestClass::Offline, 0),
+            (slo.tbt_us as f64 * 8.0) as u64
+        );
+        assert_eq!(e.budget_us(RequestClass::Online, 30_000), 30_000);
+        // Default margin 0.1: effective = 0.9 × budget.
+        assert_eq!(
+            e.effective_budget_us(RequestClass::Online, 0),
+            (slo.tbt_us as f64 * 0.9) as u64
+        );
+        assert_eq!(e.effective_budget_us(RequestClass::Online, 30_000), 27_000);
+    }
+
+    #[test]
+    fn deadline_risk_weighs_online_members_only() {
+        let e = engine(true);
+        // Effective online budget = 90 ms (100 ms × 0.9 margin). A
+        // sequence whose last token landed at t=0 has 90 ms of slack at
+        // t=0; a 100 ms projected iteration blows it, an 80 ms one fits.
+        let online = seq(1, RequestClass::Online, 0, 5, 100, 0);
+        let offline = seq(2, RequestClass::Offline, 0, 5, 100, 0);
+        assert_eq!(e.slack_us(&online, 0), 90_000);
+        assert!(e.deadline_at_risk([online.clone()].iter(), 100_000, 0));
+        assert!(!e.deadline_at_risk([online.clone()].iter(), 80_000, 0));
+        // A pure-offline instance is never at risk, whatever the
+        // projection — offline budgets exist for metrics, not gating.
+        assert!(!e.deadline_at_risk([offline.clone()].iter(), 10_000_000, 0));
+        // Mid-budget: 40 ms after the last token, 50 ms of slack remains.
+        assert_eq!(e.slack_us(&online, 40_000), 50_000);
+        assert!(e.deadline_at_risk([online.clone()].iter(), 60_000, 40_000));
+        assert!(!e.deadline_at_risk([online].iter(), 40_000, 40_000));
+    }
+
+    #[test]
+    fn victim_order_sheds_least_urgent_offline_first() {
+        let e = engine(true);
+        let now = 10_000_000;
+        let active = vec![
+            // Online: never a victim.
+            seq(0, RequestClass::Online, 0, 5, 100, now),
+            // Offline, aged most (t=0 arrival) → most urgent → last.
+            seq(1, RequestClass::Offline, 0, 5, 100, now),
+            // Offline, freshest arrival → least urgent → first.
+            seq(2, RequestClass::Offline, 9_000_000, 5, 100, now),
+            seq(3, RequestClass::Offline, 5_000_000, 5, 100, now),
+            // Offline but within one token of done → not reclaimable.
+            seq(4, RequestClass::Offline, 8_000_000, 99, 100, now),
+        ];
+        assert_eq!(e.victim_order(&active, now), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn victim_order_breaks_backlog_ties_by_tbt_slack() {
+        let e = engine(true);
+        let now = 1_000_000;
+        // Two offline sequences from the same t=0 backlog: identical
+        // class, arrival, and hence score — the canonical comparator
+        // ties. Stamped budgets differ, so the TBT-slack term decides:
+        // the looser budget (more slack) is shed first.
+        let mut tight = seq(7, RequestClass::Offline, 0, 5, 100, now);
+        tight.tbt_us = 50_000;
+        let mut loose = seq(8, RequestClass::Offline, 0, 5, 100, now);
+        loose.tbt_us = 500_000;
+        assert_eq!(e.victim_order(&[tight, loose], now), vec![8, 7]);
+    }
+}

@@ -19,6 +19,14 @@
 //!
 //! The shard structures themselves live in [`super::shard`]; this module
 //! is intentionally stateless.
+//!
+//! The TBT-aware admission layer layers a second opinion on top of
+//! dispatch targeting: after [`best_decode_in`] names the max-headroom
+//! instance, the scheduler may veto it (and walk the shard's remaining
+//! owned instances in headroom order) when the projected iteration time
+//! would blow a resident online sequence's inter-token budget — see
+//! [`super::admission`]. Headroom stays the first-order signal; TBT
+//! slack is a constraint, not a score.
 
 use super::fleet::DecodeFleet;
 use crate::config::Placement;

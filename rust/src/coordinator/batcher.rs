@@ -253,7 +253,14 @@ mod tests {
     }
 
     fn req(id: u64, len: u32, out: u32, arrival: Micros) -> QueuedReq {
-        QueuedReq { id, len, output_len: out, arrival, class: RequestClass::Online }
+        QueuedReq {
+            id,
+            len,
+            output_len: out,
+            arrival,
+            class: RequestClass::Online,
+            tbt_us: 0,
+        }
     }
 
     fn batcher(policy: Policy, max_batch: u32) -> DynamicBatcher {
@@ -424,6 +431,7 @@ mod tests {
                 output_len: 50,
                 arrival: 0,
                 class: RequestClass::Offline,
+                tbt_us: 0,
             });
         }
         // …then an online request lands later.
@@ -433,6 +441,7 @@ mod tests {
             output_len: 20,
             arrival: 50_000,
             class: RequestClass::Online,
+            tbt_us: 0,
         });
         let b = batcher(Policy::Fcfs, 1).with_priority(PriorityScorer::new(
             PrioritySpec::default(),

@@ -30,6 +30,11 @@ pub struct QueuedReq {
     pub output_len: u32,
     pub arrival: Micros,
     pub class: RequestClass,
+    /// Per-token TBT budget override in µs (0 = class default), carried
+    /// from [`crate::workload::Request::tbt_deadline_us`] so the
+    /// TBT-aware admission layer sees stamped budgets through requeues,
+    /// steals, and checkpoint-restores.
+    pub tbt_us: u64,
 }
 
 impl QueuedReq {
@@ -328,6 +333,7 @@ mod tests {
             output_len: 10,
             arrival: id * 10,
             class: RequestClass::Online,
+            tbt_us: 0,
         }
     }
 
@@ -585,6 +591,7 @@ mod tests {
                         output_len: 1,
                         arrival: id,
                         class: RequestClass::Offline,
+                        tbt_us: 0,
                     });
                     id += 1;
                 } else {

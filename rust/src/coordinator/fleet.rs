@@ -101,6 +101,16 @@ pub struct DecodeSeqState {
     pub first_token: Micros,
     /// When the NVLink KV hand-off lands (earliest admission time).
     pub ready_at: Micros,
+    /// Per-token TBT budget override carried from the request (0 = class
+    /// default); consumed by the TBT-aware admission layer.
+    pub tbt_us: u64,
+    /// When this sequence's most recent *decode-iteration* token landed.
+    /// Re-anchored to the admission instant by [`DecodeInstance::admit_due`],
+    /// so the first observed inter-token gap is the first iteration's
+    /// duration (hand-off/queueing latency is a TTFT-side effect, not a
+    /// decode-pacing one). The TBT-aware admission layer measures every
+    /// gap and slack from this anchor.
+    pub last_token_at: Micros,
 }
 
 /// One decode instance running continuous (iteration-level) batching.
@@ -137,13 +147,15 @@ impl DecodeInstance {
     }
 
     /// Move every hand-off that has landed by `now` into the active set.
-    /// Only legal at an iteration boundary.
+    /// Only legal at an iteration boundary. Admission anchors the
+    /// sequence's inter-token clock: its next gap is measured from here.
     pub fn admit_due(&mut self, now: Micros) {
         debug_assert!(self.at_boundary());
         let mut i = 0;
         while i < self.pending.len() {
             if self.pending[i].ready_at <= now {
-                let s = self.pending.remove(i);
+                let mut s = self.pending.remove(i);
+                s.last_token_at = now;
                 self.active.push(s);
             } else {
                 i += 1;
@@ -208,6 +220,7 @@ mod tests {
             output_len: 4,
             arrival: 0,
             class: RequestClass::Online,
+            tbt_us: 0,
         };
         InFlightPrefill {
             formed: FormedBatch {
@@ -237,6 +250,8 @@ mod tests {
             generated: 1,
             first_token: 0,
             ready_at,
+            tbt_us: 0,
+            last_token_at: 0,
         }
     }
 
@@ -285,6 +300,11 @@ mod tests {
         assert_eq!(active, vec![1, 3]);
         assert_eq!(d.pending.len(), 1);
         assert!(d.in_flight());
+        // Admission anchors the inter-token clock: the first gap the TBT
+        // layer observes is measured from the admission instant, not from
+        // the hand-off landing.
+        assert!(d.active.iter().all(|s| s.last_token_at == 25));
+        assert_eq!(d.pending[0].last_token_at, 0, "pending stays unanchored");
     }
 
     #[test]

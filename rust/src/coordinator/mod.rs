@@ -16,6 +16,11 @@
 //! * [`preempt`] — the preemption subsystem: urgency-triggered prefill
 //!   abort-and-requeue and decode KV eviction with
 //!   checkpoint-and-restore (off by default, `PreemptSpec`-gated).
+//! * [`admission`] — TBT-aware decode admission: per-iteration deferral
+//!   of batches whose projected iteration time would blow a resident
+//!   online sequence's inter-token budget, and TBT-triggered eviction of
+//!   offline actives through the preemption machinery (off by default,
+//!   `AdmissionSpec`-gated).
 //! * [`shard`] — per-decode-instance scheduler shards: each owns its own
 //!   bucket queue, KV admission, and priority state; KV-aware
 //!   work-stealing pulls backlog onto idle shards at decode-iteration
@@ -36,8 +41,10 @@
 //! state-driven phases:
 //!
 //! ```text
-//! Arrival ─▶ placement ─▶ shard queue ─▶ plan (Eq. 6) ─▶ prefill in flight
-//!                             ▲                              │         │
+//! Arrival ─▶ placement ─▶ shard queue ─▶ plan (Eq. 6) ─▶ TBT admission
+//!                             ▲              ▲          gate (defer?) ─▶
+//!                             │              │(deferred)     │ prefill
+//!                             │              └───◀───────────┤ in flight
 //!                             │              PrefillDone ◀───┘         │
 //!   (abort: completion event  │                   │      PreemptPrefill│
 //!    tombstoned, waste        ├───────────────────│──────◀─────────────┘
@@ -46,11 +53,13 @@
 //!                             │                   ▼
 //!   (evict-with-checkpoint:   │        decode pending ─▶ active
 //!    KV released, generated   │                   │
-//!    tokens checkpointed,     │       DecodeIterEnd (token++, completions,
-//!    RestoreReady requeues    │                   │       KV release)
-//!    recompute work whose     ├──────◀────────────┤
-//!    prefill replays the      │                   └─▶ work-stealing
-//!    full context)            │                       rebalance (KV-capped)
+//!    tokens checkpointed,     │       DecodeIterEnd (token++, gap vs TBT
+//!    RestoreReady requeues    │                   │    budget, completions,
+//!    recompute work whose     ├──────◀────────────┤    KV release)
+//!    prefill replays the      │                   ├─▶ TBT evict pass
+//!    full context)            ├──────◀────────────┘   (shed offline)
+//!                             │                   └─▶ work-stealing
+//!                             │                       rebalance (KV-capped)
 //! ```
 //!
 //! Preemption states: an in-flight prefill batch is either *completed*
@@ -63,9 +72,21 @@
 //! of its TTFT budget, and at most one preemption is outstanding at a
 //! time (see [`preempt::PreemptionEngine`]).
 //!
+//! Admission decision points (off by default, `AdmissionSpec`-gated):
+//! at *dispatch*, a formed batch only commits to a decode instance whose
+//! projected next iteration keeps every resident online sequence inside
+//! its inter-token (TBT) budget — otherwise it retargets to the shard's
+//! next-best instance or defers back to the queue; at every
+//! *DecodeIterEnd*, each produced token's gap is scored against its
+//! sequence's budget and, when the next projected iteration would blow
+//! an online budget, least-urgent offline actives are shed through the
+//! same evict-with-checkpoint path (see [`admission::AdmissionEngine`]).
+//! The full knob-by-knob table lives in `docs/ARCHITECTURE.md`.
+//!
 //! [`BucketServe`] ties them together behind a single façade used by the
 //! CLI, the examples, and every figure bench.
 
+pub mod admission;
 pub mod bucket;
 pub mod batcher;
 pub mod balance;
@@ -77,6 +98,7 @@ pub mod priority;
 pub mod scheduler;
 pub mod shard;
 
+pub use admission::AdmissionEngine;
 pub use bucket::{Bucket, BucketManager};
 pub use batcher::{DynamicBatcher, KvMemoryModel};
 pub use balance::{Router, ShardLoad};

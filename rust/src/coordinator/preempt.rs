@@ -40,9 +40,18 @@
 //! planner's drain follows urgency and warns otherwise.
 //!
 //! A request stolen onto another shard needs no special handling: the
-//! trigger scan walks *every* shard's most urgent queued online request,
-//! so an urgent request a thief shard absorbed preempts the thief's
-//! in-flight work through the same two paths.
+//! trigger scan walks *every* shard's most urgent queued online request
+//! (served from each planner's cached min-arrival peek, so the scan is
+//! O(shards) amortized), so an urgent request a thief shard absorbed
+//! preempts the thief's in-flight work through the same two paths.
+//!
+//! The checkpoint-and-restore *mechanism* here is deliberately
+//! trigger-agnostic: the TBT-aware admission layer
+//! ([`super::admission`]) drives the same evict path (KV release,
+//! [`RestoreInfo`] checkpoint, `RestoreReady` requeue) from its own
+//! per-iteration inter-token-budget trigger, charged to its own
+//! counters. Only trigger policy differs; conservation and TTFT
+//! preservation are proved once, for both.
 
 use super::bucket::QueuedReq;
 use super::fleet::{DecodeSeqState, InFlightPrefill};
@@ -52,6 +61,32 @@ use crate::workload::{RequestClass, RequestId};
 use crate::Micros;
 use std::cmp::Ordering;
 use std::collections::HashMap;
+
+/// The queue entry an active decode sequence would be evicted as, or
+/// `None` when the sequence is not reclaimable — the single eligibility
+/// rule shared by preemption's [`PreemptionEngine::pick_decode_victims`]
+/// and the admission layer's TBT victim ordering, so the two trigger
+/// policies can never drift apart on *who* may be evicted (only on the
+/// order). Not reclaimable: online sequences (both subsystems exist to
+/// protect them), and offline sequences within one token of done — a
+/// finished one can sit in the active set with `generated == output_len`
+/// until the boundary that formally completes it (evicting it would
+/// requeue zero remaining generation, or underflow on a repeat), and a
+/// one-token-remaining victim would pay a full-context recompute for KV
+/// that frees at the very next boundary anyway.
+pub(crate) fn evictable_entry(s: &DecodeSeqState) -> Option<QueuedReq> {
+    if s.class != RequestClass::Offline || s.generated + 1 >= s.output_len {
+        return None;
+    }
+    Some(QueuedReq {
+        id: s.id,
+        len: s.input_len,
+        output_len: s.output_len,
+        arrival: s.arrival,
+        class: s.class,
+        tbt_us: s.tbt_us,
+    })
+}
 
 /// Checkpointed progress of an evicted decode sequence, keyed by request
 /// id until its recompute prefill completes.
@@ -72,6 +107,12 @@ pub struct RestoreInfo {
     /// describe the prefill that actually served the prompt, not the
     /// recompute replay.
     pub padded_len: u32,
+    /// When the sequence's last pre-eviction token landed. The recompute
+    /// prefill's completion produces the *next* token, and the scheduler
+    /// records that span as an inter-token gap — so the mid-stream stall
+    /// an eviction inflicts shows up in the TBT metrics instead of being
+    /// silently erased by the re-admission clock re-anchor.
+    pub last_token_at: Micros,
 }
 
 /// The preemption decision engine: trigger detection, victim selection
@@ -219,29 +260,8 @@ impl PreemptionEngine {
         deficit: u64,
         now: Micros,
     ) -> Vec<RequestId> {
-        let mut pool: Vec<QueuedReq> = active
-            .iter()
-            // Offline only — and never a sequence within one token of
-            // done: a finished one can sit in `active` with
-            // `generated == output_len` until the boundary that formally
-            // completes it (evicting it would requeue zero remaining
-            // generation, or underflow on a repeat), and a
-            // one-token-remaining victim would pay a full-context
-            // recompute for KV that frees at the very next boundary
-            // anyway — while its restore would arrive already complete
-            // and burn an extra decode iteration.
-            .filter(|s| {
-                s.class == RequestClass::Offline
-                    && s.generated + 1 < s.output_len
-            })
-            .map(|s| QueuedReq {
-                id: s.id,
-                len: s.input_len,
-                output_len: s.output_len,
-                arrival: s.arrival,
-                class: s.class,
-            })
-            .collect();
+        let mut pool: Vec<QueuedReq> =
+            active.iter().filter_map(evictable_entry).collect();
         pool.sort_by(|a, b| {
             self.scorer
                 .least_urgent_first(a, b, now)
@@ -282,6 +302,7 @@ impl PreemptionEngine {
                 output_len: s.output_len,
                 generated: s.generated,
                 padded_len: s.padded_len,
+                last_token_at: s.last_token_at,
             },
         );
         QueuedReq {
@@ -290,6 +311,7 @@ impl PreemptionEngine {
             output_len: s.output_len - s.generated,
             arrival: s.arrival,
             class: s.class,
+            tbt_us: s.tbt_us,
         }
     }
 
@@ -331,7 +353,14 @@ mod tests {
     }
 
     fn req(id: u64, class: RequestClass, arrival: Micros) -> QueuedReq {
-        QueuedReq { id, len: 100, output_len: 20, arrival, class }
+        QueuedReq {
+            id,
+            len: 100,
+            output_len: 20,
+            arrival,
+            class,
+            tbt_us: 0,
+        }
     }
 
     fn in_flight(
@@ -375,6 +404,8 @@ mod tests {
             generated,
             first_token: arrival + 1000,
             ready_at: 0,
+            tbt_us: 0,
+            last_token_at: 0,
         }
     }
 
@@ -503,10 +534,13 @@ mod tests {
     #[test]
     fn checkpoint_roundtrips_and_conserves_footprint() {
         let mut e = engine(true);
-        let s = seq(9, RequestClass::Offline, 42, 800, 200, 60);
+        let mut s = seq(9, RequestClass::Offline, 42, 800, 200, 60);
+        s.tbt_us = 77_000;
+        s.last_token_at = 9_000;
         let qr = e.checkpoint_seq(&s);
         assert_eq!(qr.id, 9);
         assert_eq!(qr.arrival, 42, "arrival (and aging credit) preserved");
+        assert_eq!(qr.tbt_us, 77_000, "stamped TBT budget survives eviction");
         assert_eq!(qr.len, 860, "prefill replays prompt + generated context");
         assert_eq!(qr.output_len, 140, "remaining generation shrinks");
         assert_eq!(
@@ -520,6 +554,7 @@ mod tests {
         assert_eq!(ri.generated, 60);
         assert_eq!(ri.first_token, 42 + 1000);
         assert_eq!(ri.padded_len, 800, "original batch padding preserved");
+        assert_eq!(ri.last_token_at, 9_000, "pre-eviction token clock kept");
         assert!(e.take_restore(9).is_none(), "checkpoint consumed once");
         assert!(e.take_restore(123).is_none(), "never-evicted id is None");
     }

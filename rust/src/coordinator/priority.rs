@@ -100,6 +100,26 @@ impl PriorityScorer {
         self.compare(b, a, now)
     }
 
+    /// The canonical order extended with a TBT-slack term — the victim
+    /// comparator of the TBT-aware admission layer. It agrees with
+    /// [`PriorityScorer::compare`] on every pair that order already
+    /// separates; exact ties (e.g. two same-class sequences from the same
+    /// t=0 backlog, whose scores are equal) break toward the smaller
+    /// signed slack to the next-token deadline, so of two otherwise-equal
+    /// offline actives the one *furthest* from blowing its own budget is
+    /// shed first. The drain order never consults this method, which is
+    /// what keeps admission-disabled schedules untouched.
+    pub fn compare_tbt(
+        &self,
+        a: &QueuedReq,
+        slack_a: i64,
+        b: &QueuedReq,
+        slack_b: i64,
+        now: Micros,
+    ) -> Ordering {
+        self.compare(a, b, now).then(slack_a.cmp(&slack_b))
+    }
+
     /// Precomputed drain key: a *stable* ascending sort on it reproduces
     /// the old stable `sort_by(compare)` exactly — urgent first, then
     /// score descending, then arrival, ties keeping queue order — while
@@ -184,7 +204,14 @@ mod tests {
     }
 
     fn req(class: RequestClass, arrival: Micros) -> QueuedReq {
-        QueuedReq { id: 0, len: 100, output_len: 10, arrival, class }
+        QueuedReq {
+            id: 0,
+            len: 100,
+            output_len: 10,
+            arrival,
+            class,
+            tbt_us: 0,
+        }
     }
 
     #[test]
@@ -285,6 +312,30 @@ mod tests {
     }
 
     #[test]
+    fn compare_tbt_extends_ties_with_slack_only() {
+        let s = scorer();
+        let now = 1_000_000;
+        // Where compare() separates, the slack term is ignored entirely —
+        // here the aged offline request outranks the fresh one no matter
+        // how dire the fresh one's slack looks.
+        let aged = req(RequestClass::Offline, 0);
+        let fresh = req(RequestClass::Offline, 900_000);
+        assert_eq!(s.compare(&aged, &fresh, now), Ordering::Less);
+        assert_eq!(
+            s.compare_tbt(&aged, i64::MAX, &fresh, i64::MIN, now),
+            Ordering::Less
+        );
+        // On an exact compare() tie (same class, same arrival), the
+        // smaller remaining slack ranks more urgent.
+        let a = req(RequestClass::Offline, 0);
+        let b = req(RequestClass::Offline, 0);
+        assert_eq!(s.compare(&a, &b, now), Ordering::Equal);
+        assert_eq!(s.compare_tbt(&a, 10_000, &b, 50_000, now), Ordering::Less);
+        assert_eq!(s.compare_tbt(&a, 50_000, &b, 10_000, now), Ordering::Greater);
+        assert_eq!(s.compare_tbt(&a, 10_000, &b, 10_000, now), Ordering::Equal);
+    }
+
+    #[test]
     fn f64_total_bits_is_monotone() {
         let xs = [-1e30, -2.5, -1.0, -1e-9, 0.0, 1e-9, 0.1, 1.0, 2.5, 1e30];
         for w in xs.windows(2) {
@@ -316,6 +367,7 @@ mod tests {
                 } else {
                     RequestClass::Offline
                 },
+                tbt_us: 0,
             };
             let a = mk(g, 0);
             let b = mk(g, 1);

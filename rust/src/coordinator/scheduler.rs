@@ -24,6 +24,7 @@
 //! DistServe-like baseline differ only in the [`PrefillPlanner`] plugged
 //! in; priority-aware SLO scheduling rides inside the bucket planner.
 
+use super::admission::AdmissionEngine;
 use super::balance;
 use super::batcher::{DynamicBatcher, FormedBatch, KvMemoryModel};
 use super::bucket::{BucketManager, QueuedReq};
@@ -93,7 +94,13 @@ pub trait PrefillPlanner {
     /// urgency is monotone in waiting time, so this is the request whose
     /// slack the preemption triggers weigh. Ties break on id so the peek
     /// is deterministic. None when no online request is queued.
-    fn oldest_online(&self) -> Option<QueuedReq>;
+    ///
+    /// Takes `&mut self` so implementations can serve it from a cached
+    /// [`OnlinePeek`] (maintained on admit/absorb, lazily recomputed
+    /// after a drain removes the cached head) — the preemption trigger
+    /// scan is then O(shards) amortized per event instead of the
+    /// O(queued) full walk the ROADMAP flagged.
+    fn oldest_online(&mut self) -> Option<QueuedReq>;
 
     /// True when this planner's drain order serves by SLO urgency, i.e.
     /// an urgent requeued request is dispatched ahead of the work it
@@ -136,13 +143,120 @@ pub(crate) fn kv_capped_take<'a>(
 }
 
 /// The queued online request with the earliest arrival, ties on id —
-/// the shared [`PrefillPlanner::oldest_online`] implementation.
+/// the shared full-scan fallback behind [`PrefillPlanner::oldest_online`]
+/// (the [`OnlinePeek`] cache recomputes through this when stale, and the
+/// cache-consistency property test pins the two against each other).
 pub(crate) fn oldest_online_in<'a>(
     reqs: impl Iterator<Item = &'a QueuedReq>,
 ) -> Option<QueuedReq> {
     reqs.filter(|r| r.class == RequestClass::Online)
         .min_by_key(|r| (r.arrival, r.id))
         .copied()
+}
+
+/// Cached min-arrival online peek shared by both planner families — the
+/// ROADMAP's "O(queued) preemption candidate scan" fix. The cache is a
+/// three-state cell: `Some(Some(r))` = the oldest online request is `r`,
+/// `Some(None)` = provably no online request queued, `None` = stale
+/// (the cached head was drained; the next [`OnlinePeek::get`] pays one
+/// full scan to refresh). Inserts keep a fresh cache fresh in O(1)
+/// (min under insertion is a comparison); only removing the cached
+/// minimum itself forces a rescan, so `oldest_online` is O(1) amortized
+/// across the event loop.
+#[derive(Debug, Default)]
+pub struct OnlinePeek {
+    cached: Option<Option<QueuedReq>>,
+}
+
+impl OnlinePeek {
+    /// An empty planner provably has no online request queued.
+    pub fn new() -> OnlinePeek {
+        OnlinePeek { cached: Some(None) }
+    }
+
+    /// A request entered the queue (admit/absorb/requeue).
+    pub fn note_insert(&mut self, r: &QueuedReq) {
+        if r.class != RequestClass::Online {
+            return;
+        }
+        if let Some(cur) = &mut self.cached {
+            match cur {
+                Some(c) if (r.arrival, r.id) < (c.arrival, c.id) => *c = *r,
+                None => *cur = Some(*r),
+                _ => {}
+            }
+        }
+    }
+
+    /// Requests left the queue (plan/force-pop/steal). Invalidates only
+    /// when the cached head itself was among them — draining anything
+    /// else leaves the minimum untouched.
+    pub fn note_removed<'a>(
+        &mut self,
+        removed: impl IntoIterator<Item = &'a QueuedReq>,
+    ) {
+        if let Some(Some(c)) = &self.cached {
+            let cid = c.id;
+            if removed.into_iter().any(|r| r.id == cid) {
+                self.cached = None;
+            }
+        }
+    }
+
+    /// The cached peek, refreshing via `recompute` (a full scan) when
+    /// stale.
+    pub fn get(
+        &mut self,
+        recompute: impl FnOnce() -> Option<QueuedReq>,
+    ) -> Option<QueuedReq> {
+        if self.cached.is_none() {
+            self.cached = Some(recompute());
+        }
+        self.cached.unwrap()
+    }
+}
+
+/// Σ context tokens (prompt + generated so far) across decode sequences —
+/// the `total_ctx` the admission layer's iteration-time projections feed
+/// to [`Engine::projected_decode_us`], matching what `launch_decode`
+/// would hand the engine for the same set. The single definition every
+/// projection site shares (full active set, online-only floor, incoming
+/// batches), so context accounting cannot silently diverge between them.
+fn active_ctx<'a>(seqs: impl IntoIterator<Item = &'a DecodeSeqState>) -> u64 {
+    seqs.into_iter()
+        .map(|s| (s.input_len + s.generated) as u64)
+        .sum()
+}
+
+/// Record one observed inter-token gap against its sequence's per-token
+/// TBT budget — shared by the per-iteration accounting and the
+/// eviction-stall accounting so the two can never classify differently.
+/// Free-standing (report + admission passed in) because the iteration
+/// site calls it while holding a decode-instance borrow. Always on
+/// (cheap), so disabled baselines stay comparable; only the Summary JSON
+/// block is gated on `admission.enabled`.
+fn record_tbt_gap(
+    report: &mut RunReport,
+    admission: &AdmissionEngine,
+    class: RequestClass,
+    tbt_override_us: u64,
+    gap: Micros,
+) {
+    let budget = admission.budget_us(class, tbt_override_us);
+    match class {
+        RequestClass::Online => {
+            report.tbt_gaps_online_us.push(gap);
+            if gap > budget {
+                report.tbt_violations_online += 1;
+            }
+        }
+        RequestClass::Offline => {
+            report.tbt_gaps_offline_us.push(gap);
+            if gap > budget {
+                report.tbt_violations_offline += 1;
+            }
+        }
+    }
 }
 
 /// BucketServe's planner: Bucketing Manager + Dynamic Batching Controller
@@ -152,6 +266,7 @@ pub struct BucketPlanner {
     batcher: DynamicBatcher,
     mem: KvMemoryModel,
     max_buckets_seen: usize,
+    online_peek: OnlinePeek,
 }
 
 impl BucketPlanner {
@@ -172,6 +287,7 @@ impl BucketPlanner {
             batcher,
             mem: KvMemoryModel::new(cfg.model.clone(), cfg.scheduler.mem_safety),
             max_buckets_seen: 1,
+            online_peek: OnlinePeek::new(),
         }
     }
 
@@ -186,13 +302,16 @@ impl BucketPlanner {
 
 impl PrefillPlanner for BucketPlanner {
     fn admit(&mut self, req: &Request, _now: Micros) {
-        self.mgr.assign(QueuedReq {
+        let q = QueuedReq {
             id: req.id,
             len: req.input_len,
             output_len: req.output_len,
             arrival: req.arrival,
             class: req.class,
-        });
+            tbt_us: req.tbt_deadline_us,
+        };
+        self.online_peek.note_insert(&q);
+        self.mgr.assign(q);
     }
 
     fn plan(&mut self, now: Micros, headroom_tokens: u64) -> Option<FormedBatch> {
@@ -216,7 +335,11 @@ impl PrefillPlanner for BucketPlanner {
         }
         // The batcher already admits against headroom_tokens (Eq. 6).
         let _ = &self.mem;
-        self.batcher.form_batch(&mut self.mgr, now, headroom_tokens)
+        let formed = self.batcher.form_batch(&mut self.mgr, now, headroom_tokens);
+        if let Some(fb) = &formed {
+            self.online_peek.note_removed(fb.reqs.iter());
+        }
+        formed
     }
 
     fn force_pop(&mut self, now: Micros) -> Option<QueuedReq> {
@@ -227,23 +350,28 @@ impl PrefillPlanner for BucketPlanner {
             .batcher
             .scorer()
             .map(|sc| sc.best_position(self.mgr.buckets(), now));
-        if let Some(pos) = pos {
+        let popped = if let Some(pos) = pos {
             let (bi, ri) = pos?;
-            return Some(self.mgr.buckets_mut()[bi].requests.remove(ri));
+            Some(self.mgr.buckets_mut()[bi].requests.remove(ri))
+        } else {
+            let bucket = self
+                .mgr
+                .buckets_mut()
+                .iter_mut()
+                .filter(|b| !b.is_empty())
+                .min_by_key(|b| b.earliest_arrival().unwrap_or(Micros::MAX))?;
+            let idx = bucket
+                .requests
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.arrival)
+                .map(|(i, _)| i)?;
+            Some(bucket.requests.remove(idx))
+        };
+        if let Some(r) = &popped {
+            self.online_peek.note_removed(std::iter::once(r));
         }
-        let bucket = self
-            .mgr
-            .buckets_mut()
-            .iter_mut()
-            .filter(|b| !b.is_empty())
-            .min_by_key(|b| b.earliest_arrival().unwrap_or(Micros::MAX))?;
-        let idx = bucket
-            .requests
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, r)| r.arrival)
-            .map(|(i, _)| i)?;
-        Some(bucket.requests.remove(idx))
+        popped
     }
 
     fn queued(&self) -> usize {
@@ -283,17 +411,23 @@ impl PrefillPlanner for BucketPlanner {
         self.batcher.sort_for_drain(b, now);
         let cap = max_n.min(b.requests.len() / 2);
         let take = kv_capped_take(b.requests.iter().rev().take(cap), max_tokens);
-        b.requests.split_off(b.requests.len() - take)
+        let stolen = b.requests.split_off(b.requests.len() - take);
+        self.online_peek.note_removed(stolen.iter());
+        stolen
     }
 
     fn absorb(&mut self, reqs: Vec<QueuedReq>, _now: Micros) {
         for r in reqs {
+            self.online_peek.note_insert(&r);
             self.mgr.assign(r);
         }
     }
 
-    fn oldest_online(&self) -> Option<QueuedReq> {
-        oldest_online_in(self.mgr.buckets().iter().flat_map(|b| b.requests.iter()))
+    fn oldest_online(&mut self) -> Option<QueuedReq> {
+        let mgr = &self.mgr;
+        self.online_peek.get(|| {
+            oldest_online_in(mgr.buckets().iter().flat_map(|b| b.requests.iter()))
+        })
     }
 
     fn drain_follows_urgency(&self) -> bool {
@@ -356,10 +490,42 @@ pub struct RunReport {
     pub wasted_prefill_us: u64,
     /// Padded prefill tokens whose FLOPs were discarded by aborts.
     pub wasted_prefill_tokens: u64,
-    /// Full-context KV tokens released by decode evictions.
+    /// Full-context KV tokens released by preemption-triggered decode
+    /// evictions (the admission layer's TBT evictions keep their own
+    /// books below, so neither subsystem's JSON block double-reports).
     pub evicted_kv_tokens: u64,
-    /// Context tokens evicted sequences must replay at re-prefill.
+    /// Context tokens preemption-evicted sequences must replay at
+    /// re-prefill.
     pub recompute_tokens: u64,
+    /// Whether the TBT-aware admission subsystem was armed for this run
+    /// (gates the Summary JSON block so disabled output stays
+    /// byte-identical).
+    pub admission_enabled: bool,
+    /// Deferral decisions: dispatch rounds in which a shard's formed
+    /// batch was returned to its queue because every owned decode
+    /// instance's projected iteration would have blown a resident online
+    /// sequence's TBT budget (at most one per shard per round; a batch
+    /// blocked across many events counts once per retrying round).
+    pub admission_deferrals: u64,
+    /// Offline decode sequences shed by the TBT eviction trigger
+    /// (checkpoint-and-restore; disjoint from `decode_evictions`, which
+    /// counts only preemption-triggered evictions).
+    pub tbt_evictions: u64,
+    /// Full-context KV tokens released by TBT evictions.
+    pub tbt_evicted_kv_tokens: u64,
+    /// Context tokens TBT-evicted sequences must replay at re-prefill —
+    /// the recompute debt the attainment win is paid for with.
+    pub tbt_recompute_tokens: u64,
+    /// Observed inter-token gaps (µs) of online tokens, one per
+    /// decode-iteration token. Recorded for every run (cheap), reported
+    /// only when admission is enabled.
+    pub tbt_gaps_online_us: Vec<u64>,
+    /// Observed inter-token gaps (µs) of offline tokens.
+    pub tbt_gaps_offline_us: Vec<u64>,
+    /// Online gaps exceeding their sequence's per-token TBT budget.
+    pub tbt_violations_online: u64,
+    /// Offline gaps exceeding their (lax) per-token TBT budget.
+    pub tbt_violations_offline: u64,
     /// Set when the run ended abnormally (scheduler stall / livelock
     /// guard); carries the diagnostics the old panic printed. Completions
     /// gathered before the stall are still reported.
@@ -428,6 +594,46 @@ impl RunReport {
         } else {
             ok as f64 / n as f64
         }
+    }
+
+    /// Observed inter-token gaps of one class (µs), as recorded at
+    /// decode-iteration boundaries.
+    pub fn tbt_gaps_class(&self, class: RequestClass) -> &[u64] {
+        match class {
+            RequestClass::Online => &self.tbt_gaps_online_us,
+            RequestClass::Offline => &self.tbt_gaps_offline_us,
+        }
+    }
+
+    /// Per-class TBT attainment: fraction of observed inter-token gaps
+    /// within the per-token budget (1.0 when the class produced no
+    /// gaps) — the admission subsystem's target metric, the TBT-side
+    /// mirror of [`RunReport::slo_attainment_class`].
+    pub fn tbt_attainment_class(&self, class: RequestClass) -> f64 {
+        let gaps = self.tbt_gaps_class(class).len();
+        let violations = match class {
+            RequestClass::Online => self.tbt_violations_online,
+            RequestClass::Offline => self.tbt_violations_offline,
+        };
+        if gaps == 0 {
+            1.0
+        } else {
+            1.0 - violations as f64 / gaps as f64
+        }
+    }
+
+    /// Per-class inter-token gap percentile (µs); 0 when the class
+    /// produced no gaps.
+    pub fn tbt_gap_percentile_us(&self, class: RequestClass, q: f64) -> f64 {
+        let gaps = self.tbt_gaps_class(class);
+        if gaps.is_empty() {
+            return 0.0;
+        }
+        let mut s = crate::util::stats::Samples::new();
+        for &g in gaps {
+            s.push(g as f64);
+        }
+        s.percentile(q)
     }
 
     /// Per-class mean TTFT (µs); 0 when the class is absent.
@@ -505,6 +711,7 @@ pub struct PdScheduler {
     shards: ShardSet,
     monitor: GlobalMonitor,
     preempt: PreemptionEngine,
+    admission: AdmissionEngine,
 }
 
 impl PdScheduler {
@@ -517,6 +724,7 @@ impl PdScheduler {
             shards: ShardSet::new(&cfg.sharding, n_decode, factory),
             monitor: GlobalMonitor::new(cfg.scheduler.monitor_window_us, 0),
             preempt: Self::make_preempt(cfg),
+            admission: Self::make_admission(cfg),
             cfg: cfg.clone(),
         }
     }
@@ -527,6 +735,17 @@ impl PdScheduler {
     fn make_preempt(cfg: &SystemConfig) -> PreemptionEngine {
         PreemptionEngine::new(
             cfg.preempt.clone(),
+            cfg.priority.clone(),
+            cfg.slo.clone(),
+        )
+    }
+
+    /// The one place the config turns into an [`AdmissionEngine`] — pure
+    /// policy (budget resolution, risk predicates, victim ordering), so
+    /// rebuilding per run only guards against future statefulness.
+    fn make_admission(cfg: &SystemConfig) -> AdmissionEngine {
+        AdmissionEngine::new(
+            cfg.admission.clone(),
             cfg.priority.clone(),
             cfg.slo.clone(),
         )
@@ -557,6 +776,19 @@ impl PdScheduler {
             &shard_budgets,
         );
         self.preempt = Self::make_preempt(&self.cfg);
+        self.admission = Self::make_admission(&self.cfg);
+        let admission_active = self.cfg.admission.enabled;
+        // The deferral/eviction triggers lean on the engine's pure decode
+        // cost projection; an engine without one (the trait default
+        // returns 0) can only catch sequences that are already overdue.
+        // Surface that instead of silently under-delivering.
+        if admission_active && engine.projected_decode_us(1, 1) == 0 {
+            crate::log_warn!(
+                "admission.enabled: engine provides no decode-cost \
+                 projection; TBT triggers only react to already-overdue \
+                 sequences"
+            );
+        }
         // Preemption only converts freed capacity into TTFT wins when
         // the drain order serves by urgency; surface the dead
         // combination (e.g. `--preempt.enabled on --priority.enabled
@@ -583,6 +815,8 @@ impl PdScheduler {
             monitor: &mut self.monitor,
             preempt: &mut self.preempt,
             preempt_active,
+            admission: &self.admission,
+            admission_active,
             engine,
             events: EventQueue::new(),
             prefill: PrefillFleet::new(n_prefill),
@@ -592,6 +826,7 @@ impl PdScheduler {
                 n_decode,
                 n_shards,
                 preempt_enabled: self.cfg.preempt.enabled,
+                admission_enabled: admission_active,
                 ..Default::default()
             },
             clock: 0,
@@ -688,6 +923,14 @@ struct RunCore<'a> {
     /// urgency-ordered drain (uniform across shards — one factory).
     /// False short-circuits every preemption path to a single branch.
     preempt_active: bool,
+    /// TBT-aware admission policy (budget resolution, deadline-risk
+    /// predicates, eviction-victim order); pure, so shared.
+    admission: &'a AdmissionEngine,
+    /// `admission.enabled`: false short-circuits the deferral gate and
+    /// the TBT evict pass to one branch each. Gap/violation accounting
+    /// runs either way (a push and a compare per token) so disabled
+    /// baselines stay comparable; only the Summary JSON block is gated.
+    admission_active: bool,
     engine: &'a mut dyn Engine,
     events: EventQueue,
     prefill: PrefillFleet,
@@ -741,6 +984,10 @@ impl<'a> RunCore<'a> {
             EventKind::PrefillDone { instance } => self.on_prefill_done(instance),
             EventKind::DecodeIterEnd { decode } => {
                 self.on_decode_iter_end(decode);
+                // Iteration boundaries are also the TBT-eviction cadence:
+                // the only instant an instance's KV is unpinned. No-op
+                // unless `admission.enabled` + `admission.evict`.
+                self.tbt_evict_pass(decode);
                 // Decode-iteration boundaries are the work-stealing
                 // cadence: freed KV is when an idle shard can absorb a
                 // loaded shard's backlog. No-op unless sharded + enabled.
@@ -822,17 +1069,38 @@ impl<'a> RunCore<'a> {
             // dispatch-to-dispatch again would book decode time and the
             // first prefill as "queueing" in the Fig. 6a breakdown.
             let seq = match self.preempt.take_restore(r.id) {
-                Some(ri) => DecodeSeqState {
-                    id: r.id,
-                    class: r.class,
-                    arrival: r.arrival,
-                    input_len: ri.input_len,
-                    padded_len: ri.padded_len,
-                    output_len: ri.output_len,
-                    generated: ri.generated + 1,
-                    first_token: ri.first_token,
-                    ready_at: p.done_at + transfer,
-                },
+                Some(ri) => {
+                    // The stall between the last pre-eviction token and
+                    // the recompute prefill's completion (which produces
+                    // the next token) is a real inter-token gap the
+                    // client experienced — record it, or evictions would
+                    // erase exactly the gaps they cause and flatter the
+                    // TBT metrics they are judged by.
+                    record_tbt_gap(
+                        &mut self.report,
+                        self.admission,
+                        r.class,
+                        r.tbt_us,
+                        p.done_at.saturating_sub(ri.last_token_at),
+                    );
+                    DecodeSeqState {
+                        id: r.id,
+                        class: r.class,
+                        arrival: r.arrival,
+                        input_len: ri.input_len,
+                        padded_len: ri.padded_len,
+                        output_len: ri.output_len,
+                        generated: ri.generated + 1,
+                        first_token: ri.first_token,
+                        ready_at: p.done_at + transfer,
+                        tbt_us: r.tbt_us,
+                        // Provisional: decode admission re-anchors the
+                        // inter-token clock (`admit_due`), so hand-off
+                        // and boundary-wait latency stay TTFT-side
+                        // effects.
+                        last_token_at: p.done_at + transfer,
+                    }
+                }
                 None => {
                     self.report.queue_wait_us += p
                         .done_at
@@ -848,6 +1116,8 @@ impl<'a> RunCore<'a> {
                         generated: 1, // prefill produced the first token
                         first_token: p.done_at,
                         ready_at: p.done_at + transfer,
+                        tbt_us: r.tbt_us,
+                        last_token_at: p.done_at + transfer,
                     }
                 }
             };
@@ -868,6 +1138,18 @@ impl<'a> RunCore<'a> {
         let iter_end = d.iter_end.take().unwrap();
         let mut still_active = Vec::with_capacity(d.active.len());
         for mut s in d.active.drain(..) {
+            // Every member produced one token at this boundary: record
+            // its inter-token gap against the per-class TBT budget (the
+            // admission layer's target metric).
+            let gap = iter_end.saturating_sub(s.last_token_at);
+            s.last_token_at = iter_end;
+            record_tbt_gap(
+                &mut self.report,
+                self.admission,
+                s.class,
+                s.tbt_us,
+                gap,
+            );
             s.generated += 1;
             if s.generated >= s.output_len {
                 let footprint = s.footprint();
@@ -914,10 +1196,10 @@ impl<'a> RunCore<'a> {
     /// events before dispatching.
     ///
     /// Cost note: the candidate scan peeks every shard's oldest online
-    /// request, an O(queued) walk per event while preemption is enabled
-    /// (the default-off path pays one branch). A cached per-planner
-    /// min-arrival peek would make it O(shards); see the ROADMAP
-    /// follow-up before enabling preemption at very deep queues.
+    /// request through the planner's cached [`OnlinePeek`], O(shards)
+    /// amortized per event — a full O(queued) rescan happens only on the
+    /// first peek after a drain removed the cached head (the default-off
+    /// path still pays one branch).
     fn check_preemption(&mut self) -> bool {
         if !self.preempt_active || self.preempt.pending().is_some() {
             // Disabled (or armed but inert under a non-urgency drain —
@@ -926,7 +1208,7 @@ impl<'a> RunCore<'a> {
             return false;
         }
         let oldest: Vec<Option<QueuedReq>> = (0..self.shards.n())
-            .map(|si| self.shards.get(si).planner.oldest_online())
+            .map(|si| self.shards.get_mut(si).planner.oldest_online())
             .collect();
         let Some((csi, cand)) = self.preempt.candidate(&oldest, self.clock)
         else {
@@ -1025,7 +1307,7 @@ impl<'a> RunCore<'a> {
                 .push(self.clock, EventKind::PreemptPrefill { instance: pi });
         }
         for id in victims {
-            self.evict_decode_seq(ti, id);
+            self.evict_decode_seq(ti, id, false);
         }
         // Whichever trigger fired, the freed capacity (slot or KV) was
         // bought for this candidate: the next dispatch must try its
@@ -1104,11 +1386,15 @@ impl<'a> RunCore<'a> {
         self.shards.get_mut(si).planner.absorb(p.formed.reqs, self.clock);
     }
 
-    /// Trigger (b) mechanism, per victim: drop the sequence from the
-    /// active set, release its full-context KV reservation, checkpoint
-    /// its generated-token progress, and schedule the `RestoreReady`
-    /// requeue once the (tiny) checkpoint transfer lands.
-    fn evict_decode_seq(&mut self, di: usize, id: RequestId) {
+    /// Eviction mechanism shared by preemption trigger (b) and the
+    /// admission layer's TBT trigger, per victim: drop the sequence from
+    /// the active set, release its full-context KV reservation,
+    /// checkpoint its generated-token progress, and schedule the
+    /// `RestoreReady` requeue once the (tiny) checkpoint transfer lands.
+    /// `tbt` selects which trigger's books the eviction is charged to —
+    /// counts, freed KV, and recompute debt each stay with the subsystem
+    /// that caused them, so neither JSON block double-reports.
+    fn evict_decode_seq(&mut self, di: usize, id: RequestId, tbt: bool) {
         let si = self.shards.owner_of(di);
         let (s, footprint) = {
             let d = self.decode.get_mut(di);
@@ -1125,12 +1411,146 @@ impl<'a> RunCore<'a> {
         self.engine.release(s.id);
         let ckpt = self.engine.checkpoint(s.generated);
         let entry = self.preempt.checkpoint_seq(&s);
-        self.report.decode_evictions += 1;
-        self.report.evicted_kv_tokens += footprint;
-        self.report.recompute_tokens += entry.len as u64;
+        if tbt {
+            self.report.tbt_evictions += 1;
+            self.report.tbt_evicted_kv_tokens += footprint;
+            self.report.tbt_recompute_tokens += entry.len as u64;
+        } else {
+            self.report.decode_evictions += 1;
+            self.report.evicted_kv_tokens += footprint;
+            self.report.recompute_tokens += entry.len as u64;
+        }
         let due = self.clock + ckpt;
         self.restore_buf.push((due, di, entry));
         self.events.push(due, EventKind::RestoreReady { decode: di });
+    }
+
+    /// The admission layer's trigger (b), run at `di`'s iteration
+    /// boundary: when the *next* projected iteration would land a
+    /// resident online sequence past its effective inter-token deadline,
+    /// shed least-urgent offline actives (checkpoint-and-restore) until
+    /// the projection fits, the reclaimable pool runs dry, or the
+    /// per-trigger cap is hit. Shedding is useless when even an
+    /// online-only batch blows the budget (the budget is below the
+    /// weight-read floor), so that case evicts nothing.
+    fn tbt_evict_pass(&mut self, di: usize) {
+        if !self.admission_active || !self.admission.evict_enabled() {
+            return;
+        }
+        if !self.decode.get(di).at_boundary() {
+            return; // stale event; KV is pinned mid-iteration anyway
+        }
+        if !self.tbt_instance_at_risk(di) {
+            return;
+        }
+        // Floor check: would the resident online members alone still blow
+        // the budget? Then shedding offline buys nothing — evicting would
+        // be pure recompute waste.
+        if self.tbt_online_floor_at_risk(di) {
+            return;
+        }
+        let order = self.admission.victim_order(
+            &self.decode.get(di).active,
+            self.clock,
+        );
+        let mut shed = 0u32;
+        for id in order {
+            if shed >= self.admission.max_evictions() {
+                break;
+            }
+            self.evict_decode_seq(di, id, true);
+            shed += 1;
+            if !self.tbt_instance_at_risk(di) {
+                break;
+            }
+        }
+    }
+
+    /// Would `di`'s *next* iteration blow a resident online sequence's
+    /// effective inter-token deadline? Projects over the active set
+    /// *plus the pending hand-offs already due* — `admit_handoffs` joins
+    /// those at this same boundary, so an active-only projection would
+    /// systematically undershoot the iteration that actually launches
+    /// (trigger (a)'s `tbt_target` counts them for the same reason).
+    fn tbt_instance_at_risk(&self, di: usize) -> bool {
+        let d = self.decode.get(di);
+        let clock = self.clock;
+        let due = move |s: &&DecodeSeqState| s.ready_at <= clock;
+        let n = d.active.len() + d.pending.iter().filter(due).count();
+        if n == 0 {
+            return false;
+        }
+        let ctx =
+            active_ctx(d.active.iter().chain(d.pending.iter().filter(due)));
+        let projected = self.engine.projected_decode_us(n, ctx);
+        self.admission.deadline_at_risk(
+            d.active.iter().chain(d.pending.iter().filter(due)),
+            projected,
+            clock,
+        )
+    }
+
+    /// The evict pass's floor: the projected iteration over only the
+    /// resident online members (active + due pending — none of which the
+    /// pass may evict) against their own deadlines.
+    fn tbt_online_floor_at_risk(&self, di: usize) -> bool {
+        let d = self.decode.get(di);
+        let clock = self.clock;
+        let online: Vec<&DecodeSeqState> = d
+            .active
+            .iter()
+            .chain(d.pending.iter().filter(|s| s.ready_at <= clock))
+            .filter(|s| s.class == RequestClass::Online)
+            .collect();
+        let ctx = active_ctx(online.iter().copied());
+        let floor = self.engine.projected_decode_us(online.len(), ctx);
+        self.admission
+            .deadline_at_risk(online.into_iter(), floor, clock)
+    }
+
+    /// The admission layer's trigger (a) decision for a formed batch: the
+    /// decode instance among shard `si`'s owned set that can absorb `f`
+    /// without pushing any resident online sequence (active or pending —
+    /// a landed hand-off joins at the next boundary regardless) past its
+    /// effective inter-token deadline. Tries the planned target `ti`
+    /// first (the shard's max-headroom instance the batch was admitted
+    /// against), then the remaining owned instances in descending
+    /// headroom order, skipping any whose KV headroom no longer fits the
+    /// batch. `None` means defer: the batch returns to the shard queue.
+    fn tbt_target(&self, si: usize, ti: usize, f: &FormedBatch) -> Option<usize> {
+        let need: u64 = f.reqs.iter().map(QueuedReq::footprint).sum();
+        let n_new = f.reqs.len();
+        // An incoming sequence enters the continuous batch holding its
+        // prompt plus the prefill-produced first token.
+        let ctx_new: u64 = f.reqs.iter().map(|r| r.len as u64 + 1).sum();
+        let mut cands: Vec<(usize, u64)> = self
+            .shards
+            .get(si)
+            .owned
+            .iter()
+            .map(|&di| {
+                let headroom = self
+                    .per_decode_budget
+                    .saturating_sub(self.decode.get(di).reserved_tokens);
+                (di, headroom)
+            })
+            .collect();
+        cands.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (di, headroom) in cands {
+            if di != ti && headroom < need {
+                continue; // the batch was sized against ti's headroom
+            }
+            let d = self.decode.get(di);
+            let n = d.active.len() + d.pending.len() + n_new;
+            let ctx = active_ctx(&d.active) + active_ctx(&d.pending) + ctx_new;
+            let projected = self.engine.projected_decode_us(n, ctx);
+            let members = d.active.iter().chain(d.pending.iter());
+            if !self.admission.deadline_at_risk(members, projected, self.clock)
+            {
+                return Some(di);
+            }
+        }
+        None
     }
 
     /// A checkpoint landed: requeue every restore-buffer entry that is
@@ -1162,6 +1582,13 @@ impl<'a> RunCore<'a> {
     /// yields a batch wins; with one shard this is exactly the seed's
     /// global max-headroom `best_target` scan.
     fn dispatch_prefill(&mut self) {
+        // Shards whose head batch the admission gate deferred this round:
+        // nothing about the decision's inputs changes within one dispatch
+        // pass, so re-planning the same batch for the next idle prefill
+        // instance would just repeat the plan/sort/absorb churn (and
+        // double-count the deferral). Cleared every round — the *next*
+        // event re-evaluates against fresh decode state.
+        let mut deferred_shards: Vec<usize> = Vec::new();
         for pi in 0..self.prefill.n() {
             if !self.prefill.is_idle(pi) {
                 continue;
@@ -1180,12 +1607,44 @@ impl<'a> RunCore<'a> {
             }
             let mut chosen: Option<(usize, usize, FormedBatch)> = None;
             for &(si, ti, headroom) in &order {
-                if let Some(f) =
-                    self.shards.get_mut(si).planner.plan(self.clock, headroom)
-                {
-                    chosen = Some((si, ti, f));
-                    break;
+                if deferred_shards.contains(&si) {
+                    continue;
                 }
+                let Some(f) =
+                    self.shards.get_mut(si).planner.plan(self.clock, headroom)
+                else {
+                    continue;
+                };
+                if self.admission_active && self.admission.defer_enabled() {
+                    // Admission trigger (a): commit the batch only onto
+                    // an instance whose projected iteration keeps every
+                    // resident online sequence inside its TBT budget.
+                    match self.tbt_target(si, ti, &f) {
+                        Some(target) => {
+                            chosen = Some((si, target, f));
+                            break;
+                        }
+                        None => {
+                            // Defer: the batch returns to its shard's
+                            // queue (requeue, not a new arrival — the
+                            // monitor's queue depth was never
+                            // decremented) and the next shard in
+                            // headroom order gets its turn. The blocked
+                            // instance keeps producing DecodeIterEnd
+                            // events, so the retry cadence is its online
+                            // actives draining — no lost wake-up.
+                            self.report.admission_deferrals += 1;
+                            deferred_shards.push(si);
+                            self.shards
+                                .get_mut(si)
+                                .planner
+                                .absorb(f.reqs, self.clock);
+                            continue;
+                        }
+                    }
+                }
+                chosen = Some((si, ti, f));
+                break;
             }
             if chosen.is_none() {
                 // Deadlock breaker: nothing anywhere in flight and a head
@@ -1751,6 +2210,119 @@ mod tests {
         assert_eq!(off.prefill_batches, knobs.prefill_batches);
         assert_eq!(off.decode_iters, knobs.decode_iters);
         assert_eq!(knobs.prefill_aborts, 0);
+    }
+
+    #[test]
+    fn admission_disabled_is_inert() {
+        // The default config must take zero TBT-admission paths: counters
+        // stay at zero, the report flag is off, and the schedule is
+        // identical whether the spec's knobs are default or aggressive
+        // (the master switch gates everything). Gap accounting itself
+        // runs either way so disabled baselines stay comparable.
+        let mut cfg = small_cfg();
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 30, 8.0, Dataset::LongBench, 20,
+            cfg.model.max_seq, 43,
+        );
+        let off = run_bucketserve(&cfg, &trace);
+        assert!(!off.admission_enabled);
+        assert_eq!(off.admission_deferrals, 0);
+        assert_eq!(off.tbt_evictions, 0);
+        assert!(
+            !off.tbt_gaps_online_us.is_empty(),
+            "gap accounting runs even when admission is disabled"
+        );
+        cfg.admission.slack_margin = 0.9;
+        cfg.admission.offline_tbt_factor = 1.0;
+        cfg.admission.max_evictions = 64;
+        let knobs = run_bucketserve(&cfg, &trace);
+        assert_eq!(off.makespan_us, knobs.makespan_us);
+        assert_eq!(off.prefill_batches, knobs.prefill_batches);
+        assert_eq!(off.decode_iters, knobs.decode_iters);
+        assert_eq!(off.tbt_gaps_online_us, knobs.tbt_gaps_online_us);
+        assert_eq!(knobs.admission_deferrals, 0);
+        assert_eq!(knobs.tbt_evictions, 0);
+    }
+
+    #[test]
+    fn prop_oldest_online_cache_matches_full_scan() {
+        // The cached min-arrival peek (the ROADMAP's O(queued)-scan fix)
+        // must agree with a full scan after every queue mutation, for
+        // both planner families, across admits, drains, force-pops,
+        // steals, and absorbs.
+        use crate::baselines::distserve::FcfsPlanner;
+        prop::check("cached online peek ≡ full scan", 50, |g| {
+            let mut cfg = SystemConfig::default();
+            cfg.priority.enabled = g.bool();
+            let mut planner: Box<dyn PrefillPlanner> = if g.bool() {
+                Box::new(BucketPlanner::new(&cfg))
+            } else {
+                Box::new(FcfsPlanner::new(&cfg))
+            };
+            let mut alive: Vec<QueuedReq> = Vec::new();
+            let mut now: Micros = 0;
+            let mut next_id = 0u64;
+            let remove_ids = |alive: &mut Vec<QueuedReq>, ids: &[u64]| {
+                alive.retain(|r| !ids.contains(&r.id));
+            };
+            for _ in 0..g.usize(1, 70) {
+                now += g.u64(0, 50_000);
+                match g.usize(0, 9) {
+                    0..=4 => {
+                        let class = if g.bool() {
+                            RequestClass::Online
+                        } else {
+                            RequestClass::Offline
+                        };
+                        let req = Request::new(
+                            next_id,
+                            class,
+                            g.u64(1, 4000) as u32,
+                            g.u64(1, 400) as u32,
+                            g.u64(0, now + 1),
+                        );
+                        planner.admit(&req, now);
+                        alive.push(QueuedReq {
+                            id: req.id,
+                            len: req.input_len,
+                            output_len: req.output_len,
+                            arrival: req.arrival,
+                            class: req.class,
+                            tbt_us: 0,
+                        });
+                        next_id += 1;
+                    }
+                    5..=6 => {
+                        if let Some(fb) = planner.plan(now, g.u64(0, 20_000)) {
+                            let ids: Vec<u64> =
+                                fb.reqs.iter().map(|r| r.id).collect();
+                            remove_ids(&mut alive, &ids);
+                        }
+                    }
+                    7 => {
+                        if let Some(r) = planner.force_pop(now) {
+                            remove_ids(&mut alive, &[r.id]);
+                        }
+                    }
+                    _ => {
+                        // Steal then absorb right back: net queue content
+                        // unchanged, but both cache paths (removal
+                        // invalidation, insert maintenance) exercised.
+                        let stolen = planner.steal_tail(
+                            g.usize(0, 8),
+                            g.u64(0, 20_000),
+                            now,
+                        );
+                        planner.absorb(stolen, now);
+                    }
+                }
+                assert_eq!(
+                    planner.oldest_online(),
+                    oldest_online_in(alive.iter()),
+                    "cached peek diverged from full scan"
+                );
+            }
+        });
     }
 
     #[test]

@@ -22,7 +22,13 @@
 //! one-thread-per-shard executor a mechanical follow-up.
 //!
 //! Placement and victim-selection policy live in [`super::balance`]; the
-//! serving loop drives shards from [`super::scheduler`].
+//! serving loop drives shards from [`super::scheduler`]. Two later
+//! subsystems ride on the shard boundary: preemption requeues aborted
+//! and evicted work into the *owning* shard's planner (never a global
+//! queue), and the TBT-aware admission layer walks a shard's owned
+//! decode instances in headroom order when deferring or retargeting a
+//! batch ([`super::admission`]) — both therefore need no shard-layer
+//! state of their own.
 
 use super::balance::{self, Router, ShardLoad};
 use super::fleet::DecodeFleet;

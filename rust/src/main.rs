@@ -230,6 +230,12 @@ Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
                   --slo.ttft_us 400000 --slo.tbt_us 100000
                   --sharding.shards 0|N (0 = one per decode instance)
                   --sharding.placement least_loaded|kv|hash
-                  --sharding.steal on|off"
+                  --sharding.steal on|off
+                  --priority.enabled on|off --priority.aging_rate 0.02
+                  --preempt.enabled on|off --preempt.urgency_threshold 0.9
+                  --admission.enabled on|off --admission.defer on|off
+                  --admission.evict on|off --admission.slack_margin 0.1
+                  --admission.offline_tbt_factor 8 --admission.max_evictions 2
+(full knob-by-knob table: docs/ARCHITECTURE.md)"
     );
 }

@@ -1,5 +1,36 @@
 //! Metrics: run-report summarization shared by the CLI, examples, and the
 //! figure benches.
+//!
+//! A [`crate::coordinator::RunReport`] is the raw record of one serving
+//! run (completions with timestamps, fleet busy time, per-subsystem
+//! counters); [`Summary`] flattens it into the one-row-per-run shape
+//! every figure bench prints — both as an aligned table and as one JSON
+//! object per line on stdout, which is what trajectory tooling scrapes.
+//!
+//! # Output-stability contract
+//!
+//! The Summary JSON is treated as a stable artifact: a default-config run
+//! must serialize byte-identically across refactors (pinned by the
+//! `shards_1_summary_json_is_byte_identical_to_legacy` integration
+//! test). Subsystems that are off by default therefore emit their
+//! columns *only when armed*:
+//!
+//! * `n_shards`/`steals`/`shard_routed` — only when `sharding` actually
+//!   splits the coordinator (`n_shards > 1`);
+//! * `prefill_aborts`/`decode_evictions`/`wasted_*`/`evicted_kv_tokens`/
+//!   `recompute_tokens` — only when `preempt.enabled`;
+//! * the TBT block (`tbt_attain_*`, `tbt_p50/p99_*`, `tbt_violations_*`,
+//!   `admission_deferrals`, `tbt_evictions` + its
+//!   `tbt_evicted_kv_tokens`/`tbt_recompute_tokens` cost books) — only
+//!   when `admission.enabled`. The underlying gap *measurement* runs in
+//!   every run (so paired on/off comparisons can read the disabled side
+//!   off the `RunReport`), but disabled JSON stays legacy-shaped and
+//!   skips even the percentile sort.
+//! * `error` — only on abnormal termination; its presence means the row
+//!   must not be read as a clean result.
+//!
+//! Adding a new always-on column is a breaking change to every pinned
+//! baseline; gate it or extend the integration test deliberately.
 
 use crate::coordinator::RunReport;
 use crate::config::SloSpec;
@@ -53,6 +84,30 @@ pub struct Summary {
     pub evicted_kv_tokens: u64,
     /// Context tokens evicted sequences replayed at re-prefill.
     pub recompute_tokens: u64,
+    /// Whether the TBT-aware admission subsystem was armed (gates the
+    /// TBT JSON block so disabled runs stay byte-identical to legacy
+    /// output; the fields below are computed either way).
+    pub admission_enabled: bool,
+    /// Formed batches deferred by the TBT admission gate.
+    pub admission_deferrals: u64,
+    /// Offline decode sequences shed by the TBT eviction trigger.
+    pub tbt_evictions: u64,
+    /// Full-context KV tokens released by TBT evictions.
+    pub tbt_evicted_kv_tokens: u64,
+    /// Context tokens TBT-evicted sequences replay at re-prefill.
+    pub tbt_recompute_tokens: u64,
+    /// Per-class TBT attainment: fraction of observed inter-token gaps
+    /// within the per-token budget (1.0 when the class produced none).
+    pub tbt_attain_online: f64,
+    pub tbt_attain_offline: f64,
+    /// Per-class inter-token gap percentiles, ms (0 when absent).
+    pub tbt_p50_online_ms: f64,
+    pub tbt_p99_online_ms: f64,
+    pub tbt_p50_offline_ms: f64,
+    pub tbt_p99_offline_ms: f64,
+    /// Per-class inter-token gaps exceeding their budget.
+    pub tbt_violations_online: u64,
+    pub tbt_violations_offline: u64,
     /// Abnormal-termination diagnostics from the run (scheduler stall);
     /// a summary carrying this must not be read as a clean result.
     pub error: Option<String>,
@@ -70,6 +125,35 @@ impl Summary {
             tbt.push(c.tbt() / 1e3);
             waste.push(c.waste_ratio());
         }
+        // One Samples per class for the gap percentiles (sorted once per
+        // class, not once per percentile), and only when the admission
+        // subsystem will actually emit them: the raw gap vectors hold
+        // one entry per generated token, and sorting them for every
+        // legacy bench row whose JSON drops the fields would be pure
+        // per-row tax — paired disabled-side comparisons read the
+        // RunReport (gap vectors, attainment helpers) instead.
+        let gap_samples = |class: RequestClass| {
+            let mut s = Samples::new();
+            for &g in r.tbt_gaps_class(class) {
+                s.push(g as f64 / 1e3);
+            }
+            s
+        };
+        let (mut gaps_online, mut gaps_offline) = if r.admission_enabled {
+            (
+                gap_samples(RequestClass::Online),
+                gap_samples(RequestClass::Offline),
+            )
+        } else {
+            (Samples::new(), Samples::new())
+        };
+        let pct = |s: &mut Samples, q: f64| {
+            if s.is_empty() {
+                0.0
+            } else {
+                s.percentile(q)
+            }
+        };
         Summary {
             system: system.to_string(),
             n_requests: r.completions.len(),
@@ -110,6 +194,19 @@ impl Summary {
             wasted_prefill_tokens: r.wasted_prefill_tokens,
             evicted_kv_tokens: r.evicted_kv_tokens,
             recompute_tokens: r.recompute_tokens,
+            admission_enabled: r.admission_enabled,
+            admission_deferrals: r.admission_deferrals,
+            tbt_evictions: r.tbt_evictions,
+            tbt_evicted_kv_tokens: r.tbt_evicted_kv_tokens,
+            tbt_recompute_tokens: r.tbt_recompute_tokens,
+            tbt_attain_online: r.tbt_attainment_class(RequestClass::Online),
+            tbt_attain_offline: r.tbt_attainment_class(RequestClass::Offline),
+            tbt_p50_online_ms: pct(&mut gaps_online, 50.0),
+            tbt_p99_online_ms: pct(&mut gaps_online, 99.0),
+            tbt_p50_offline_ms: pct(&mut gaps_offline, 50.0),
+            tbt_p99_offline_ms: pct(&mut gaps_offline, 99.0),
+            tbt_violations_online: r.tbt_violations_online,
+            tbt_violations_offline: r.tbt_violations_offline,
             error: r.error.clone(),
         }
     }
@@ -164,6 +261,49 @@ impl Summary {
             ));
             fields.push(("evicted_kv_tokens", Json::from(self.evicted_kv_tokens)));
             fields.push(("recompute_tokens", Json::from(self.recompute_tokens)));
+        }
+        // TBT-admission block only when the subsystem is armed: a default
+        // (admission disabled) run's Summary JSON stays byte-identical to
+        // the pre-admission scheduler's output. Gap measurement itself is
+        // always on — paired comparisons read the disabled side from the
+        // RunReport instead.
+        if self.admission_enabled {
+            fields.push((
+                "admission_deferrals",
+                Json::from(self.admission_deferrals),
+            ));
+            fields.push(("tbt_evictions", Json::from(self.tbt_evictions)));
+            fields.push((
+                "tbt_evicted_kv_tokens",
+                Json::from(self.tbt_evicted_kv_tokens),
+            ));
+            fields.push((
+                "tbt_recompute_tokens",
+                Json::from(self.tbt_recompute_tokens),
+            ));
+            fields.push(("tbt_attain_online", Json::num(self.tbt_attain_online)));
+            fields.push((
+                "tbt_attain_offline",
+                Json::num(self.tbt_attain_offline),
+            ));
+            fields.push(("tbt_p50_online_ms", Json::num(self.tbt_p50_online_ms)));
+            fields.push(("tbt_p99_online_ms", Json::num(self.tbt_p99_online_ms)));
+            fields.push((
+                "tbt_p50_offline_ms",
+                Json::num(self.tbt_p50_offline_ms),
+            ));
+            fields.push((
+                "tbt_p99_offline_ms",
+                Json::num(self.tbt_p99_offline_ms),
+            ));
+            fields.push((
+                "tbt_violations_online",
+                Json::from(self.tbt_violations_online),
+            ));
+            fields.push((
+                "tbt_violations_offline",
+                Json::from(self.tbt_violations_offline),
+            ));
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::from(e.as_str())));
@@ -264,6 +404,46 @@ mod tests {
         // trigger can never fire, so every counter is zero.
         assert_eq!(parsed.get("prefill_aborts").as_u64(), Some(0));
         assert_eq!(parsed.get("decode_evictions").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn tbt_block_only_when_admission_enabled() {
+        let cfg = SystemConfig::default();
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 10, 8.0, Dataset::Alpaca, 10, 4096, 13,
+        );
+        // Default config: admission off → no TBT keys in the JSON; the
+        // cheap attainment fields are still computed from the measured
+        // gaps, but the per-token percentile sort is skipped (paired
+        // comparisons read the disabled side off the RunReport).
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(!r.admission_enabled);
+        assert!(
+            !r.tbt_gaps_online_us.is_empty(),
+            "gaps measured even when admission is off"
+        );
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let j = s.to_json();
+        assert!(j.get("tbt_attain_online").is_null());
+        assert!(j.get("admission_deferrals").is_null());
+        assert!(j.get("tbt_p99_online_ms").is_null());
+        assert!((0.0..=1.0).contains(&s.tbt_attain_online));
+        assert_eq!(s.tbt_p50_online_ms, 0.0, "percentiles gated off");
+        // Enabled run: the block appears and parses back.
+        let mut cfg = SystemConfig::default();
+        cfg.admission.enabled = true;
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(r.admission_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert!(!parsed.get("admission_deferrals").is_null());
+        assert!(!parsed.get("tbt_evictions").is_null());
+        assert!(!parsed.get("tbt_evicted_kv_tokens").is_null());
+        assert!(!parsed.get("tbt_recompute_tokens").is_null());
+        assert!(!parsed.get("tbt_attain_online").is_null());
+        assert!(!parsed.get("tbt_p99_offline_ms").is_null());
+        assert!(!parsed.get("tbt_violations_online").is_null());
+        assert!(s.tbt_p50_online_ms > 0.0, "percentiles computed when on");
     }
 
     #[test]

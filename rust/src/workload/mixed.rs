@@ -4,6 +4,13 @@
 //! LongBench otherwise — short requests dominate by count, long requests
 //! dominate by tokens, which is exactly the heterogeneity that breaks
 //! naive batching.
+//!
+//! This sampler mixes *lengths* within one request class. The two-sided
+//! SLO experiments instead mix *classes* — an offline backlog under an
+//! online stream — via [`crate::workload::Trace::mixed_classes`], whose
+//! per-class TBT budgets can be stamped with
+//! [`crate::workload::Trace::stamp_tbt`] for the TBT-aware admission
+//! layer (the `tbt_slo` bench pairs exactly those two calls).
 
 use super::{alpaca::Alpaca, longbench::LongBench, LengthSampler};
 use crate::util::rng::Pcg;

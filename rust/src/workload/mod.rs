@@ -14,7 +14,7 @@ pub mod mixed;
 pub mod arrival;
 pub mod trace;
 
-pub use request::{Request, RequestClass, RequestId};
+pub use request::{class_tbt_budget_us, Request, RequestClass, RequestId};
 pub use arrival::ArrivalProcess;
 pub use trace::Trace;
 

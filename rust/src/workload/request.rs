@@ -3,6 +3,30 @@
 use crate::config::SloSpec;
 use crate::Micros;
 
+/// Resolve the per-token TBT budget (µs) of a sequence — the single
+/// definition shared by the request helpers and the coordinator's
+/// TBT-aware admission layer. An explicit stamped override wins;
+/// otherwise the class default applies: the SLO's `tbt_us` for the
+/// online class, `offline_factor ×` that for offline throughput work
+/// (no interactive reader, but a lax pacing bound keeps starvation
+/// visible in the TBT metrics).
+pub fn class_tbt_budget_us(
+    class: RequestClass,
+    override_us: u64,
+    slo: &SloSpec,
+    offline_factor: f64,
+) -> u64 {
+    if override_us > 0 {
+        return override_us;
+    }
+    match class {
+        RequestClass::Online => slo.tbt_us,
+        RequestClass::Offline => {
+            (slo.tbt_us as f64 * offline_factor.max(1.0)) as u64
+        }
+    }
+}
+
 /// Unique, monotonically assigned request id.
 pub type RequestId = u64;
 
@@ -28,6 +52,12 @@ pub struct Request {
     /// Optional prompt token ids (real-engine runs only; simulator leaves
     /// this empty to keep traces light).
     pub tokens: Vec<u32>,
+    /// Per-token inter-token (TBT) budget override in µs; 0 = the class
+    /// default resolved by [`class_tbt_budget_us`]. Stamped per class by
+    /// [`crate::workload::Trace::stamp_tbt`] and consumed by the
+    /// TBT-aware admission layer
+    /// ([`crate::coordinator::admission::AdmissionEngine`]).
+    pub tbt_deadline_us: u64,
 }
 
 impl Request {
@@ -38,7 +68,28 @@ impl Request {
         output_len: u32,
         arrival: Micros,
     ) -> Request {
-        Request { id, class, input_len, output_len, arrival, tokens: Vec::new() }
+        Request {
+            id,
+            class,
+            input_len,
+            output_len,
+            arrival,
+            tokens: Vec::new(),
+            tbt_deadline_us: 0,
+        }
+    }
+
+    /// Builder-style TBT-budget override (see [`Request::tbt_deadline_us`]).
+    pub fn with_tbt_deadline(mut self, us: u64) -> Request {
+        self.tbt_deadline_us = us;
+        self
+    }
+
+    /// This request's per-token TBT budget under `slo`, resolving the
+    /// stamped override against the class default (offline class gets
+    /// `offline_factor ×` the online budget).
+    pub fn tbt_budget_us(&self, slo: &SloSpec, offline_factor: f64) -> u64 {
+        class_tbt_budget_us(self.class, self.tbt_deadline_us, slo, offline_factor)
     }
 
     /// Total KV-cache tokens this request will eventually hold.
@@ -127,6 +178,27 @@ mod tests {
         assert_eq!(r.ttft_slack(&slo, 100_000), 400_000);
         assert_eq!(r.ttft_slack(&slo, 500_000), 0);
         assert_eq!(r.ttft_slack(&slo, 600_000), -100_000);
+    }
+
+    #[test]
+    fn tbt_budget_resolves_override_then_class_default() {
+        let slo = SloSpec { ttft_us: 400_000, tbt_us: 100_000 };
+        let online = Request::new(1, RequestClass::Online, 10, 5, 0);
+        let offline = Request::new(2, RequestClass::Offline, 10, 5, 0);
+        assert_eq!(online.tbt_budget_us(&slo, 8.0), 100_000);
+        assert_eq!(offline.tbt_budget_us(&slo, 8.0), 800_000);
+        // A stamped override wins for either class.
+        let stamped = online.clone().with_tbt_deadline(30_000);
+        assert_eq!(stamped.tbt_budget_us(&slo, 8.0), 30_000);
+        assert_eq!(
+            class_tbt_budget_us(RequestClass::Offline, 55_000, &slo, 8.0),
+            55_000
+        );
+        // A sub-1 factor never shrinks offline below the online budget.
+        assert_eq!(
+            class_tbt_budget_us(RequestClass::Offline, 0, &slo, 0.5),
+            100_000
+        );
     }
 
     #[test]

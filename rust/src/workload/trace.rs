@@ -90,6 +90,27 @@ impl Trace {
         Trace { requests }
     }
 
+    /// Stamp per-class TBT budgets onto every request (builder-style):
+    /// a nonzero value overrides that class's per-token budget, 0 leaves
+    /// the class at the run-time default (`slo.tbt_us` for online,
+    /// `admission.offline_tbt_factor ×` that for offline). Stamps never
+    /// affect *scheduling* unless the run enables the TBT-aware
+    /// admission layer; the per-token gap *measurement* in `RunReport`
+    /// classifies violations against the stamped budget either way, so
+    /// paired on/off comparisons must stamp both runs identically.
+    pub fn stamp_tbt(mut self, online_us: u64, offline_us: u64) -> Trace {
+        for r in &mut self.requests {
+            let us = match r.class {
+                RequestClass::Online => online_us,
+                RequestClass::Offline => offline_us,
+            };
+            if us > 0 {
+                r.tbt_deadline_us = us;
+            }
+        }
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.requests.len()
     }
@@ -117,7 +138,7 @@ impl Trace {
             self.requests
                 .iter()
                 .map(|r| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("id", Json::from(r.id)),
                         ("class", Json::from(match r.class {
                             RequestClass::Online => "online",
@@ -126,7 +147,16 @@ impl Trace {
                         ("input_len", Json::from(r.input_len as u64)),
                         ("output_len", Json::from(r.output_len as u64)),
                         ("arrival", Json::from(r.arrival)),
-                    ])
+                    ];
+                    // Emitted only when stamped, so unstamped traces keep
+                    // their legacy byte-for-byte serialization.
+                    if r.tbt_deadline_us > 0 {
+                        fields.push((
+                            "tbt_deadline_us",
+                            Json::from(r.tbt_deadline_us),
+                        ));
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         )
@@ -141,13 +171,16 @@ impl Trace {
                 Some("offline") => RequestClass::Offline,
                 _ => RequestClass::Online,
             };
-            requests.push(Request::new(
+            let mut req = Request::new(
                 item.get("id").as_u64().unwrap_or(requests.len() as u64),
                 class,
                 item.get("input_len").as_u64().unwrap_or(1) as u32,
                 item.get("output_len").as_u64().unwrap_or(1) as u32,
                 item.get("arrival").as_u64().unwrap_or(0),
-            ));
+            );
+            req.tbt_deadline_us =
+                item.get("tbt_deadline_us").as_u64().unwrap_or(0);
+            requests.push(req);
         }
         requests.sort_by_key(|r| r.arrival);
         Ok(Trace { requests })
@@ -233,6 +266,29 @@ mod tests {
             assert_eq!(a.output_len, b.output_len);
             assert_eq!(a.arrival, b.arrival);
             assert_eq!(a.class, b.class);
+        }
+    }
+
+    #[test]
+    fn stamp_tbt_sets_budgets_per_class_and_round_trips() {
+        let t = Trace::mixed_classes(
+            Dataset::Alpaca, 10, 8.0, Dataset::LongBench, 10, 4096, 7,
+        );
+        // Unstamped serialization carries no TBT key at all.
+        assert!(!t.to_json().to_string().contains("tbt_deadline_us"));
+        let t = t.stamp_tbt(30_000, 0);
+        for r in &t.requests {
+            match r.class {
+                RequestClass::Online => assert_eq!(r.tbt_deadline_us, 30_000),
+                RequestClass::Offline => {
+                    assert_eq!(r.tbt_deadline_us, 0, "0 leaves a class unset")
+                }
+            }
+        }
+        let j = t.to_json().to_string();
+        let t2 = Trace::from_json(&Json::parse(&j).unwrap()).unwrap();
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.tbt_deadline_us, b.tbt_deadline_us);
         }
     }
 }
