@@ -1,9 +1,9 @@
 //! Shard scaling — throughput and SLO attainment vs decode-instance
 //! count, with the coordinator sharded one-scheduler-per-instance.
 //!
-//! Three configurations per fleet size on the same skewed mixed-class
-//! trace (an offline LongBench backlog at t=0 under an online Alpaca
-//! stream, both scaled with the fleet):
+//! Configurations per fleet size on the same skewed mixed-class trace
+//! (an offline LongBench backlog at t=0 under an online Alpaca stream,
+//! both scaled with the fleet):
 //!
 //! * `global`   — shards = 1: the seed's single global queue + global
 //!   max-headroom scan (the scalability ceiling the refactor removes).
@@ -12,6 +12,15 @@
 //! * `sharded+steal` — same, with idle shards stealing the tail of the
 //!   most-loaded shard's highest-urgency bucket at decode-iteration
 //!   boundaries.
+//! * `…/t2`, `…/tN` — the thread-count axis: the same sharded+steal run
+//!   under the parallel executor (2 workers / one per shard). The
+//!   Summary JSON of these rows is byte-identical to `sharded+steal` by
+//!   the determinism contract; what the axis measures is **wall-clock**
+//!   executor behavior (the `wall ms` and `sync pts` columns — executor
+//!   counters live on `RunReport`, never in Summary JSON). Boundary
+//!   handlers in simulation are cheap arithmetic, so expect bounded
+//!   gains here; the axis exists to keep the fan-out/merge overhead
+//!   honest as fleets scale.
 //!
 //! Each row also emits its Summary JSON on stdout (one line per run) so
 //! trajectory tooling can scrape the sweep.
@@ -21,12 +30,13 @@ use bucketserve::config::{Placement, SystemConfig};
 use bucketserve::metrics::Summary;
 use bucketserve::util::bench::{f1, f2, Table};
 use bucketserve::workload::{Dataset, RequestClass, Trace};
+use std::time::Instant;
 
 fn main() {
     println!("shard_scaling — sharded coordinator vs the global queue\n");
     let mut t = Table::new(&[
-        "n_decode", "variant", "tok/s", "online SLO", "mean TTFT ms",
-        "steals", "makespan s",
+        "n_decode", "variant", "threads", "tok/s", "online SLO",
+        "mean TTFT ms", "steals", "makespan s", "wall ms", "sync pts",
     ]);
     for &nd in &[1usize, 2, 4, 8] {
         let mut base = SystemConfig::default();
@@ -43,16 +53,21 @@ fn main() {
             base.model.max_seq,
             base.seed,
         );
-        for (label, shards, placement, steal) in [
-            ("global", 1u32, Placement::LeastLoaded, false),
-            ("sharded", 0, Placement::Hash, false),
-            ("sharded+steal", 0, Placement::Hash, true),
+        for (label, shards, placement, steal, threads) in [
+            ("global", 1u32, Placement::LeastLoaded, false, 1u32),
+            ("sharded", 0, Placement::Hash, false, 1),
+            ("sharded+steal", 0, Placement::Hash, true, 1),
+            ("sharded+steal/t2", 0, Placement::Hash, true, 2),
+            ("sharded+steal/tN", 0, Placement::Hash, true, 0),
         ] {
             let mut cfg = base.clone();
             cfg.sharding.shards = shards;
             cfg.sharding.placement = placement;
             cfg.sharding.steal = steal;
+            cfg.executor.threads = threads;
+            let wall_start = Instant::now();
             let r = System::BucketServe.run_sim(&cfg, &trace);
+            let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
             let s = Summary::from_report(
                 &format!("BucketServe/{label}/d{nd}"),
                 &r,
@@ -62,6 +77,7 @@ fn main() {
             t.row(vec![
                 nd.to_string(),
                 label.to_string(),
+                r.executor_threads.to_string(),
                 f1(r.throughput_tps()),
                 f2(r.slo_attainment_class(
                     RequestClass::Online,
@@ -71,6 +87,8 @@ fn main() {
                 f1(r.mean_ttft_class_us(RequestClass::Online) / 1e3),
                 r.steals.to_string(),
                 f2(r.makespan_us as f64 / 1e6),
+                f2(wall_ms),
+                r.executor_sync_points.to_string(),
             ]);
         }
     }

@@ -350,6 +350,47 @@ impl Default for AdmissionSpec {
     }
 }
 
+/// Parallel-executor knobs (consumed by
+/// [`crate::coordinator::executor`]): how many worker threads the serving
+/// loop fans decode-iteration boundaries out to. `threads = 1` (the
+/// default) is the sequential scheduler; `0` means one worker per
+/// scheduler shard; any other value clamps to `[1, n_shards]`. Whatever
+/// the resolved count, the schedule — and the Summary JSON — is pinned
+/// byte-identical to the sequential run: the executor changes *where*
+/// boundary accounting executes, never what it computes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutorSpec {
+    /// Worker threads: 1 = sequential (default), 0 = one per shard.
+    pub threads: u32,
+}
+
+impl Default for ExecutorSpec {
+    fn default() -> Self {
+        // `EXECUTOR_THREADS=N` flips any default-config run — the whole
+        // test suite included — onto the parallel executor. Safe because
+        // parallel output is pinned byte-identical to sequential; CI runs
+        // the full suite this way to catch concurrency regressions.
+        let threads = std::env::var("EXECUTOR_THREADS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        ExecutorSpec { threads }
+    }
+}
+
+impl ExecutorSpec {
+    /// Resolved worker count over `n_shards` scheduler shards: 0 = one
+    /// per shard, anything else clamps to `[1, n_shards]` (a worker
+    /// without a shard to serve would never receive work).
+    pub fn resolve(&self, n_shards: usize) -> usize {
+        let n_shards = n_shards.max(1);
+        match self.threads {
+            0 => n_shards,
+            t => (t as usize).min(n_shards),
+        }
+    }
+}
+
 /// SLO targets for online requests (DistServe-style TTFT + TBT).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloSpec {
@@ -379,6 +420,7 @@ pub struct SystemConfig {
     pub priority: PrioritySpec,
     pub preempt: PreemptSpec,
     pub admission: AdmissionSpec,
+    pub executor: ExecutorSpec,
     pub seed: u64,
 }
 
@@ -394,6 +436,7 @@ impl Default for SystemConfig {
             priority: PrioritySpec::default(),
             preempt: PreemptSpec::default(),
             admission: AdmissionSpec::default(),
+            executor: ExecutorSpec::default(),
             seed: 42,
         }
     }
@@ -497,6 +540,12 @@ impl SystemConfig {
             if let Some(v) = ad.get("offline_tbt_factor").as_f64() { d.offline_tbt_factor = v; }
             if let Some(v) = ad.get("max_evictions").as_u64() { d.max_evictions = v as u32; }
         }
+        let ex = j.get("executor");
+        if !ex.is_null() {
+            if let Some(v) = ex.get("threads").as_u64() {
+                c.executor.threads = v as u32;
+            }
+        }
         let o = j.get("slo");
         if !o.is_null() {
             if let Some(v) = o.get("ttft_us").as_u64() { c.slo.ttft_us = v; }
@@ -555,6 +604,7 @@ impl SystemConfig {
                 "admission.max_evictions" => {
                     set_u32(&mut self.admission.max_evictions, v)
                 }
+                "executor.threads" => set_u32(&mut self.executor.threads, v),
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
                 "slo.ttft_us" => { if let Ok(x) = v.parse() { self.slo.ttft_us = x; } }
@@ -623,6 +673,9 @@ impl SystemConfig {
                 ("slack_margin", Json::num(self.admission.slack_margin)),
                 ("offline_tbt_factor", Json::num(self.admission.offline_tbt_factor)),
                 ("max_evictions", Json::from(self.admission.max_evictions as u64)),
+            ])),
+            ("executor", Json::obj(vec![
+                ("threads", Json::from(self.executor.threads as u64)),
             ])),
             ("slo", Json::obj(vec![
                 ("ttft_us", Json::from(self.slo.ttft_us)),
@@ -886,6 +939,37 @@ mod tests {
         assert!(c.admission.defer);
         assert_eq!(c.admission.offline_tbt_factor, 8.0);
         assert_eq!(c.admission.max_evictions, 2);
+    }
+
+    #[test]
+    fn executor_resolution_clamps_to_shards() {
+        // Note: no test asserts the *default* thread count — it is
+        // deliberately env-sensitive (EXECUTOR_THREADS) so CI can run the
+        // whole suite through the parallel executor.
+        let seq = ExecutorSpec { threads: 1 };
+        assert_eq!(seq.resolve(1), 1);
+        assert_eq!(seq.resolve(8), 1);
+        let per_shard = ExecutorSpec { threads: 0 };
+        assert_eq!(per_shard.resolve(1), 1);
+        assert_eq!(per_shard.resolve(4), 4);
+        assert_eq!(per_shard.resolve(0), 1, "degenerate fleet still runs");
+        let fixed = ExecutorSpec { threads: 3 };
+        assert_eq!(fixed.resolve(8), 3);
+        assert_eq!(fixed.resolve(2), 2, "never more workers than shards");
+    }
+
+    #[test]
+    fn executor_json_and_cli_overrides() {
+        let j = Json::parse(r#"{"executor":{"threads":4}}"#).unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert_eq!(c.executor.threads, 4);
+
+        let args = Args::parse(
+            ["--executor.threads", "0"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert_eq!(c.executor.threads, 0, "0 = one worker per shard");
     }
 
     #[test]

@@ -125,9 +125,34 @@ impl AdmissionEngine {
         deadline as i64 - now as i64
     }
 
+    /// Boundary-to-boundary form of the risk predicate, used by the
+    /// deferral trigger: would an iteration of `projected_us` — the gap a
+    /// resident actually observes, boundary to boundary — blow any
+    /// *online* member's effective budget? Inter-token gaps are anchored
+    /// at iteration boundaries (and re-anchored at admission), so for a
+    /// continuously-busy instance the next gap *is* the next iteration's
+    /// duration. The mid-iteration form below additionally charges time
+    /// already elapsed since the member's last anchor, but that time is
+    /// re-anchored away at the boundary the batch actually joins — using
+    /// it against a dispatch-time decision double-charges and defers
+    /// spuriously (the ROADMAP follow-up this predicate closes; the
+    /// regression tests pin the difference).
+    pub fn iteration_at_risk<'a>(
+        &self,
+        members: impl Iterator<Item = &'a DecodeSeqState>,
+        projected_us: Micros,
+    ) -> bool {
+        members
+            .filter(|s| s.class == RequestClass::Online)
+            .any(|s| projected_us > self.effective_budget_us(s.class, s.tbt_us))
+    }
+
     /// True when an iteration of `projected_us` starting at `now` would
     /// land any *online* member past its effective next-token deadline —
-    /// the shared predicate of both triggers. Offline members never gate
+    /// the eviction trigger's predicate, evaluated *at* a boundary where
+    /// active members' anchors equal `now` (for them this degenerates to
+    /// [`AdmissionEngine::iteration_at_risk`], while members already
+    /// behind their anchor tighten it). Offline members never gate
     /// admission: their lax budget exists for metrics, not for blocking
     /// throughput work on its own behalf.
     pub fn deadline_at_risk<'a>(
@@ -253,6 +278,49 @@ mod tests {
         assert_eq!(e.slack_us(&online, 40_000), 50_000);
         assert!(e.deadline_at_risk([online.clone()].iter(), 60_000, 40_000));
         assert!(!e.deadline_at_risk([online].iter(), 40_000, 40_000));
+    }
+
+    #[test]
+    fn deferral_predicate_uses_boundary_to_boundary_accounting() {
+        let e = engine(true);
+        // Effective online budget = 90 ms. A resident whose last token
+        // landed 40 ms ago faces a 60 ms projected iteration:
+        //  * mid-iteration accounting charges the elapsed 40 ms too
+        //    (60 > 90 − 40) and would defer — spuriously, because the
+        //    batch joins at the boundary where the gap clock re-anchors;
+        //  * boundary-to-boundary accounting admits (60 ≤ 90).
+        let s = seq(1, RequestClass::Online, 0, 5, 100, 0);
+        let now = 40_000;
+        assert!(
+            e.deadline_at_risk([s.clone()].iter(), 60_000, now),
+            "the mid-iteration form double-charges elapsed boundary time"
+        );
+        assert!(
+            !e.iteration_at_risk([s.clone()].iter(), 60_000),
+            "boundary form must admit an iteration inside the budget"
+        );
+        // A projection past the budget itself still defers...
+        assert!(e.iteration_at_risk([s].iter(), 95_000));
+        // ...and offline members never gate, as with the old form.
+        let off = seq(2, RequestClass::Offline, 0, 5, 100, 0);
+        assert!(!e.iteration_at_risk([off].iter(), 10_000_000));
+    }
+
+    #[test]
+    fn predicates_agree_exactly_at_a_boundary() {
+        // The eviction trigger evaluates at the boundary, where active
+        // members' anchors equal `now`: there the two forms coincide, so
+        // tightening the deferral predicate cannot shift the evict pass.
+        let e = engine(true);
+        let now = 5_000_000;
+        let s = seq(3, RequestClass::Online, 0, 10, 100, now);
+        for projected in [0u64, 50_000, 89_000, 90_001, 200_000] {
+            assert_eq!(
+                e.deadline_at_risk([s.clone()].iter(), projected, now),
+                e.iteration_at_risk([s.clone()].iter(), projected),
+                "divergence at projected={projected}"
+            );
+        }
     }
 
     #[test]

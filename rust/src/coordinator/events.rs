@@ -13,6 +13,27 @@
 //! [`EventId`], and [`EventQueue::cancel`] tombstones the entry so
 //! `pop`/`pop_due` skip it lazily. The preemption subsystem relies on this
 //! to retract the `PrefillDone` completion of a batch it aborts mid-flight.
+//!
+//! Since the parallel-executor refactor the queue is **partitioned by
+//! owner shard**: [`EventQueue::with_partitions`] builds one min-heap per
+//! scheduler shard and [`EventQueue::push_owned`] tags each event with the
+//! shard whose state its handler touches. Sequence numbers stay *global*
+//! (one counter across every partition), and `pop`/`pop_due` always
+//! return the minimum over all partition heads under the same
+//! `(timestamp, push order)` key a single heap would use — so
+//! partitioning is observably pop-order-neutral, which is what lets the
+//! executor fan a partition's due events out to its worker thread without
+//! perturbing the sequential schedule (pinned by
+//! `partitioning_never_changes_pop_order` below).
+//!
+//! Cost trade-off, stated plainly: the merge loop still pops globally,
+//! so each pop scans the `n_shards` partition heads — O(shards) instead
+//! of a single heap's O(1) peek (shards are bounded by the decode fleet,
+//! single digits in every configuration we run). The partitions are the
+//! structure the executor's next phase needs — per-shard draining once
+//! planners move onto their worker threads — and today they buy the
+//! per-shard ownership invariant the fan-out routes by; a single heap
+//! with owner tags would serve the current merge loop identically.
 
 use crate::Micros;
 use std::cmp::Ordering;
@@ -55,12 +76,25 @@ impl EventId {
 }
 
 /// A scheduled event. `seq` is a push counter used only for deterministic
-/// FIFO tie-breaking at equal timestamps.
+/// FIFO tie-breaking at equal timestamps; `owner` is the scheduler shard
+/// whose state the handler touches (0 for shard-agnostic events), which
+/// names the heap partition the event queues in and the worker thread the
+/// parallel executor hands it to.
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
     pub at: Micros,
     pub kind: EventKind,
+    pub owner: usize,
     seq: u64,
+}
+
+impl Event {
+    /// Global push-order id — the deterministic tie-break at equal
+    /// timestamps, and the `event_id` component of the executor's
+    /// synchronization-point merge key.
+    pub(crate) fn seq_id(&self) -> u64 {
+        self.seq
+    }
 }
 
 impl PartialEq for Event {
@@ -85,26 +119,67 @@ impl Ord for Event {
     }
 }
 
-/// Min-ordered event queue with lazy cancellation.
-#[derive(Debug, Default)]
+/// Min-ordered event queue with lazy cancellation, partitioned into one
+/// heap per owner shard. Pop order is the global `(at, push order)`
+/// minimum across partitions — identical to a single heap, whatever the
+/// partition count.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+    parts: Vec<BinaryHeap<Event>>,
+    /// Global push counter shared by every partition: the FIFO tie-break
+    /// (and the executor's `event_id`) is a property of the whole queue,
+    /// not of any one shard's slice of it.
     seq: u64,
     /// Cancelled-but-not-yet-popped sequence numbers. Never iterated, so
     /// the hash order cannot leak into scheduling decisions.
     tombstones: HashSet<u64>,
 }
 
+impl Default for EventQueue {
+    fn default() -> EventQueue {
+        EventQueue::with_partitions(1)
+    }
+}
+
 impl EventQueue {
+    /// Single-partition queue (fixtures/tests; the serving loop uses one
+    /// partition per scheduler shard).
     pub fn new() -> EventQueue {
         EventQueue::default()
     }
 
-    /// Schedule `kind` to fire at `at`; the returned id can cancel it.
+    /// A queue with `n` owner-shard partitions (clamped to at least 1).
+    pub fn with_partitions(n: usize) -> EventQueue {
+        EventQueue {
+            parts: (0..n.max(1)).map(|_| BinaryHeap::new()).collect(),
+            seq: 0,
+            tombstones: HashSet::new(),
+        }
+    }
+
+    pub fn n_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Schedule `kind` to fire at `at` in the shard-agnostic partition;
+    /// the returned id can cancel it.
     pub fn push(&mut self, at: Micros, kind: EventKind) -> EventId {
+        self.push_owned(at, kind, 0)
+    }
+
+    /// Schedule `kind` to fire at `at`, tagged with (and queued in the
+    /// partition of) `owner` — the scheduler shard whose state the
+    /// handler touches.
+    pub fn push_owned(
+        &mut self,
+        at: Micros,
+        kind: EventKind,
+        owner: usize,
+    ) -> EventId {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Event { at, kind, seq });
+        let part = owner % self.parts.len();
+        self.parts[part].push(Event { at, kind, owner, seq });
         EventId(seq)
     }
 
@@ -121,41 +196,68 @@ impl EventQueue {
         self.tombstones.insert(id.0)
     }
 
-    /// Drop cancelled entries sitting at the top of the heap.
-    fn purge_cancelled_top(&mut self) {
-        while matches!(
-            self.heap.peek(),
-            Some(ev) if self.tombstones.contains(&ev.seq)
-        ) {
-            let ev = self.heap.pop().unwrap();
-            self.tombstones.remove(&ev.seq);
+    /// Drop cancelled entries sitting at the top of every partition heap,
+    /// then return the partition holding the globally earliest live event
+    /// under the `(at, seq)` key.
+    fn earliest_part(&mut self) -> Option<usize> {
+        let mut best: Option<(Micros, u64, usize)> = None;
+        for (pi, part) in self.parts.iter_mut().enumerate() {
+            while matches!(
+                part.peek(),
+                Some(ev) if self.tombstones.contains(&ev.seq)
+            ) {
+                let ev = part.pop().unwrap();
+                self.tombstones.remove(&ev.seq);
+            }
+            if let Some(ev) = part.peek() {
+                let key = (ev.at, ev.seq, pi);
+                match best {
+                    Some(b) if b <= key => {}
+                    _ => best = Some(key),
+                }
+            }
         }
+        best.map(|(_, _, pi)| pi)
     }
 
     /// Pop the earliest live event.
     pub fn pop(&mut self) -> Option<Event> {
-        self.purge_cancelled_top();
-        self.heap.pop()
+        let pi = self.earliest_part()?;
+        self.parts[pi].pop()
     }
 
     /// Pop the earliest live event only if it is due at or before `now`.
     pub fn pop_due(&mut self, now: Micros) -> Option<Event> {
-        self.purge_cancelled_top();
-        match self.heap.peek() {
-            Some(ev) if ev.at <= now => self.heap.pop(),
+        self.pop_due_if(now, |_| true)
+    }
+
+    /// Pop the earliest live event only if it is due at or before `now`
+    /// *and* satisfies `pred` — how the parallel executor collects a
+    /// maximal consecutive run of same-kind events (a synchronization
+    /// point) without ever reordering across an interleaved event of
+    /// another kind.
+    pub fn pop_due_if(
+        &mut self,
+        now: Micros,
+        pred: impl Fn(&Event) -> bool,
+    ) -> Option<Event> {
+        let pi = self.earliest_part()?;
+        match self.parts[pi].peek() {
+            Some(ev) if ev.at <= now && pred(ev) => self.parts[pi].pop(),
             _ => None,
         }
     }
 
     /// Timestamp of the earliest live scheduled event.
     pub fn peek_at(&mut self) -> Option<Micros> {
-        self.purge_cancelled_top();
-        self.heap.peek().map(|e| e.at)
+        let pi = self.earliest_part()?;
+        self.parts[pi].peek().map(|e| e.at)
     }
 
     /// Live (non-cancelled) scheduled events.
     pub fn len(&self) -> usize {
-        self.heap.len() - self.tombstones.len()
+        self.parts.iter().map(BinaryHeap::len).sum::<usize>()
+            - self.tombstones.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -275,5 +377,84 @@ mod tests {
         q.push(7, EventKind::Arrival);
         assert_eq!(q.len(), 1);
         assert_eq!(q.pop().unwrap().at, 7);
+    }
+
+    #[test]
+    fn partitioning_never_changes_pop_order() {
+        // The executor's load-bearing invariant: however the queue is
+        // partitioned, pops come out in the exact global (at, push-order)
+        // sequence a single heap would produce — including FIFO ties
+        // across partitions and cancellations.
+        let pushes: [(Micros, usize); 10] = [
+            (50, 2), (10, 0), (50, 1), (10, 3), (30, 2),
+            (10, 1), (30, 0), (70, 3), (10, 2), (30, 1),
+        ];
+        let run = |n_parts: usize| {
+            let mut q = EventQueue::with_partitions(n_parts);
+            let mut cancel_me = Vec::new();
+            for (i, &(at, owner)) in pushes.iter().enumerate() {
+                let id = q.push_owned(at, EventKind::Arrival, owner);
+                if i % 4 == 3 {
+                    cancel_me.push(id);
+                }
+            }
+            for id in cancel_me {
+                assert!(q.cancel(id));
+            }
+            std::iter::from_fn(|| q.pop().map(|e| (e.at, e.owner, e.seq)))
+                .collect::<Vec<_>>()
+        };
+        let single = run(1);
+        for n in [2, 4, 7] {
+            assert_eq!(run(n), single, "{n} partitions reordered pops");
+        }
+        // Sanity on the reference stream itself: non-decreasing at, and
+        // FIFO (ascending seq) within equal timestamps.
+        for w in single.windows(2) {
+            assert!(w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].2 < w[1].2));
+        }
+    }
+
+    #[test]
+    fn pop_due_if_stops_at_first_non_matching_event() {
+        // The sync-point collector pops a maximal *consecutive* run: it
+        // must stop at an interleaved event of another kind even when
+        // matching events are due behind it, so the executor can never
+        // reorder across it.
+        let mut q = EventQueue::with_partitions(2);
+        q.push_owned(5, EventKind::DecodeIterEnd { decode: 0 }, 0);
+        q.push_owned(5, EventKind::HandoffReady { decode: 1 }, 1);
+        q.push_owned(5, EventKind::DecodeIterEnd { decode: 1 }, 1);
+        let is_boundary =
+            |e: &Event| matches!(e.kind, EventKind::DecodeIterEnd { .. });
+        let first = q.pop_due_if(5, is_boundary).unwrap();
+        assert_eq!(first.kind, EventKind::DecodeIterEnd { decode: 0 });
+        assert!(
+            q.pop_due_if(5, is_boundary).is_none(),
+            "a due non-matching head must block the run"
+        );
+        // Not due yet blocks too.
+        assert!(q.pop_due_if(4, |_| true).is_none());
+        let head = q.pop_due(5).unwrap();
+        assert_eq!(head.kind, EventKind::HandoffReady { decode: 1 });
+        let tail = q.pop_due_if(5, is_boundary).unwrap();
+        assert_eq!(tail.kind, EventKind::DecodeIterEnd { decode: 1 });
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn owner_tags_ride_along_and_default_to_zero() {
+        let mut q = EventQueue::with_partitions(3);
+        q.push(10, EventKind::Arrival);
+        q.push_owned(20, EventKind::DecodeIterEnd { decode: 5 }, 2);
+        let a = q.pop().unwrap();
+        assert_eq!((a.owner, a.at), (0, 10));
+        let b = q.pop().unwrap();
+        assert_eq!((b.owner, b.at), (2, 20));
+        // Owners beyond the partition count wrap instead of panicking
+        // (partition index is a routing detail, the tag is preserved).
+        let mut q = EventQueue::with_partitions(2);
+        q.push_owned(1, EventKind::Arrival, 7);
+        assert_eq!(q.pop().unwrap().owner, 7);
     }
 }

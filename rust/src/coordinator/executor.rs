@@ -1,0 +1,408 @@
+//! Thread-per-shard parallel executor: deterministic fan-out of
+//! decode-iteration boundaries.
+//!
+//! The sharding refactor (PR 2) left the coordinator with no shared queue
+//! state between shards; this module removes the last global serialization
+//! point — the event loop itself — for the work that dominates event
+//! counts: decode-iteration boundary accounting. The design splits every
+//! boundary into three strictly separated stages:
+//!
+//! 1. **Capture** (merge loop): `RunCore::take_boundary_job` snapshots the
+//!    instance's active set and iteration end into a self-contained
+//!    [`BoundaryJob`] keyed by a [`SyncKey`].
+//! 2. **Compute** (worker thread): [`boundary_outcome`] — a *pure*
+//!    function of the job — produces the per-token gap samples, finished
+//!    completions, and surviving active set.
+//! 3. **Apply** (merge loop): outcomes are merged back **sorted by
+//!    [`SyncKey`]** and folded into the report/monitor/fleet in exactly
+//!    the order the sequential loop would have produced them.
+//!
+//! The determinism contract rests on two facts. First, the sequential
+//! scheduler runs the *same* capture → [`boundary_outcome`] → apply
+//! pipeline inline, so the two modes share every instruction of boundary
+//! accounting — there is no second implementation to drift. Second, the
+//! merge key orders outcomes by `(virtual_time, event_id)` where event
+//! ids come from the event queue's single global push counter, i.e. the
+//! key *is* the sequential pop order; worker interleaving, thread count,
+//! and OS scheduling can therefore never reach the schedule. For any seed
+//! and any `executor.threads`, the Summary JSON is byte-identical to the
+//! sequential run — pinned by the determinism matrix in
+//! `tests/integration.rs`. (Executor counters live on
+//! [`super::scheduler::RunReport`] only and are deliberately kept *out*
+//! of Summary JSON so that contract can hold exactly.)
+//!
+//! A synchronization point is a maximal consecutive run of due
+//! `DecodeIterEnd` events at one virtual instant (collected with
+//! [`super::events::EventQueue::pop_due_if`], which refuses to reorder
+//! across an interleaved event of another kind). Runs fan out to workers
+//! by owner shard (`shard % threads`, thread-per-shard when
+//! `executor.threads = 0`). Everything decision-making — prefill
+//! dispatch, preemption, admission, stealing — stays on the merge loop:
+//! those paths *choose between* shards, and running them speculatively
+//! would perturb planner state the sequential schedule never touched.
+//! Cross-shard traffic created while applying a sync point (steal moves,
+//! preemption requeues, checkpoint restores) is likewise applied
+//! merge-side, at the member's ordinal position in the sorted order.
+//!
+//! Worker lifecycle: workers are plain channel consumers; dropping the
+//! pool closes the job channels and joins every thread, so a shard whose
+//! event partition drains early just idles until shutdown. A panic
+//! inside a boundary computation is caught on the worker and delivered
+//! as an `Err` outcome that [`ExecutorPool::process`] re-raises on the
+//! merge thread — never a deadlock, even while sibling workers hold the
+//! outcome channel open.
+
+use super::fleet::DecodeSeqState;
+use crate::workload::request::Completion;
+use crate::workload::RequestClass;
+use crate::Micros;
+use std::sync::mpsc;
+use std::thread;
+
+/// Deterministic merge key of one boundary event: ordered by
+/// `(virtual_time, event_id)` — event ids are issued by one global
+/// counter, so this is exactly the sequential pop order. The owner shard
+/// rides along for worker routing and diagnostics (per shard, the triple
+/// `(virtual_time, shard, event_id)` sorts identically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SyncKey {
+    /// Virtual timestamp the boundary fires at.
+    pub at: Micros,
+    /// Global event-queue push id (the FIFO tie-break).
+    pub event: u64,
+    /// Scheduler shard owning the decode instance.
+    pub shard: usize,
+}
+
+/// One captured decode-iteration boundary, self-contained so it can cross
+/// a thread boundary: the instance's drained active set plus the
+/// iteration end time every member's token lands at.
+#[derive(Debug)]
+pub struct BoundaryJob {
+    pub key: SyncKey,
+    /// Decode instance the boundary belongs to.
+    pub di: usize,
+    /// End of the iteration (the boundary instant).
+    pub iter_end: Micros,
+    /// The instance's active set, moved out for the duration of the
+    /// computation.
+    pub active: Vec<DecodeSeqState>,
+    /// Test-only adversarial delay (µs) a worker sleeps before computing,
+    /// so the sync-point tests can force hostile interleavings. Always 0
+    /// on the serving path.
+    pub stall_us: u64,
+}
+
+/// One observed inter-token gap, in active-set order, carrying what the
+/// merge loop needs to classify it against the per-class TBT budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GapSample {
+    pub class: RequestClass,
+    /// Per-token budget override (0 = class default).
+    pub tbt_us: u64,
+    /// Observed inter-token gap, µs.
+    pub gap: Micros,
+}
+
+/// A sequence that finished at this boundary, with the KV footprint its
+/// reservation releases.
+#[derive(Debug, Clone)]
+pub struct FinishedSeq {
+    pub completion: Completion,
+    pub footprint: u64,
+}
+
+/// The pure result of one boundary: what [`boundary_outcome`] computes on
+/// a worker and the merge loop folds back in [`SyncKey`] order.
+#[derive(Debug)]
+pub struct BoundaryOutcome {
+    pub key: SyncKey,
+    pub di: usize,
+    /// Members that still have tokens to generate, in original order,
+    /// with their token counts and gap anchors advanced.
+    pub still_active: Vec<DecodeSeqState>,
+    /// One gap sample per member, in active-set order.
+    pub gaps: Vec<GapSample>,
+    /// Members that completed at this boundary, in active-set order.
+    pub done: Vec<FinishedSeq>,
+}
+
+/// The boundary computation itself — a pure function of the job, shared
+/// verbatim by the sequential path (called inline) and the worker threads
+/// (called behind a channel). Every member produced one token at
+/// `iter_end`: measure its inter-token gap from its last anchor, advance
+/// the anchor and the token count, and split finishers from survivors.
+pub fn boundary_outcome(job: BoundaryJob) -> BoundaryOutcome {
+    let mut still_active = Vec::with_capacity(job.active.len());
+    let mut gaps = Vec::with_capacity(job.active.len());
+    let mut done = Vec::new();
+    for mut s in job.active {
+        let gap = job.iter_end.saturating_sub(s.last_token_at);
+        s.last_token_at = job.iter_end;
+        gaps.push(GapSample { class: s.class, tbt_us: s.tbt_us, gap });
+        s.generated += 1;
+        if s.generated >= s.output_len {
+            done.push(FinishedSeq {
+                footprint: s.footprint(),
+                completion: Completion {
+                    id: s.id,
+                    class: s.class,
+                    input_len: s.input_len,
+                    output_len: s.output_len,
+                    arrival: s.arrival,
+                    first_token: s.first_token,
+                    finished: job.iter_end,
+                    padded_len: s.padded_len,
+                },
+            });
+        } else {
+            still_active.push(s);
+        }
+    }
+    BoundaryOutcome { key: job.key, di: job.di, still_active, gaps, done }
+}
+
+/// The worker pool: `threads` plain threads consuming [`BoundaryJob`]s
+/// from per-worker channels and answering on one shared outcome channel.
+/// [`ExecutorPool::process`] is the synchronization point — it blocks for
+/// every submitted job and hands the outcomes back in [`SyncKey`] order,
+/// whatever order the workers finished in.
+///
+/// Workers answer with `Result`: a panic inside [`boundary_outcome`] is
+/// caught and delivered as an `Err`, which `process` re-raises on the
+/// merge thread. Delivering the failure (rather than letting the worker
+/// die) matters with more than one worker — the survivors keep outcome
+/// senders alive, so a silently lost outcome would park `process` in
+/// `recv` forever instead of failing fast.
+#[derive(Debug)]
+pub struct ExecutorPool {
+    txs: Vec<mpsc::Sender<BoundaryJob>>,
+    rx: mpsc::Receiver<Result<BoundaryOutcome, &'static str>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ExecutorPool {
+    /// Spawn `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ExecutorPool {
+        let threads = threads.max(1);
+        let (out_tx, rx) = mpsc::channel();
+        let mut txs = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, job_rx) = mpsc::channel::<BoundaryJob>();
+            let out = out_tx.clone();
+            workers.push(thread::spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    if job.stall_us > 0 {
+                        thread::sleep(std::time::Duration::from_micros(
+                            job.stall_us,
+                        ));
+                    }
+                    let outcome = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| boundary_outcome(job)),
+                    )
+                    .map_err(|_| "boundary computation panicked on a worker");
+                    if out.send(outcome).is_err() {
+                        break;
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        // Workers hold the only outcome senders: if they all die, recv
+        // errors instead of blocking forever.
+        drop(out_tx);
+        ExecutorPool { txs, rx, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Worker a shard's boundaries run on (thread-per-shard, wrapping
+    /// when shards outnumber workers).
+    pub fn worker_of(&self, shard: usize) -> usize {
+        shard % self.txs.len()
+    }
+
+    /// Fan one synchronization point's jobs out to their owner-shard
+    /// workers, block for every outcome, and return them sorted by
+    /// [`SyncKey`] — the deterministic merge order.
+    pub fn process(&self, jobs: Vec<BoundaryJob>) -> Vec<BoundaryOutcome> {
+        let n = jobs.len();
+        for job in jobs {
+            let w = self.worker_of(job.key.shard);
+            self.txs[w].send(job).expect("executor worker hung up");
+        }
+        let mut outs: Vec<BoundaryOutcome> = (0..n)
+            .map(|_| {
+                self.rx
+                    .recv()
+                    .expect("executor worker died")
+                    .unwrap_or_else(|e| panic!("{e}"))
+            })
+            .collect();
+        outs.sort_by_key(|o| o.key);
+        outs
+    }
+}
+
+impl Drop for ExecutorPool {
+    /// Clean shutdown: close every job channel (a partition that drained
+    /// early has simply been idle on its channel) and join the threads.
+    fn drop(&mut self) {
+        self.txs.clear();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(
+        id: u64,
+        class: RequestClass,
+        generated: u32,
+        output_len: u32,
+        last_token_at: Micros,
+    ) -> DecodeSeqState {
+        DecodeSeqState {
+            id,
+            class,
+            arrival: 0,
+            input_len: 100,
+            padded_len: 128,
+            output_len,
+            generated,
+            first_token: 50,
+            ready_at: 0,
+            tbt_us: 7_000,
+            last_token_at,
+        }
+    }
+
+    fn key(event: u64, shard: usize) -> SyncKey {
+        SyncKey { at: 1_000, event, shard }
+    }
+
+    #[test]
+    fn boundary_outcome_splits_finishers_and_advances_anchors() {
+        let job = BoundaryJob {
+            key: key(3, 0),
+            di: 2,
+            iter_end: 1_000,
+            active: vec![
+                seq(10, RequestClass::Online, 5, 50, 970), // survives
+                seq(11, RequestClass::Offline, 9, 10, 940), // finishes
+            ],
+            stall_us: 0,
+        };
+        let o = boundary_outcome(job);
+        assert_eq!((o.key, o.di), (key(3, 0), 2));
+        // Gaps in active-set order, measured from each member's anchor.
+        assert_eq!(
+            o.gaps,
+            vec![
+                GapSample { class: RequestClass::Online, tbt_us: 7_000, gap: 30 },
+                GapSample { class: RequestClass::Offline, tbt_us: 7_000, gap: 60 },
+            ]
+        );
+        // Survivor: token counted, anchor re-set to the boundary.
+        assert_eq!(o.still_active.len(), 1);
+        let s = &o.still_active[0];
+        assert_eq!((s.id, s.generated, s.last_token_at), (10, 6, 1_000));
+        // Finisher: completion carries the original prompt/output split
+        // and its first-token time; footprint releases the reservation.
+        assert_eq!(o.done.len(), 1);
+        let f = &o.done[0];
+        assert_eq!(f.footprint, 110); // input 100 + output 10
+        assert_eq!(f.completion.id, 11);
+        assert_eq!(f.completion.finished, 1_000);
+        assert_eq!(f.completion.first_token, 50);
+        assert_eq!(f.completion.output_len, 10);
+    }
+
+    #[test]
+    fn empty_boundary_is_a_clean_no_op() {
+        let o = boundary_outcome(BoundaryJob {
+            key: key(0, 1),
+            di: 0,
+            iter_end: 5,
+            active: vec![],
+            stall_us: 0,
+        });
+        assert!(o.still_active.is_empty() && o.gaps.is_empty());
+        assert!(o.done.is_empty());
+    }
+
+    #[test]
+    fn outcomes_merge_in_event_order_despite_worker_delays() {
+        // The sync-point merge must be independent of worker
+        // interleaving: stall the workers so that jobs *finish* in
+        // reverse submission order, and check the merge still hands back
+        // ascending (virtual_time, event_id) order.
+        let pool = ExecutorPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        let jobs: Vec<BoundaryJob> = (0..6u64)
+            .map(|i| BoundaryJob {
+                key: key(i, i as usize % 3),
+                di: i as usize,
+                iter_end: 1_000,
+                active: vec![seq(i, RequestClass::Online, 1, 50, 990)],
+                stall_us: (6 - i) * 3_000, // earliest key stalls longest
+            })
+            .collect();
+        let outs = pool.process(jobs);
+        let order: Vec<u64> = outs.iter().map(|o| o.key.event).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+        // Same pool again with the stalls inverted — order unchanged.
+        let jobs: Vec<BoundaryJob> = (0..6u64)
+            .map(|i| BoundaryJob {
+                key: key(i, i as usize % 3),
+                di: i as usize,
+                iter_end: 1_000,
+                active: vec![],
+                stall_us: i * 3_000,
+            })
+            .collect();
+        let order: Vec<u64> =
+            pool.process(jobs).iter().map(|o| o.key.event).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn sync_key_orders_by_time_then_event_id() {
+        let a = SyncKey { at: 10, event: 5, shard: 9 };
+        let b = SyncKey { at: 10, event: 6, shard: 0 };
+        let c = SyncKey { at: 11, event: 0, shard: 0 };
+        assert!(a < b && b < c);
+        let mut v = vec![c, a, b];
+        v.sort();
+        assert_eq!(v, vec![a, b, c]);
+    }
+
+    #[test]
+    fn pool_shuts_down_cleanly_when_partitions_drain_unevenly() {
+        // Workers 1..3 never receive a job (their shards' partitions
+        // "drained early"); dropping the pool must close their channels
+        // and join them without hanging. The test passes by terminating.
+        let pool = ExecutorPool::new(4);
+        let jobs: Vec<BoundaryJob> = (0..3u64)
+            .map(|i| BoundaryJob {
+                key: key(i, 0), // all shard 0 → worker 0 only
+                di: 0,
+                iter_end: 10,
+                active: vec![],
+                stall_us: 0,
+            })
+            .collect();
+        assert_eq!(pool.worker_of(0), 0);
+        assert_eq!(pool.worker_of(5), 1);
+        let outs = pool.process(jobs);
+        assert_eq!(outs.len(), 3);
+        drop(pool);
+    }
+}

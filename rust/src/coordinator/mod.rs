@@ -31,6 +31,12 @@
 //! * [`monitor`] — the Global Monitor: per-shard sliding-window metrics
 //!   aggregated into the system view that feeds the batcher and
 //!   scheduler.
+//! * [`executor`] — the thread-per-shard parallel executor: same-instant
+//!   decode-iteration boundaries fan out to per-shard worker threads as
+//!   pure jobs and merge back in deterministic `(virtual_time,
+//!   event_id)` order; for any seed and any `executor.threads` the
+//!   Summary JSON is byte-identical to the sequential run (`threads =
+//!   1`, the default).
 //! * [`scheduler`] — the thin P/D orchestrator shared by BucketServe and
 //!   the disaggregated baseline: pops events, dispatches to the fleet,
 //!   plans batches through per-shard [`PrefillPlanner`] plug-ins.
@@ -91,6 +97,7 @@ pub mod bucket;
 pub mod batcher;
 pub mod balance;
 pub mod events;
+pub mod executor;
 pub mod fleet;
 pub mod monitor;
 pub mod preempt;
@@ -103,6 +110,7 @@ pub use bucket::{Bucket, BucketManager};
 pub use batcher::{DynamicBatcher, KvMemoryModel};
 pub use balance::{Router, ShardLoad};
 pub use events::{Event, EventId, EventKind, EventQueue};
+pub use executor::ExecutorPool;
 pub use fleet::{DecodeFleet, PrefillFleet};
 pub use monitor::{GlobalMonitor, MonitorView, ShardView};
 pub use preempt::{PreemptionEngine, RestoreInfo};

@@ -11,6 +11,13 @@
 //! engine-side quantities, tracked globally. All windows are driven by
 //! the run's clock (virtual or wall), so simulated and real runs share
 //! the code.
+//!
+//! Concurrency note: under the parallel executor
+//! ([`super::executor`]) every monitor mutation still happens on the
+//! merge loop — worker threads compute pure boundary outcomes and the
+//! merge loop folds their per-shard KV releases and decode exits in
+//! deterministic order. One writer, no locks, and the per-shard views
+//! stay exactly what a sequential run would have recorded.
 
 use crate::util::stats::{Online, RateWindow};
 use crate::Micros;

@@ -29,6 +29,7 @@ use super::balance;
 use super::batcher::{DynamicBatcher, FormedBatch, KvMemoryModel};
 use super::bucket::{BucketManager, QueuedReq};
 use super::events::{Event, EventId, EventKind, EventQueue};
+use super::executor::{self, BoundaryJob, BoundaryOutcome, ExecutorPool, SyncKey};
 use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
 use super::monitor::GlobalMonitor;
 use super::preempt::PreemptionEngine;
@@ -526,6 +527,19 @@ pub struct RunReport {
     pub tbt_violations_online: u64,
     /// Offline gaps exceeding their (lax) per-token TBT budget.
     pub tbt_violations_offline: u64,
+    /// Resolved executor worker count (1 = the sequential serving loop).
+    /// Executor counters live on the `RunReport` only — they are
+    /// deliberately kept *out* of Summary JSON so the determinism
+    /// contract (parallel output byte-identical to sequential) holds
+    /// exactly; the `shard_scaling` bench surfaces them per row.
+    pub executor_threads: usize,
+    /// Synchronization points the parallel executor processed (maximal
+    /// same-instant runs of decode-iteration boundaries fanned out to
+    /// workers). Deterministic: a function of the virtual-time schedule,
+    /// not of thread timing. 0 on the sequential path.
+    pub executor_sync_points: u64,
+    /// Boundary events that crossed a worker channel. 0 when sequential.
+    pub executor_parallel_events: u64,
     /// Set when the run ended abnormally (scheduler stall / livelock
     /// guard); carries the diagnostics the old panic printed. Completions
     /// gathered before the stall are still reported.
@@ -809,6 +823,19 @@ impl PdScheduler {
         let weight_bytes = engine.model().weight_bytes() as f64;
         let kv_per_token = engine.model().kv_bytes_per_token() as f64;
         let realtime = engine.realtime();
+        // Parallel executor: thread-per-shard fan-out of decode-iteration
+        // boundaries, virtual time only (a realtime engine's blocking
+        // calls serialize the loop anyway, and its wall-clock sleeps must
+        // stay on the merge thread). Whatever resolves here, the schedule
+        // is byte-identical to sequential — see `coordinator::executor`.
+        let n_workers = self.cfg.executor.resolve(n_shards);
+        if n_workers > 1 && realtime {
+            crate::log_warn!(
+                "executor.threads: realtime engines run sequentially; \
+                 parallel boundary execution is virtual-time only"
+            );
+        }
+        let parallel = n_workers > 1 && !realtime;
 
         let mut core = RunCore {
             shards: &mut self.shards,
@@ -818,15 +845,21 @@ impl PdScheduler {
             admission: &self.admission,
             admission_active,
             engine,
-            events: EventQueue::new(),
+            events: EventQueue::with_partitions(n_shards),
             prefill: PrefillFleet::new(n_prefill),
             decode: DecodeFleet::new(n_decode),
+            pool: if parallel {
+                Some(ExecutorPool::new(n_workers))
+            } else {
+                None
+            },
             report: RunReport {
                 n_prefill,
                 n_decode,
                 n_shards,
                 preempt_enabled: self.cfg.preempt.enabled,
                 admission_enabled: admission_active,
+                executor_threads: if parallel { n_workers } else { 1 },
                 ..Default::default()
             },
             clock: 0,
@@ -858,7 +891,7 @@ impl PdScheduler {
                 break;
             };
             core.advance_to(ev.at);
-            core.handle(ev, trace);
+            core.handle_event(ev, trace);
             // Drain same-instant events and run the preemption check; a
             // trigger schedules its own same-instant events (the
             // `PreemptPrefill` abort, a zero-latency `RestoreReady`), so
@@ -868,7 +901,7 @@ impl PdScheduler {
             // `false` — one pass, exactly the pre-preemption behavior.
             loop {
                 while let Some(due) = core.events.pop_due(core.clock) {
-                    core.handle(due, trace);
+                    core.handle_event(due, trace);
                 }
                 core.admit_handoffs();
                 if !core.check_preemption() {
@@ -889,7 +922,11 @@ impl PdScheduler {
             core.report.makespan_us = core.report.makespan_us.max(core.clock);
         }
 
-        let mut report = core.report;
+        // Take the report out and drop the core explicitly: dropping the
+        // core joins the executor workers (clean shutdown, even when a
+        // shard's event partition drained early) before final assembly.
+        let mut report = std::mem::take(&mut core.report);
+        drop(core);
         for shard in self.shards.iter() {
             report.bucket_overhead_ns += shard.planner.overhead_ns();
             report.max_buckets =
@@ -935,6 +972,11 @@ struct RunCore<'a> {
     events: EventQueue,
     prefill: PrefillFleet,
     decode: DecodeFleet,
+    /// The thread-per-shard worker pool, present only when
+    /// `executor.threads` resolves above one on a virtual-time run.
+    /// `None` = the sequential path, which runs the identical
+    /// capture → [`executor::boundary_outcome`] → apply pipeline inline.
+    pool: Option<ExecutorPool>,
     report: RunReport,
     clock: Micros,
     next_arrival: usize,
@@ -978,20 +1020,38 @@ impl<'a> RunCore<'a> {
         }
     }
 
+    /// Event dispatch seam between the sequential and parallel paths:
+    /// with a worker pool, a due decode-iteration boundary opens a
+    /// synchronization point ([`RunCore::boundary_group`]); every other
+    /// event — and the whole sequential mode — goes through
+    /// [`RunCore::handle`] unchanged.
+    fn handle_event(&mut self, ev: Event, trace: &Trace) {
+        if self.pool.is_some()
+            && matches!(ev.kind, EventKind::DecodeIterEnd { .. })
+        {
+            self.boundary_group(ev);
+        } else {
+            self.handle(ev, trace);
+        }
+    }
+
     fn handle(&mut self, ev: Event, trace: &Trace) {
         match ev.kind {
             EventKind::Arrival => self.on_arrival(trace),
             EventKind::PrefillDone { instance } => self.on_prefill_done(instance),
             EventKind::DecodeIterEnd { decode } => {
-                self.on_decode_iter_end(decode);
-                // Iteration boundaries are also the TBT-eviction cadence:
-                // the only instant an instance's KV is unpinned. No-op
-                // unless `admission.enabled` + `admission.evict`.
-                self.tbt_evict_pass(decode);
-                // Decode-iteration boundaries are the work-stealing
-                // cadence: freed KV is when an idle shard can absorb a
-                // loaded shard's backlog. No-op unless sharded + enabled.
-                self.rebalance_shards();
+                // Sequential boundary: the same pure computation the
+                // executor's workers run, called inline — one pipeline,
+                // so parallel ≡ sequential by construction.
+                let key = SyncKey {
+                    at: ev.at,
+                    event: ev.seq_id(),
+                    shard: self.shards.owner_of(decode),
+                };
+                let outcome = self
+                    .take_boundary_job(decode, key)
+                    .map(executor::boundary_outcome);
+                self.finish_boundary(decode, outcome);
             }
             EventKind::HandoffReady { decode } => {
                 // Pure wake-up: admission happens in admit_handoffs.
@@ -1126,52 +1186,125 @@ impl<'a> RunCore<'a> {
         self.monitor.on_decode_enter(p.formed.reqs.len());
     }
 
-    /// Decode iteration boundary: count the generated token, complete
-    /// finished sequences, release their KV reservations.
-    fn on_decode_iter_end(&mut self, di: usize) {
-        let shard = self.shards.owner_of(di);
+    /// Capture stage of a decode-iteration boundary: snapshot instance
+    /// `di`'s live boundary (iteration end + drained active set) into a
+    /// self-contained [`BoundaryJob`]. `None` for a stale event (the
+    /// instance is not at a due boundary), which still gets its
+    /// evict/rebalance side passes at the call site — exactly the old
+    /// early-return semantics.
+    fn take_boundary_job(
+        &mut self,
+        di: usize,
+        key: SyncKey,
+    ) -> Option<BoundaryJob> {
         let d = self.decode.get_mut(di);
         let ended = matches!(d.iter_end, Some(t) if t <= self.clock);
         if !ended {
-            return;
+            return None;
         }
         let iter_end = d.iter_end.take().unwrap();
-        let mut still_active = Vec::with_capacity(d.active.len());
-        for mut s in d.active.drain(..) {
-            // Every member produced one token at this boundary: record
-            // its inter-token gap against the per-class TBT budget (the
-            // admission layer's target metric).
-            let gap = iter_end.saturating_sub(s.last_token_at);
-            s.last_token_at = iter_end;
+        let active = std::mem::take(&mut d.active);
+        Some(BoundaryJob { key, di, iter_end, active, stall_us: 0 })
+    }
+
+    /// Apply stage of a decode-iteration boundary: fold one
+    /// [`BoundaryOutcome`] — wherever it was computed — into the report,
+    /// monitor, engine, and fleet, in the exact mutation order the
+    /// pre-executor handler used (gap records in active-set order, then
+    /// completions in active-set order).
+    fn apply_boundary(&mut self, o: BoundaryOutcome) {
+        let shard = self.shards.owner_of(o.di);
+        for g in &o.gaps {
             record_tbt_gap(
                 &mut self.report,
                 self.admission,
-                s.class,
-                s.tbt_us,
-                gap,
+                g.class,
+                g.tbt_us,
+                g.gap,
             );
-            s.generated += 1;
-            if s.generated >= s.output_len {
-                let footprint = s.footprint();
-                d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
-                self.monitor.kv_release(shard, footprint);
-                self.monitor.on_decode_exit(1);
-                self.engine.release(s.id);
-                self.report.completions.push(Completion {
-                    id: s.id,
-                    class: s.class,
-                    input_len: s.input_len,
-                    output_len: s.output_len,
-                    arrival: s.arrival,
-                    first_token: s.first_token,
-                    finished: iter_end,
-                    padded_len: s.padded_len,
-                });
-            } else {
-                still_active.push(s);
+        }
+        self.decode.get_mut(o.di).active = o.still_active;
+        for f in o.done {
+            let d = self.decode.get_mut(o.di);
+            d.reserved_tokens = d.reserved_tokens.saturating_sub(f.footprint);
+            self.monitor.kv_release(shard, f.footprint);
+            self.monitor.on_decode_exit(1);
+            self.engine.release(f.completion.id);
+            self.report.completions.push(f.completion);
+        }
+    }
+
+    /// Shared tail of one boundary member: apply the outcome (when the
+    /// boundary was live), then the member's side passes. The single
+    /// definition both the sequential handler and the parallel merge
+    /// call, so the per-member sequence cannot drift between modes.
+    fn finish_boundary(&mut self, di: usize, outcome: Option<BoundaryOutcome>) {
+        if let Some(o) = outcome {
+            debug_assert_eq!(o.di, di, "outcome applied to the wrong instance");
+            self.apply_boundary(o);
+        }
+        // Iteration boundaries are also the TBT-eviction cadence: the
+        // only instant an instance's KV is unpinned. No-op unless
+        // `admission.enabled` + `admission.evict`.
+        self.tbt_evict_pass(di);
+        // Decode-iteration boundaries are the work-stealing cadence:
+        // freed KV is when an idle shard can absorb a loaded shard's
+        // backlog. No-op unless sharded + enabled.
+        self.rebalance_shards();
+    }
+
+    /// One synchronization point of the parallel executor: the maximal
+    /// consecutive run of decode-iteration boundaries due at this
+    /// instant, fanned out to the per-shard workers and merged back in
+    /// [`SyncKey`] order — which *is* the sequential pop order (event
+    /// ids are global), so the schedule cannot depend on worker
+    /// interleaving. Each member's TBT-evict and work-stealing side
+    /// passes run at its ordinal position in that order, exactly where
+    /// the sequential loop runs them. Members' boundary computations are
+    /// mutually independent by construction: a boundary job reads only
+    /// its own instance's drained active set, and the side passes touch
+    /// planner/queue state, never another instance's actives.
+    fn boundary_group(&mut self, head: Event) {
+        let mut members = vec![head];
+        while let Some(ev) = self.events.pop_due_if(self.clock, |e| {
+            matches!(e.kind, EventKind::DecodeIterEnd { .. })
+        }) {
+            members.push(ev);
+        }
+        let mut jobs = Vec::with_capacity(members.len());
+        let mut plan = Vec::with_capacity(members.len());
+        for ev in members {
+            let EventKind::DecodeIterEnd { decode: di } = ev.kind else {
+                continue;
+            };
+            let key = SyncKey {
+                at: ev.at,
+                event: ev.seq_id(),
+                shard: self.shards.owner_of(di),
+            };
+            let job = self.take_boundary_job(di, key);
+            plan.push((di, job.is_some()));
+            if let Some(j) = job {
+                jobs.push(j);
             }
         }
-        d.active = still_active;
+        let n_jobs = jobs.len();
+        let outcomes = self
+            .pool
+            .as_ref()
+            .expect("boundary_group without a worker pool")
+            .process(jobs);
+        self.report.executor_sync_points += 1;
+        self.report.executor_parallel_events += n_jobs as u64;
+        let mut next = outcomes.into_iter();
+        for (di, has_job) in plan {
+            let outcome = if has_job {
+                Some(next.next().expect("executor outcome lost"))
+            } else {
+                None
+            };
+            self.finish_boundary(di, outcome);
+        }
     }
 
     /// Continuous-batching admission: landed hand-offs join instances at
@@ -1302,9 +1435,12 @@ impl<'a> RunCore<'a> {
         if !acted {
             return false;
         }
-        if let Some((pi, _, _)) = abort {
-            self.events
-                .push(self.clock, EventKind::PreemptPrefill { instance: pi });
+        if let Some((pi, adi, _)) = abort {
+            self.events.push_owned(
+                self.clock,
+                EventKind::PreemptPrefill { instance: pi },
+                self.shards.owner_of(adi),
+            );
         }
         for id in victims {
             self.evict_decode_seq(ti, id, false);
@@ -1422,7 +1558,7 @@ impl<'a> RunCore<'a> {
         }
         let due = self.clock + ckpt;
         self.restore_buf.push((due, di, entry));
-        self.events.push(due, EventKind::RestoreReady { decode: di });
+        self.events.push_owned(due, EventKind::RestoreReady { decode: di }, si);
     }
 
     /// The admission layer's trigger (b), run at `di`'s iteration
@@ -1545,8 +1681,14 @@ impl<'a> RunCore<'a> {
             let ctx = active_ctx(&d.active) + active_ctx(&d.pending) + ctx_new;
             let projected = self.engine.projected_decode_us(n, ctx);
             let members = d.active.iter().chain(d.pending.iter());
-            if !self.admission.deadline_at_risk(members, projected, self.clock)
-            {
+            // Boundary-to-boundary accounting: the batch joins at an
+            // iteration boundary, where every resident's gap clock
+            // re-anchors — so the gap it induces is the projected
+            // iteration itself, not `projected` plus whatever already
+            // elapsed since a resident's last token (the old
+            // mid-iteration predicate double-charged that and deferred
+            // spuriously).
+            if !self.admission.iteration_at_risk(members, projected) {
                 return Some(di);
             }
         }
@@ -1704,8 +1846,11 @@ impl<'a> RunCore<'a> {
             } else {
                 self.clock + duration
             };
-            let done_event =
-                self.events.push(done_at, EventKind::PrefillDone { instance: pi });
+            let done_event = self.events.push_owned(
+                done_at,
+                EventKind::PrefillDone { instance: pi },
+                si,
+            );
             self.prefill.dispatch(
                 pi,
                 InFlightPrefill {
@@ -1758,7 +1903,11 @@ impl<'a> RunCore<'a> {
             let kv_bytes = batch.total_ctx() as f64 * self.kv_per_token;
             let eff = kv_bytes / (kv_bytes + self.weight_bytes);
             self.report.decode_useful_us += duration as f64 * eff;
-            self.events.push(end, EventKind::DecodeIterEnd { decode: di });
+            self.events.push_owned(
+                end,
+                EventKind::DecodeIterEnd { decode: di },
+                self.shards.owner_of(di),
+            );
         }
     }
 
@@ -1781,8 +1930,11 @@ impl<'a> RunCore<'a> {
                 .max(clock);
             if d.wake_at != Some(earliest) {
                 d.wake_at = Some(earliest);
-                self.events
-                    .push(earliest, EventKind::HandoffReady { decode: di });
+                self.events.push_owned(
+                    earliest,
+                    EventKind::HandoffReady { decode: di },
+                    self.shards.owner_of(di),
+                );
             }
         }
     }

@@ -18,8 +18,14 @@
 //! With `sharding.shards = 1` (the default) a single shard owns the whole
 //! decode fleet and every path reduces to the seed's global behavior
 //! exactly; with one shard per decode instance the scheduler has no
-//! global scans left on the dispatch path, which is what makes a
-//! one-thread-per-shard executor a mechanical follow-up.
+//! global scans left on the dispatch path. That is the boundary the
+//! parallel executor ([`super::executor`]) runs on: each shard's
+//! decode-iteration accounting executes on its own worker thread
+//! (`executor.threads`, thread-per-shard at `0`), with the event queue
+//! partitioned by owner shard and cross-shard effects — steals,
+//! preemption requeues, checkpoint restores — applied by the merge loop
+//! in deterministic order, so parallel runs stay byte-identical to
+//! sequential ones.
 //!
 //! Placement and victim-selection policy live in [`super::balance`]; the
 //! serving loop drives shards from [`super::scheduler`]. Two later

@@ -236,6 +236,8 @@ Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
                   --admission.enabled on|off --admission.defer on|off
                   --admission.evict on|off --admission.slack_margin 0.1
                   --admission.offline_tbt_factor 8 --admission.max_evictions 2
+                  --executor.threads 1|N|0 (0 = one worker per shard;
+                      parallel output is byte-identical to sequential)
 (full knob-by-knob table: docs/ARCHITECTURE.md)"
     );
 }

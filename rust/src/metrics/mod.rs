@@ -29,6 +29,14 @@
 //! * `error` — only on abnormal termination; its presence means the row
 //!   must not be read as a clean result.
 //!
+//! The parallel executor's counters (`executor_threads`,
+//! `executor_sync_points`, `executor_parallel_events`) are deliberately
+//! **never** serialized here: the executor's contract is that a
+//! `threads = N` run's Summary JSON is byte-identical to the sequential
+//! run's for the same seed, which an executor block would break by
+//! construction. They live on `RunReport` only; the `shard_scaling`
+//! bench surfaces them per row.
+//!
 //! Adding a new always-on column is a breaking change to every pinned
 //! baseline; gate it or extend the integration test deliberately.
 

@@ -6,7 +6,7 @@ use bucketserve::config::{Placement, Policy, SystemConfig};
 use bucketserve::coordinator::RunReport;
 use bucketserve::metrics::Summary;
 use bucketserve::util::prop;
-use bucketserve::workload::{Dataset, RequestClass, Trace};
+use bucketserve::workload::{Dataset, Request, RequestClass, Trace};
 
 fn run(system: System, cfg: &SystemConfig, trace: &Trace) -> RunReport {
     system.run_sim(cfg, trace)
@@ -178,6 +178,10 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 cfg.admission.slack_margin = 0.99;
                 cfg.admission.offline_tbt_factor = 1.0;
                 cfg.admission.max_evictions = 64;
+                // And the executor: with one shard, any thread count
+                // resolves to the sequential path, so `threads = 1`
+                // stays byte-identical to the pre-executor scheduler.
+                cfg.executor.threads = 8;
                 assert_eq!(
                     summary(system, &cfg),
                     baseline,
@@ -189,6 +193,210 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
             }
         }
     }
+}
+
+#[test]
+fn executor_determinism_matrix_across_threads_and_features() {
+    // The parallel executor's acceptance criterion, asserted at the
+    // strongest observable level: for every seed and feature combination,
+    // a run with `executor.threads = N` (N > 1, including thread-per-
+    // shard) produces Summary JSON byte-identical to the sequential
+    // `threads = 1` run. Only `bucket_overhead_ns` — the one wall-clock
+    // field — is normalized. The matrix crosses the subsystems whose
+    // scheduling the executor must not perturb: priority, preemption,
+    // and TBT admission, over a sharded fleet with stealing on.
+    let features: [(bool, bool, bool); 5] = [
+        (false, false, false),
+        (true, false, false),
+        (true, true, false),
+        (true, false, true),
+        (true, true, true),
+    ];
+    for seed in [33u64, 77] {
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 30, 10.0, Dataset::LongBench, 15, 4096, seed,
+        );
+        for &(priority, preempt, admission) in &features {
+            let mut base = SystemConfig::default();
+            base.fleet.n_prefill = 2;
+            base.fleet.n_decode = 4;
+            base.sharding.shards = 0; // one shard per decode instance
+            base.sharding.placement = Placement::Hash;
+            base.sharding.steal = true;
+            base.priority.enabled = priority;
+            base.preempt.enabled = preempt;
+            base.admission.enabled = admission;
+            // Tight budgets so the armed subsystems actually fire inside
+            // the matrix (aborts, evictions, deferrals), not just idle.
+            base.slo.ttft_us = 2_000_000;
+            base.slo.tbt_us = 40_000;
+            base.preempt.urgency_threshold = 0.5;
+            let summary = |threads: u32| {
+                let mut cfg = base.clone();
+                cfg.executor.threads = threads;
+                let mut r = System::BucketServe.run_sim(&cfg, &trace);
+                let resolved = r.executor_threads;
+                r.bucket_overhead_ns = 0; // wall clock: the one normalized field
+                let json = Summary::from_report("BucketServe", &r, &cfg.slo)
+                    .to_json()
+                    .to_string();
+                (resolved, json)
+            };
+            let (t1, sequential) = summary(1);
+            assert_eq!(t1, 1);
+            for threads in [2u32, 0] {
+                let (tn, parallel) = summary(threads);
+                assert!(tn > 1, "matrix config must actually go parallel");
+                assert_eq!(
+                    parallel, sequential,
+                    "threads={threads} diverged from sequential \
+                     (priority={priority} preempt={preempt} \
+                     admission={admission} seed={seed})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_executor_determinism_under_cross_shard_stress() {
+    // Satellite stress test: randomized traces exercising steals, prefill
+    // aborts, and checkpoint-restores under the parallel executor. Pins
+    // (a) request and token conservation, and (b) that stamped
+    // `QueuedReq::tbt_us` budgets and TTFT deadlines survive cross-shard
+    // transfer intact — asserted as exact equality of the parallel run's
+    // completion records and per-class gap/violation books against the
+    // sequential run's.
+    prop::check("parallel executor ≡ sequential", 15, |g| {
+        let mut cfg = SystemConfig::default();
+        cfg.fleet.n_prefill = g.usize(1, 3) as u32;
+        cfg.fleet.n_decode = g.usize(2, 4) as u32;
+        cfg.sharding.shards = 0;
+        cfg.sharding.placement = *g.pick(&[
+            Placement::LeastLoaded,
+            Placement::JoinShortestKv,
+            Placement::Hash,
+        ]);
+        cfg.sharding.steal = true;
+        cfg.priority.enabled = true;
+        cfg.preempt.enabled = g.bool();
+        cfg.preempt.urgency_threshold = g.f64_in(0.05, 1.0);
+        cfg.admission.enabled = g.bool();
+        cfg.admission.slack_margin = g.f64_in(0.0, 0.5);
+        cfg.slo.ttft_us = g.u64(1_000_000, 20_000_000);
+        cfg.slo.tbt_us = g.u64(25_000, 120_000);
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca,
+            g.usize(10, 40),
+            g.f64_in(2.0, 30.0),
+            Dataset::LongBench,
+            g.usize(5, 20),
+            4096,
+            g.u64(0, 1 << 30),
+        )
+        .stamp_tbt(g.u64(0, 60_000), g.u64(0, 400_000));
+        let total = trace.len();
+        let run = |threads: u32| {
+            let mut c = cfg.clone();
+            c.executor.threads = threads;
+            System::BucketServe.run_sim(&c, &trace)
+        };
+        let seq_r = run(1);
+        let par = run(if g.bool() { 2 } else { 0 });
+        assert!(par.executor_threads > 1, "stress run must be parallel");
+
+        // Conservation on the parallel run in its own right.
+        assert_eq!(par.completions.len(), total);
+        assert!(par.error.is_none(), "{:?}", par.error);
+        let mut ids: Vec<_> = par.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "exactly-once completion");
+        let in_tokens: u64 =
+            trace.requests.iter().map(|q| q.total_len() as u64).sum();
+        let out_tokens: u64 = par
+            .completions
+            .iter()
+            .map(|c| (c.input_len + c.output_len) as u64)
+            .sum();
+        assert_eq!(in_tokens, out_tokens, "token books");
+
+        // Exact equivalence with the sequential schedule: every
+        // completion record (ids, classes, prompt/output splits, TTFT
+        // and finish timestamps) and the full TBT accounting.
+        let key = |r: &RunReport| {
+            let mut v: Vec<_> = r
+                .completions
+                .iter()
+                .map(|c| {
+                    (
+                        c.id,
+                        c.class,
+                        c.input_len,
+                        c.output_len,
+                        c.arrival,
+                        c.first_token,
+                        c.finished,
+                        c.padded_len,
+                    )
+                })
+                .collect();
+            v.sort_by_key(|t| t.0);
+            v
+        };
+        assert_eq!(key(&par), key(&seq_r), "completion records diverged");
+        assert_eq!(par.tbt_gaps_online_us, seq_r.tbt_gaps_online_us);
+        assert_eq!(par.tbt_gaps_offline_us, seq_r.tbt_gaps_offline_us);
+        assert_eq!(par.tbt_violations_online, seq_r.tbt_violations_online);
+        assert_eq!(par.tbt_violations_offline, seq_r.tbt_violations_offline);
+        assert_eq!(par.steals, seq_r.steals);
+        assert_eq!(par.prefill_aborts, seq_r.prefill_aborts);
+        assert_eq!(par.decode_evictions, seq_r.decode_evictions);
+        assert_eq!(par.tbt_evictions, seq_r.tbt_evictions);
+        assert_eq!(par.admission_deferrals, seq_r.admission_deferrals);
+        assert_eq!(par.makespan_us, seq_r.makespan_us);
+        assert_eq!(par.decode_iters, seq_r.decode_iters);
+        assert_eq!(par.prefill_batches, seq_r.prefill_batches);
+    });
+}
+
+#[test]
+fn deferral_uses_boundary_to_boundary_accounting() {
+    // ROADMAP follow-up regression: the deferral gate used to evaluate a
+    // mid-iteration dispatch against `last_token + budget − now`,
+    // charging time already elapsed since a resident's last boundary
+    // against the incoming batch's projected iteration — time the gap
+    // clock re-anchors away at the boundary the batch actually joins.
+    // Under a 30 ms budget (27 ms effective) and a ~24 ms two-sequence
+    // iteration, that old accounting deferred any dispatch landing more
+    // than ~3 ms after a boundary; boundary-to-boundary accounting
+    // admits it, at equal (here: perfect) attainment. Request 1 arrives
+    // while request 0 is mid-decode, so its dispatch is exactly such a
+    // mid-iteration decision.
+    let mut cfg = SystemConfig::default();
+    cfg.fleet.n_prefill = 1;
+    cfg.fleet.n_decode = 1;
+    cfg.slo.tbt_us = 30_000;
+    cfg.admission.enabled = true;
+    let trace = Trace {
+        requests: vec![
+            Request::new(0, RequestClass::Online, 200, 80, 0),
+            Request::new(1, RequestClass::Online, 200, 30, 1_200_000),
+        ],
+    };
+    let r = System::BucketServe.run_sim(&cfg, &trace);
+    assert_eq!(r.completions.len(), 2);
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(
+        r.admission_deferrals, 0,
+        "a projected iteration inside every resident's budget must not \
+         defer, wherever in the boundary cycle dispatch lands"
+    );
+    assert_eq!(
+        r.tbt_violations_online, 0,
+        "equal attainment: admitting the batch costs nothing"
+    );
+    assert_eq!(r.tbt_evictions, 0);
 }
 
 #[test]
