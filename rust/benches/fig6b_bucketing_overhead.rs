@@ -6,6 +6,7 @@
 //! length ranges) and measure wall-clock assign+adjust cost per request.
 
 use bucketserve::coordinator::bucket::{BucketManager, QueuedReq};
+use bucketserve::coordinator::prefix::PrefixStamp;
 use bucketserve::util::bench::Table;
 use bucketserve::util::rng::Pcg;
 use bucketserve::workload::RequestClass;
@@ -31,6 +32,7 @@ fn drive(k_target: u32, n_requests: usize, linear: bool) -> (usize, f64) {
             arrival: i as u64,
             class: RequestClass::Offline,
             tbt_us: 0,
+            prefix: PrefixStamp::default(),
         });
         if i % 16 == 15 {
             mgr.adjust(n_max);

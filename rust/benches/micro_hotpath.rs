@@ -7,6 +7,7 @@
 use bucketserve::config::{Policy, SystemConfig};
 use bucketserve::coordinator::batcher::{DynamicBatcher, KvMemoryModel};
 use bucketserve::coordinator::bucket::{BucketManager, QueuedReq};
+use bucketserve::coordinator::prefix::PrefixStamp;
 use bucketserve::cluster::gpu::CostModel;
 use bucketserve::coordinator::PriorityScorer;
 use bucketserve::util::bench::time_it;
@@ -25,6 +26,7 @@ fn filled_manager(n: usize, buckets: bool) -> BucketManager {
             arrival: i as u64,
             class: RequestClass::Online,
             tbt_us: 0,
+            prefix: PrefixStamp::default(),
         });
     }
     if buckets {
@@ -56,6 +58,7 @@ fn main() {
                 arrival: id,
                 class: RequestClass::Online,
                 tbt_us: 0,
+                prefix: PrefixStamp::default(),
             });
             // Bound queue growth.
             if mgr.total() > 4096 {
@@ -144,6 +147,7 @@ fn main() {
                     RequestClass::Offline
                 },
                 tbt_us: 0,
+                prefix: PrefixStamp::default(),
             });
         }
         time_it("form_batch priority (1024 queued, cached key)", || {
@@ -183,6 +187,7 @@ fn main() {
                 ready_at: 0,
                 tbt_us: 0,
                 last_token_at: 0,
+                prefix: PrefixStamp::default(),
             })
             .collect();
         time_it("preempt: pick_decode_victims (64 active)", || {

@@ -1,0 +1,113 @@
+//! Prefix cache — hit rate and throughput vs placement policy on a
+//! multi-turn chat workload.
+//!
+//! The sweep drives [`Trace::multi_turn`] (sessions with shared system
+//! prompts and growing conversation prefixes) through a sharded fleet
+//! and crosses two axes:
+//!
+//! * **placement** — `hash` (lineage-blind), `least_loaded`
+//!   (join-shortest-queue, also lineage-blind), and `prefix_affinity`
+//!   (route to the instance holding the longest resident prefix match).
+//!   Affinity is the tentpole claim: keeping a session's turns on the
+//!   instance that already holds their KV converts shared context into
+//!   cache hits instead of recomputed prefill.
+//! * **cache size** — `cache_frac` sweeps the per-instance budget share
+//!   the cache may occupy, which moves the achievable hit rate: a small
+//!   cache churns under LRU eviction, a large one keeps whole sessions
+//!   resident.
+//!
+//! A `cache off` row per placement anchors the baseline (its Summary
+//! JSON carries no prefix block at all, per the byte-identity contract).
+//! Each row also emits its Summary JSON on stdout for trajectory
+//! tooling.
+//!
+//! Expected shape: with the cache armed, `prefix_affinity` beats both
+//! lineage-blind placements on hit rate *and* throughput (hits shrink
+//! the priced prefill suffix), and hit rate rises with `cache_frac`.
+
+use bucketserve::baselines::System;
+use bucketserve::config::{Placement, SystemConfig};
+use bucketserve::metrics::Summary;
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::workload::{Dataset, Trace};
+
+fn main() {
+    println!("prefix_cache — hit rate x placement on multi-turn sessions\n");
+    let mut base = SystemConfig::default();
+    base.fleet.n_prefill = 4;
+    base.fleet.n_decode = 4;
+    base.sharding.shards = 0; // one scheduler shard per decode instance
+    base.slo.ttft_us = 10_000_000;
+    let trace = Trace::multi_turn(
+        Dataset::Alpaca,
+        24,  // concurrent sessions
+        6,   // turns each
+        24.0,
+        base.model.max_seq,
+        base.seed,
+    );
+    let mut t = Table::new(&[
+        "placement", "cache", "tok/s", "hit rate", "hit tokens",
+        "evictions", "mean TTFT ms", "makespan s",
+    ]);
+    let placements = [
+        ("hash", Placement::Hash),
+        ("least_loaded", Placement::LeastLoaded),
+        ("prefix_affinity", Placement::PrefixAffinity),
+    ];
+    // (label, enabled, cache_frac): the off rows anchor the baseline;
+    // the frac axis moves the hit rate via LRU pressure.
+    let cache_axis =
+        [("off", false, 0.0), ("frac=0.1", true, 0.1), ("frac=0.5", true, 0.5)];
+    let mut best: Vec<(String, f64, f64)> = Vec::new();
+    for (pname, placement) in placements {
+        for (clabel, enabled, frac) in cache_axis {
+            // Affinity routing needs a resident cache to consult; the
+            // off-row for it is identical to join-shortest-KV fallback
+            // but still worth a row to pin that fallback's cost.
+            let mut cfg = base.clone();
+            cfg.sharding.placement = placement;
+            cfg.prefix.enabled = enabled;
+            if enabled {
+                cfg.prefix.cache_frac = frac;
+            }
+            let r = System::BucketServe.run_sim(&cfg, &trace);
+            let s = Summary::from_report(
+                &format!("BucketServe/{pname}/{clabel}"),
+                &r,
+                &cfg.slo,
+            );
+            println!("{}", s.to_json());
+            t.row(vec![
+                pname.to_string(),
+                clabel.to_string(),
+                f1(r.throughput_tps()),
+                if enabled { f2(s.prefix_hit_rate()) } else { "-".into() },
+                if enabled {
+                    r.prefix_hit_tokens.to_string()
+                } else {
+                    "-".into()
+                },
+                if enabled { r.prefix_evictions.to_string() } else { "-".into() },
+                f1(r.mean_ttft_us() / 1e3),
+                f2(r.makespan_us as f64 / 1e6),
+            ]);
+            if enabled && (frac - 0.5).abs() < 1e-9 {
+                best.push((
+                    pname.to_string(),
+                    r.throughput_tps(),
+                    s.prefix_hit_rate(),
+                ));
+            }
+        }
+    }
+    t.print("prefix cache: 24 sessions x 6 turns, 4 decode instances");
+    println!(
+        "\nexpected shape: prefix_affinity > {{hash, least_loaded}} on both \
+         hit rate and tok/s at equal cache size;"
+    );
+    println!("hit rate rises with cache_frac (less LRU churn).");
+    for (name, tps, hr) in &best {
+        println!("  frac=0.5  {name:<16} tok/s={} hit_rate={}", f1(*tps), f2(*hr));
+    }
+}

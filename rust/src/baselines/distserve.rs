@@ -53,6 +53,16 @@ impl PrefillPlanner for FcfsPlanner {
             arrival: req.arrival,
             class: req.class,
             tbt_us: req.tbt_deadline_us,
+            // Lineage + the router's resident-match hint; `shared_len`
+            // stays 0 until dispatch actually pins cache blocks. All-zero
+            // when the prefix subsystem is off, so nothing downstream
+            // changes.
+            prefix: crate::coordinator::prefix::PrefixStamp {
+                prefix_id: req.prefix_id,
+                prefix_len: req.prefix_len.min(req.input_len),
+                cached_len: req.prefix_cached_hint.min(req.input_len),
+                shared_len: 0,
+            },
         };
         self.online_peek.note_insert(&q);
         self.queue.push_back(q);

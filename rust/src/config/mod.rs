@@ -193,6 +193,10 @@ pub enum Placement {
     /// Stateless splitmix hash of the request id (cheapest; relies on
     /// work-stealing to fix the imbalance it leaves behind).
     Hash,
+    /// Route to the decode instance holding the longest resident prefix
+    /// match for the request's lineage (requires `prefix.enabled`);
+    /// requests without a match fall back to [`Placement::JoinShortestKv`].
+    PrefixAffinity,
 }
 
 impl Placement {
@@ -200,6 +204,7 @@ impl Placement {
         match s.to_ascii_lowercase().as_str() {
             "kv" | "shortest_kv" | "join_shortest_kv" => Placement::JoinShortestKv,
             "hash" => Placement::Hash,
+            "prefix" | "prefix_affinity" => Placement::PrefixAffinity,
             _ => Placement::LeastLoaded,
         }
     }
@@ -209,6 +214,7 @@ impl Placement {
             Placement::LeastLoaded => "least_loaded",
             Placement::JoinShortestKv => "join_shortest_kv",
             Placement::Hash => "hash",
+            Placement::PrefixAffinity => "prefix_affinity",
         }
     }
 }
@@ -350,6 +356,33 @@ impl Default for AdmissionSpec {
     }
 }
 
+/// Prefix-cache knobs: a simulated radix-style KV prefix cache per decode
+/// instance (consumed by [`crate::coordinator::prefix::PrefixCache`]).
+/// When enabled, requests carrying prefix lineage (stamped by
+/// `Trace::multi_turn` or loaded from trace JSON) prefill only their
+/// uncached suffix, share the cached prefix's KV footprint, and — under
+/// `sharding.placement = prefix_affinity` — route to the instance holding
+/// their longest resident prefix. Off by default — with the master switch
+/// off the scheduler takes no prefix path at all and its output
+/// (including Summary JSON) is byte-identical to the pre-prefix system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefixSpec {
+    /// Master switch; off = no prefix-cache bookkeeping anywhere.
+    pub enabled: bool,
+    /// Cache granularity in tokens: prefixes are shared in whole blocks,
+    /// so only `floor(prefix_len / block) * block` tokens are reusable.
+    pub block: u32,
+    /// Fraction of each decode instance's KV token budget the prefix
+    /// cache may occupy before LRU eviction of unpinned blocks kicks in.
+    pub cache_frac: f64,
+}
+
+impl Default for PrefixSpec {
+    fn default() -> Self {
+        PrefixSpec { enabled: false, block: 32, cache_frac: 0.5 }
+    }
+}
+
 /// Parallel-executor knobs (consumed by
 /// [`crate::coordinator::executor`]): how many worker threads the serving
 /// loop fans decode-iteration boundaries out to. `threads = 1` (the
@@ -420,6 +453,7 @@ pub struct SystemConfig {
     pub priority: PrioritySpec,
     pub preempt: PreemptSpec,
     pub admission: AdmissionSpec,
+    pub prefix: PrefixSpec,
     pub executor: ExecutorSpec,
     pub seed: u64,
 }
@@ -436,6 +470,7 @@ impl Default for SystemConfig {
             priority: PrioritySpec::default(),
             preempt: PreemptSpec::default(),
             admission: AdmissionSpec::default(),
+            prefix: PrefixSpec::default(),
             executor: ExecutorSpec::default(),
             seed: 42,
         }
@@ -540,6 +575,13 @@ impl SystemConfig {
             if let Some(v) = ad.get("offline_tbt_factor").as_f64() { d.offline_tbt_factor = v; }
             if let Some(v) = ad.get("max_evictions").as_u64() { d.max_evictions = v as u32; }
         }
+        let px = j.get("prefix");
+        if !px.is_null() {
+            let d = &mut c.prefix;
+            if let Some(v) = px.get("enabled").as_bool() { d.enabled = v; }
+            if let Some(v) = px.get("block").as_u64() { d.block = v as u32; }
+            if let Some(v) = px.get("cache_frac").as_f64() { d.cache_frac = v; }
+        }
         let ex = j.get("executor");
         if !ex.is_null() {
             if let Some(v) = ex.get("threads").as_u64() {
@@ -604,6 +646,9 @@ impl SystemConfig {
                 "admission.max_evictions" => {
                     set_u32(&mut self.admission.max_evictions, v)
                 }
+                "prefix.enabled" => set_bool(&mut self.prefix.enabled, v),
+                "prefix.block" => set_u32(&mut self.prefix.block, v),
+                "prefix.cache_frac" => set_f64(&mut self.prefix.cache_frac, v),
                 "executor.threads" => set_u32(&mut self.executor.threads, v),
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
@@ -673,6 +718,11 @@ impl SystemConfig {
                 ("slack_margin", Json::num(self.admission.slack_margin)),
                 ("offline_tbt_factor", Json::num(self.admission.offline_tbt_factor)),
                 ("max_evictions", Json::from(self.admission.max_evictions as u64)),
+            ])),
+            ("prefix", Json::obj(vec![
+                ("enabled", Json::from(self.prefix.enabled)),
+                ("block", Json::from(self.prefix.block as u64)),
+                ("cache_frac", Json::num(self.prefix.cache_frac)),
             ])),
             ("executor", Json::obj(vec![
                 ("threads", Json::from(self.executor.threads as u64)),
@@ -839,10 +889,59 @@ mod tests {
     fn placement_parse() {
         assert_eq!(Placement::parse("HASH"), Placement::Hash);
         assert_eq!(Placement::parse("join_shortest_kv"), Placement::JoinShortestKv);
+        assert_eq!(Placement::parse("prefix"), Placement::PrefixAffinity);
         assert_eq!(Placement::parse("weird"), Placement::LeastLoaded);
-        for p in [Placement::LeastLoaded, Placement::JoinShortestKv, Placement::Hash] {
+        for p in [
+            Placement::LeastLoaded,
+            Placement::JoinShortestKv,
+            Placement::Hash,
+            Placement::PrefixAffinity,
+        ] {
             assert_eq!(Placement::parse(p.name()), p, "name/parse round-trip");
         }
+    }
+
+    #[test]
+    fn prefix_defaults_off_and_overridable() {
+        let c = SystemConfig::default();
+        assert!(!c.prefix.enabled, "prefix cache must be opt-in");
+        assert!(c.prefix.block >= 1);
+        assert!((0.0..=1.0).contains(&c.prefix.cache_frac));
+
+        let args = Args::parse(
+            ["--prefix.enabled", "on", "--prefix.block", "64",
+             "--prefix.cache_frac", "0.25",
+             "--sharding.placement", "prefix_affinity"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(c.prefix.enabled);
+        assert_eq!(c.prefix.block, 64);
+        assert_eq!(c.prefix.cache_frac, 0.25);
+        assert_eq!(c.sharding.placement, Placement::PrefixAffinity);
+
+        // A typo'd boolean must not silently arm the subsystem.
+        let args = Args::parse(
+            ["--prefix.enabled", "yep"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(!c.prefix.enabled);
+    }
+
+    #[test]
+    fn prefix_json_block_parses() {
+        let j = Json::parse(
+            r#"{"prefix":{"enabled":true,"block":16}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert!(c.prefix.enabled);
+        assert_eq!(c.prefix.block, 16);
+        // Untouched fields keep defaults.
+        assert_eq!(c.prefix.cache_frac, 0.5);
     }
 
     #[test]

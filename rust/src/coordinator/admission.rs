@@ -225,6 +225,7 @@ mod tests {
             ready_at: 0,
             tbt_us: 0,
             last_token_at,
+            prefix: crate::coordinator::prefix::PrefixStamp::default(),
         }
     }
 
@@ -321,6 +322,38 @@ mod tests {
                 "divergence at projected={projected}"
             );
         }
+    }
+
+    #[test]
+    fn evict_pass_splits_predicates_by_anchor_freshness() {
+        // The evict pass runs at a boundary, but its membership is
+        // actives ∪ due-pending. Actives were just re-anchored
+        // (`last_token_at == now`) — for them the two predicate forms
+        // coincide (see `predicates_agree_exactly_at_a_boundary`). A due
+        // pending member still carries its *hand-off* anchor from before
+        // the boundary: charging that pre-admission span against the next
+        // iteration is the same double-count the deferral fix removed,
+        // because `admit_due` re-anchors the member the instant it joins.
+        // The scheduler therefore scores actives with `deadline_at_risk`
+        // and due-pending members with `iteration_at_risk`.
+        let e = engine(true);
+        let now = 5_000_000;
+        // Pending member: online, hand-off landed 40 ms before the
+        // boundary, so its stale anchor shows 40 ms already "elapsed".
+        let pending = seq(1, RequestClass::Online, 0, 0, 100, now - 40_000);
+        // A 60 ms projected iteration fits the 90 ms effective budget…
+        assert!(
+            !e.iteration_at_risk([pending.clone()].iter(), 60_000),
+            "boundary form admits: the member re-anchors on admission"
+        );
+        // …but the anchor-charged form double-counts the pre-boundary
+        // 40 ms (60 > 90 − 40) and would evict spuriously.
+        assert!(
+            e.deadline_at_risk([pending.clone()].iter(), 60_000, now),
+            "anchor-charged form over-triggers on stale pending anchors"
+        );
+        // A genuinely oversized iteration still trips both forms.
+        assert!(e.iteration_at_risk([pending].iter(), 95_000));
     }
 
     #[test]

@@ -62,11 +62,17 @@ impl Router {
 
     /// Shard index for a new arrival. `loads` must be non-empty; ties go
     /// to the lowest shard id so routing is deterministic.
+    ///
+    /// `PrefixAffinity` here is the *fallback* path: the scheduler
+    /// intercepts arrivals that match a resident prefix and routes them
+    /// to the owning shard directly; everything that reaches this policy
+    /// function had no resident match, and joins the shortest KV queue
+    /// exactly like `JoinShortestKv`.
     pub fn choose(&self, id: RequestId, loads: &[ShardLoad]) -> usize {
         debug_assert!(!loads.is_empty());
         match self.placement {
             Placement::LeastLoaded => argmin(loads, |l| l.queued as u64),
-            Placement::JoinShortestKv => {
+            Placement::JoinShortestKv | Placement::PrefixAffinity => {
                 argmin(loads, |l| l.kv_reserved.saturating_add(l.queued_tokens))
             }
             Placement::Hash => (splitmix64(id) % loads.len() as u64) as usize,
@@ -124,20 +130,40 @@ pub fn steal_victim(
     queued: &[usize],
     min_queue: usize,
 ) -> Option<usize> {
-    let mut victim: Option<(usize, usize)> = None;
+    steal_victim_with_affinity(thief, queued, min_queue, &[])
+}
+
+/// Locality-aware steal victim choice. `gains[i]` scores what moving
+/// shard `i`'s stolen tail onto the thief is worth to the prefix cache:
+/// the tail's resident-prefix affinity to the *thief*'s instances minus
+/// its affinity to shard `i`'s own — so the tail least at home where it
+/// is (and most at home on the thief) is preferred. Eligibility is
+/// unchanged (never the thief, at least `min_queue` queued); among
+/// eligible shards the order is max gain → max queued → lowest id.
+/// Shards beyond `gains.len()` score 0, so an empty slice (`PrefixSpec`
+/// off, or no lineage anywhere) degrades exactly to the queue-depth
+/// policy above.
+pub fn steal_victim_with_affinity(
+    thief: usize,
+    queued: &[usize],
+    min_queue: usize,
+    gains: &[i64],
+) -> Option<usize> {
+    let mut victim: Option<(usize, i64, usize)> = None;
     for (i, &q) in queued.iter().enumerate() {
         if i == thief || q < min_queue {
             continue;
         }
+        let g = gains.get(i).copied().unwrap_or(0);
         let better = match victim {
             None => true,
-            Some((_, vq)) => q > vq,
+            Some((_, vg, vq)) => (g, q) > (vg, vq),
         };
         if better {
-            victim = Some((i, q));
+            victim = Some((i, g, q));
         }
     }
-    victim.map(|(i, _)| i)
+    victim.map(|(i, _, _)| i)
 }
 
 #[cfg(test)]
@@ -206,5 +232,44 @@ mod tests {
         assert_eq!(steal_victim(2, &[4, 4, 0], 2), Some(0), "tie → low id");
         assert_eq!(steal_victim(1, &[1, 0, 1], 2), None, "below min_queue");
         assert_eq!(steal_victim(0, &[9], 2), None, "no other shard");
+    }
+
+    #[test]
+    fn affinity_gain_outranks_queue_depth_then_ties_fall_back() {
+        let q = [0usize, 9, 4, 7];
+        // No gains at all ≡ the legacy queue-depth policy.
+        assert_eq!(steal_victim_with_affinity(0, &q, 2, &[]), Some(1));
+        // All-zero gains ≡ legacy too.
+        assert_eq!(steal_victim_with_affinity(0, &q, 2, &[0, 0, 0, 0]), Some(1));
+        // A positive gain beats deeper queues: shard 2's tail belongs on
+        // the thief (gain > 0) even though shard 1 has more queued.
+        assert_eq!(steal_victim_with_affinity(0, &q, 2, &[0, 0, 5, 0]), Some(2));
+        // Equal gains → deeper queue decides…
+        assert_eq!(steal_victim_with_affinity(0, &q, 2, &[0, 3, 3, 3]), Some(1));
+        // …and equal gain + equal depth → lowest id (the pinned
+        // tie-break): shards 1 and 3 both gain 3 with depth 7.
+        let q_tied = [0usize, 7, 4, 7];
+        assert_eq!(
+            steal_victim_with_affinity(0, &q_tied, 2, &[0, 3, 9, 3]),
+            Some(2),
+            "gain dominates first"
+        );
+        assert_eq!(
+            steal_victim_with_affinity(0, &q_tied, 2, &[0, 3, 0, 3]),
+            Some(1),
+            "gain+depth tie → low id"
+        );
+        // Negative gain (tail at home where it is) ranks below zero-gain
+        // shards regardless of depth.
+        assert_eq!(
+            steal_victim_with_affinity(0, &q, 2, &[0, -4, 0, 0]),
+            Some(3)
+        );
+        // Eligibility is unchanged: a high-gain shard below min_queue is
+        // still not a victim.
+        assert_eq!(
+            steal_victim_with_affinity(1, &[1, 0, 1], 2, &[9, 0, 9]),
+            None
+        );
     }
 }

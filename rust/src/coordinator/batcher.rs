@@ -260,6 +260,7 @@ mod tests {
             arrival,
             class: RequestClass::Online,
             tbt_us: 0,
+            prefix: crate::coordinator::prefix::PrefixStamp::default(),
         }
     }
 
@@ -432,6 +433,7 @@ mod tests {
                 arrival: 0,
                 class: RequestClass::Offline,
                 tbt_us: 0,
+                prefix: crate::coordinator::prefix::PrefixStamp::default(),
             });
         }
         // …then an online request lands later.
@@ -442,6 +444,7 @@ mod tests {
             arrival: 50_000,
             class: RequestClass::Online,
             tbt_us: 0,
+            prefix: crate::coordinator::prefix::PrefixStamp::default(),
         });
         let b = batcher(Policy::Fcfs, 1).with_priority(PriorityScorer::new(
             PrioritySpec::default(),

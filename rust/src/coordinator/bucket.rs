@@ -18,6 +18,7 @@
 //! Every call's wall-clock cost is accumulated in [`BucketManager::overhead_ns`]
 //! — that is the red "bucketing overhead" bar of Fig. 6.
 
+use super::prefix::PrefixStamp;
 use crate::workload::{RequestClass, RequestId};
 use crate::Micros;
 use std::time::Instant;
@@ -35,14 +36,32 @@ pub struct QueuedReq {
     /// TBT-aware admission layer sees stamped budgets through requeues,
     /// steals, and checkpoint-restores.
     pub tbt_us: u64,
+    /// Prefix-cache lineage and acquisition state
+    /// ([`crate::coordinator::prefix`]); all-zero (the default) unless
+    /// the prefix subsystem is armed, which keeps every computation below
+    /// byte-identical to the pre-prefix forms.
+    pub prefix: PrefixStamp,
 }
 
 impl QueuedReq {
-    /// Full-context KV token footprint (prompt + expected generation) —
-    /// the single definition every reserve/admission/steal/eviction site
-    /// must share, or the KV reserve/release books stop balancing.
+    /// KV token footprint this request reserves for itself: full context
+    /// (prompt + expected generation) minus the tokens pinned in the
+    /// owning instance's prefix cache, whose reservation the cache holds
+    /// once on behalf of every sharer. The single definition every
+    /// reserve/admission/steal/eviction site must share, or the KV
+    /// reserve/release books stop balancing.
     pub fn footprint(&self) -> u64 {
-        (self.len + self.output_len) as u64
+        ((self.len + self.output_len) as u64)
+            .saturating_sub(self.prefix.shared_len as u64)
+    }
+
+    /// The bucketing key: the prompt length that will actually be
+    /// *computed* — the uncached suffix when a prefix hit is stamped, the
+    /// raw length otherwise. Keying on this keeps size-homogeneous
+    /// buckets homogeneous in real prefill compute once cached prefixes
+    /// stop costing FLOPs.
+    pub fn bucket_len(&self) -> u32 {
+        self.len.saturating_sub(self.prefix.cached_len)
     }
 }
 
@@ -118,10 +137,12 @@ impl BucketManager {
     }
 
     /// Assign one request to its covering bucket (Alg. 1 lines 2–9).
-    /// Lengths ≥ L_max clamp into the last bucket.
+    /// Keyed on [`QueuedReq::bucket_len`] (the uncached suffix; the raw
+    /// length when no prefix hit is stamped). Lengths ≥ L_max clamp into
+    /// the last bucket.
     pub fn assign(&mut self, req: QueuedReq) {
         let t0 = Instant::now();
-        let len = req.len.min(self.l_max - 1);
+        let len = req.bucket_len().min(self.l_max - 1);
         let idx = if self.linear_scan {
             self.buckets
                 .iter()
@@ -168,14 +189,14 @@ impl BucketManager {
                 let c_s = bucket
                     .requests
                     .iter()
-                    .filter(|r| r.len.min(self.l_max - 1) < mid)
+                    .filter(|r| r.bucket_len().min(self.l_max - 1) < mid)
                     .count();
                 let skewed = n > 0 && (c_s as f64 / n as f64) > self.theta;
                 if skewed && n > n_max && width >= 2 * self.min_width {
                     let mut lo = Bucket::new(bucket.low, mid);
                     let mut hi = Bucket::new(mid, bucket.up);
                     for r in bucket.requests {
-                        if r.len.min(self.l_max - 1) < mid {
+                        if r.bucket_len().min(self.l_max - 1) < mid {
                             lo.requests.push(r);
                         } else {
                             hi.requests.push(r);
@@ -256,10 +277,12 @@ impl BucketManager {
         }
         for b in &self.buckets {
             for r in &b.requests {
-                if !b.covers(r.len.min(self.l_max - 1)) {
+                if !b.covers(r.bucket_len().min(self.l_max - 1)) {
                     return Err(format!(
-                        "request len {} outside bucket [{},{})",
-                        r.len, b.low, b.up
+                        "request bucket_len {} outside bucket [{},{})",
+                        r.bucket_len(),
+                        b.low,
+                        b.up
                     ));
                 }
             }
@@ -334,7 +357,36 @@ mod tests {
             arrival: id * 10,
             class: RequestClass::Online,
             tbt_us: 0,
+            prefix: PrefixStamp::default(),
         }
+    }
+
+    #[test]
+    fn bucket_keying_uses_uncached_length_and_dedupes_footprint() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        // Force a split so short and long buckets exist.
+        for i in 0..8 {
+            m.assign(req(i, 100));
+        }
+        for i in 8..10 {
+            m.assign(req(i, 800));
+        }
+        m.adjust(4);
+        assert_eq!(m.n_buckets(), 2);
+        // A long prompt whose stamped hit leaves only a short suffix to
+        // compute must land in the *short* bucket.
+        let mut r = req(100, 900);
+        r.prefix = PrefixStamp {
+            prefix_id: 7,
+            prefix_len: 800,
+            cached_len: 800,
+            shared_len: 800,
+        };
+        assert_eq!(r.bucket_len(), 100);
+        assert_eq!(r.footprint(), (900 + 10 - 800) as u64);
+        m.assign(r);
+        assert!(m.buckets()[0].requests.iter().any(|q| q.id == 100));
+        m.check_invariants().unwrap();
     }
 
     #[test]
@@ -592,6 +644,7 @@ mod tests {
                         arrival: id,
                         class: RequestClass::Offline,
                         tbt_us: 0,
+                        prefix: PrefixStamp::default(),
                     });
                     id += 1;
                 } else {

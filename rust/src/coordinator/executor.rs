@@ -53,6 +53,7 @@
 //! outcome channel open.
 
 use super::fleet::DecodeSeqState;
+use super::prefix::PrefixStamp;
 use crate::workload::request::Completion;
 use crate::workload::RequestClass;
 use crate::Micros;
@@ -105,11 +106,13 @@ pub struct GapSample {
 }
 
 /// A sequence that finished at this boundary, with the KV footprint its
-/// reservation releases.
+/// reservation releases and the prefix-cache stamp whose pins the merge
+/// loop must drop (all-zero when the prefix subsystem is off).
 #[derive(Debug, Clone)]
 pub struct FinishedSeq {
     pub completion: Completion,
     pub footprint: u64,
+    pub prefix: PrefixStamp,
 }
 
 /// The pure result of one boundary: what [`boundary_outcome`] computes on
@@ -144,6 +147,7 @@ pub fn boundary_outcome(job: BoundaryJob) -> BoundaryOutcome {
         if s.generated >= s.output_len {
             done.push(FinishedSeq {
                 footprint: s.footprint(),
+                prefix: s.prefix,
                 completion: Completion {
                     id: s.id,
                     class: s.class,
@@ -281,6 +285,7 @@ mod tests {
             ready_at: 0,
             tbt_us: 7_000,
             last_token_at,
+            prefix: PrefixStamp::default(),
         }
     }
 

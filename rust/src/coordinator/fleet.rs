@@ -11,6 +11,7 @@
 
 use super::batcher::FormedBatch;
 use super::events::EventId;
+use super::prefix::PrefixStamp;
 use crate::workload::RequestClass;
 use crate::Micros;
 
@@ -111,6 +112,10 @@ pub struct DecodeSeqState {
     /// decode-pacing one). The TBT-aware admission layer measures every
     /// gap and slack from this anchor.
     pub last_token_at: Micros,
+    /// Prefix-cache lineage carried through from the queued request, so
+    /// completion/eviction can release the cache pins the dispatch
+    /// acquired. All-zero when the prefix subsystem is off.
+    pub prefix: PrefixStamp,
 }
 
 /// One decode instance running continuous (iteration-level) batching.
@@ -131,12 +136,13 @@ pub struct DecodeInstance {
 }
 
 impl DecodeSeqState {
-    /// Full-context KV token footprint — must mirror
-    /// [`crate::coordinator::bucket::QueuedReq::footprint`] (the entry
-    /// this sequence was reserved as), or release would not balance
-    /// reserve.
+    /// KV token footprint this sequence reserved for itself — must
+    /// mirror [`crate::coordinator::bucket::QueuedReq::footprint`] (the
+    /// entry this sequence was reserved as), including the shared-prefix
+    /// deduction, or release would not balance reserve.
     pub fn footprint(&self) -> u64 {
-        (self.input_len + self.output_len) as u64
+        ((self.input_len + self.output_len) as u64)
+            .saturating_sub(self.prefix.shared_len as u64)
     }
 }
 
@@ -221,6 +227,7 @@ mod tests {
             arrival: 0,
             class: RequestClass::Online,
             tbt_us: 0,
+            prefix: PrefixStamp::default(),
         };
         InFlightPrefill {
             formed: FormedBatch {
@@ -252,6 +259,7 @@ mod tests {
             ready_at,
             tbt_us: 0,
             last_token_at: 0,
+            prefix: PrefixStamp::default(),
         }
     }
 

@@ -21,6 +21,10 @@
 //!   online sequence's inter-token budget, and TBT-triggered eviction of
 //!   offline actives through the preemption machinery (off by default,
 //!   `AdmissionSpec`-gated).
+//! * [`prefix`] — the simulated radix-style KV prefix cache, one per
+//!   decode instance: lineage chains of refcounted token blocks under a
+//!   budget, LRU-peeled; prefill is priced on the uncached suffix and
+//!   shared blocks reserve KV once (off by default, `PrefixSpec`-gated).
 //! * [`shard`] — per-decode-instance scheduler shards: each owns its own
 //!   bucket queue, KV admission, and priority state; KV-aware
 //!   work-stealing pulls backlog onto idle shards at decode-iteration
@@ -101,6 +105,7 @@ pub mod executor;
 pub mod fleet;
 pub mod monitor;
 pub mod preempt;
+pub mod prefix;
 pub mod priority;
 pub mod scheduler;
 pub mod shard;
@@ -114,6 +119,7 @@ pub use executor::ExecutorPool;
 pub use fleet::{DecodeFleet, PrefillFleet};
 pub use monitor::{GlobalMonitor, MonitorView, ShardView};
 pub use preempt::{PreemptionEngine, RestoreInfo};
+pub use prefix::{PrefixCache, PrefixStamp};
 pub use priority::PriorityScorer;
 pub use scheduler::{PdScheduler, RunReport, PrefillPlanner};
 pub use shard::{SchedulerShard, ShardSet, ShardStats};

@@ -158,8 +158,13 @@ impl GlobalMonitor {
         self.decode_active = self.decode_active.saturating_sub(n);
     }
 
-    /// KV accounting: reserve a request's full-context footprint against
-    /// the shard fronting the target decode instance.
+    /// KV accounting: reserve a request's context footprint against the
+    /// shard fronting the target decode instance. With the prefix cache
+    /// armed ([`crate::config::PrefixSpec`]) requests reserve only their
+    /// *deduplicated* footprint (shared cached blocks excluded) while the
+    /// cache itself reserves each resident block exactly once at insert
+    /// and releases it here on LRU eviction — so `kv_tokens_in_use` stays
+    /// the true physical occupancy either way.
     pub fn kv_reserve(&mut self, shard: usize, tokens: u64) {
         self.shards[shard].kv_tokens_in_use += tokens;
     }

@@ -85,6 +85,10 @@ pub(crate) fn evictable_entry(s: &DecodeSeqState) -> Option<QueuedReq> {
         arrival: s.arrival,
         class: s.class,
         tbt_us: s.tbt_us,
+        // Carry the full stamp so the deficit math in
+        // `pick_decode_victims` sums the same deduplicated footprints the
+        // eviction path will actually release.
+        prefix: s.prefix,
     })
 }
 
@@ -312,6 +316,17 @@ impl PreemptionEngine {
             arrival: s.arrival,
             class: s.class,
             tbt_us: s.tbt_us,
+            // Lineage survives the eviction (the recompute dispatch may
+            // hit the cache again), but the acquisition state does not:
+            // the evicting scheduler released this sequence's pins, so
+            // the requeued entry starts unstamped and reserves — and
+            // replays — its full context until re-acquired.
+            prefix: super::prefix::PrefixStamp {
+                prefix_id: s.prefix.prefix_id,
+                prefix_len: s.prefix.prefix_len,
+                cached_len: 0,
+                shared_len: 0,
+            },
         }
     }
 
@@ -360,6 +375,7 @@ mod tests {
             arrival,
             class,
             tbt_us: 0,
+            prefix: crate::coordinator::prefix::PrefixStamp::default(),
         }
     }
 
@@ -406,7 +422,26 @@ mod tests {
             ready_at: 0,
             tbt_us: 0,
             last_token_at: 0,
+            prefix: crate::coordinator::prefix::PrefixStamp::default(),
         }
+    }
+
+    #[test]
+    fn checkpoint_keeps_lineage_but_drops_acquisition_state() {
+        let mut e = engine(true);
+        let mut s = seq(11, RequestClass::Offline, 0, 800, 200, 60);
+        s.prefix = crate::coordinator::prefix::PrefixStamp {
+            prefix_id: 5,
+            prefix_len: 512,
+            cached_len: 512,
+            shared_len: 512,
+        };
+        let qr = e.checkpoint_seq(&s);
+        assert_eq!(qr.prefix.prefix_id, 5, "lineage survives eviction");
+        assert_eq!(qr.prefix.prefix_len, 512);
+        assert_eq!(qr.prefix.cached_len, 0, "pins were released: no hit");
+        assert_eq!(qr.prefix.shared_len, 0, "full context reserves again");
+        assert_eq!(qr.footprint(), (800 + 60 + 140) as u64);
     }
 
     #[test]

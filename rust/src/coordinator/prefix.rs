@@ -1,0 +1,396 @@
+//! Simulated radix-style KV prefix cache, one per decode instance.
+//!
+//! Real chat traffic is dominated by shared prefixes — system prompts and
+//! growing multi-turn histories — and a decode instance that still holds
+//! a session's KV blocks can skip recomputing them (Apt-Serve's hybrid
+//! cache observation, arxiv 2504.07494). This module models that reuse at
+//! token-block granularity so the scheduler can price prefill on the
+//! *uncached suffix* only and deduplicate the KV reservation of shared
+//! blocks, all under the existing per-instance token budget.
+//!
+//! # Model
+//!
+//! A request's shareable prefix is identified by its lineage
+//! ([`PrefixStamp::prefix_id`], stamped by `Trace::multi_turn` or loaded
+//! from trace JSON) rather than by hashing literal token content — the
+//! simulator carries no token ids, and a lineage id is exactly what a
+//! content hash of the shared prefix would collapse to. Each lineage's
+//! resident blocks form a contiguous chain (the radix-trie path for that
+//! prefix, collapsed): block `k` can only be resident if blocks
+//! `0..k` are, acquisitions pin whole chain prefixes, and eviction peels
+//! unpinned chain *tails* — so the radix invariant (a resident node's
+//! ancestors are resident, a pinned node's ancestors are pinned) holds by
+//! construction.
+//!
+//! # Bookkeeping contract
+//!
+//! The cache owns the KV reservation of every resident block, charged
+//! against the owning decode instance when a block is first inserted and
+//! released when LRU eviction peels it. Requests therefore *exclude*
+//! their pinned tokens ([`PrefixStamp::shared_len`]) from their own
+//! full-context reservation — that is the deduplication: ten session
+//! turns pinning one system prompt reserve its blocks once, not ten
+//! times. Pins (per-block refcounts) only gate eviction; pin/unpin moves
+//! no bytes. All mutation happens on the scheduler's merge loop (dispatch
+//! acquire, boundary release, eviction release), so the parallel executor
+//! needs no synchronization here.
+
+use std::collections::HashMap;
+
+/// Prefix lineage carried by a request through every scheduling layer.
+///
+/// `prefix_id`/`prefix_len` are workload facts (stamped by the trace):
+/// which shared prefix the prompt starts with and how many of its tokens
+/// are shareable. `cached_len`/`shared_len` are scheduler stamps written
+/// at admission (estimate) and dispatch (actual acquisition):
+///
+/// * `cached_len` — tokens served from cache, i.e. prefill-compute
+///   savings; the bucket key and the engine's priced batch subtract it.
+/// * `shared_len` — tokens pinned in the cache on this request's behalf
+///   and excluded from its own KV reservation (the cache holds their
+///   reservation once, however many requests pin them).
+///
+/// `PrefixStamp::default()` (all zeros) is a request with no lineage;
+/// every footprint/bucket computation then degenerates to the legacy
+/// form, which is what keeps disabled runs byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PrefixStamp {
+    /// Shared-prefix lineage id (0 = none).
+    pub prefix_id: u64,
+    /// Leading tokens of the prompt that belong to the shared prefix.
+    pub prefix_len: u32,
+    /// Tokens served from a resident prefix (prefill-compute savings).
+    pub cached_len: u32,
+    /// Cache-pinned tokens excluded from this request's KV reservation.
+    pub shared_len: u32,
+}
+
+/// One resident KV block of a lineage chain.
+#[derive(Debug, Clone, Copy)]
+struct Block {
+    /// In-flight requests pinning this block (eviction gate).
+    refs: u32,
+    /// Logical LRU clock of the last acquisition touching this block.
+    last_used: u64,
+}
+
+/// Result of one [`PrefixCache::acquire`]: what the scheduler folds into
+/// the request's stamp and the KV books.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Acquired {
+    /// Tokens already resident (the prefill-compute saving).
+    pub hit_tokens: u32,
+    /// Tokens newly inserted — charge them to the instance's KV books.
+    pub inserted_tokens: u64,
+    /// Tokens LRU-evicted to make room — release them from the books.
+    pub evicted_tokens: u64,
+    /// Tokens pinned for the caller (hit + inserted); pass back to
+    /// [`PrefixCache::release`] when the request leaves the instance.
+    pub pinned_len: u32,
+}
+
+/// Hit/miss/eviction counters surfaced in `RunReport`/Summary JSON.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Acquisitions that found at least one resident block.
+    pub hits: u64,
+    /// Acquisitions that found none (including lineage-less requests).
+    pub misses: u64,
+    /// Total tokens served from cache across all hits.
+    pub hit_tokens: u64,
+    /// Blocks peeled by LRU eviction.
+    pub evictions: u64,
+    /// Tokens those evictions released.
+    pub evicted_tokens: u64,
+}
+
+/// The per-decode-instance prefix cache: lineage chains of refcounted
+/// blocks under a token budget, peeled LRU-tail-first when full.
+#[derive(Debug)]
+pub struct PrefixCache {
+    /// Cache granularity in tokens (whole blocks only).
+    block: u32,
+    /// Resident-token ceiling (a fraction of the instance KV budget).
+    budget: u64,
+    /// Lineage id → contiguous resident chain. Iterated only during
+    /// eviction, where candidates are totally ordered by
+    /// `(last_used, lineage id)` — map order cannot reach the schedule.
+    chains: HashMap<u64, Vec<Block>>,
+    resident_tokens: u64,
+    /// Logical LRU clock, bumped once per acquisition.
+    tick: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    /// `block` tokens per cache block (clamped to ≥ 1), `budget` resident
+    /// tokens total.
+    pub fn new(block: u32, budget: u64) -> PrefixCache {
+        PrefixCache {
+            block: block.max(1),
+            budget,
+            chains: HashMap::new(),
+            resident_tokens: 0,
+            tick: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// Tokens of `prefix_id`'s chain resident right now that a request
+    /// with `shareable` prefix tokens could reuse — the affinity-placement
+    /// probe. Pure: no pins, no LRU touch, no counters.
+    pub fn match_len(&self, prefix_id: u64, shareable: u32) -> u32 {
+        if prefix_id == 0 {
+            return 0;
+        }
+        let want = (shareable / self.block) as usize;
+        let resident =
+            self.chains.get(&prefix_id).map_or(0, |c| c.len()).min(want);
+        resident as u32 * self.block
+    }
+
+    /// Acquire the first `shareable` tokens of `prefix_id` for a request
+    /// being dispatched: pin what is resident (the hit), insert and pin
+    /// what is missing while budget allows — peeling LRU unpinned chain
+    /// tails to make room — and report the KV-book deltas. A lineage-less
+    /// or sub-block request is a plain miss.
+    pub fn acquire(&mut self, prefix_id: u64, shareable: u32) -> Acquired {
+        let want = (shareable / self.block) as usize;
+        if prefix_id == 0 || want == 0 {
+            self.stats.misses += 1;
+            return Acquired::default();
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        let chain = self.chains.entry(prefix_id).or_default();
+        let hit = chain.len().min(want);
+        for b in chain.iter_mut().take(hit) {
+            b.refs += 1;
+            b.last_used = tick;
+        }
+        if hit > 0 {
+            self.stats.hits += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+        let hit_tokens = hit as u32 * self.block;
+        self.stats.hit_tokens += hit_tokens as u64;
+        let mut inserted_tokens = 0u64;
+        let mut evicted_tokens = 0u64;
+        let mut pinned = hit;
+        for _ in hit..want {
+            while self.resident_tokens + self.block as u64 > self.budget {
+                match self.evict_lru_tail() {
+                    Some(freed) => evicted_tokens += freed,
+                    None => break,
+                }
+            }
+            if self.resident_tokens + self.block as u64 > self.budget {
+                break; // everything left is pinned — cap the insertion
+            }
+            self.chains
+                .get_mut(&prefix_id)
+                .expect("chain entry created above")
+                .push(Block { refs: 1, last_used: tick });
+            self.resident_tokens += self.block as u64;
+            inserted_tokens += self.block as u64;
+            pinned += 1;
+        }
+        Acquired {
+            hit_tokens,
+            inserted_tokens,
+            evicted_tokens,
+            pinned_len: pinned as u32 * self.block,
+        }
+    }
+
+    /// Unpin the first `pinned_len` tokens of `prefix_id` (a request
+    /// leaving the instance: completion, eviction, or prefill abort).
+    /// Blocks stay resident — and reserved — until LRU eviction peels
+    /// them; unpinning moves no bytes.
+    pub fn release(&mut self, prefix_id: u64, pinned_len: u32) {
+        if prefix_id == 0 || pinned_len == 0 {
+            return;
+        }
+        let k = (pinned_len / self.block) as usize;
+        if let Some(chain) = self.chains.get_mut(&prefix_id) {
+            for b in chain.iter_mut().take(k) {
+                b.refs = b.refs.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Peel one evictable block: among chain tails with no pins (pins are
+    /// prefix-monotone, so the tail always carries a chain's minimum
+    /// refcount), the least recently used, ties on lineage id. Returns
+    /// the tokens freed, or `None` when every tail is pinned.
+    fn evict_lru_tail(&mut self) -> Option<u64> {
+        let victim = self
+            .chains
+            .iter()
+            .filter_map(|(&id, chain)| {
+                let tail = chain.last()?;
+                (tail.refs == 0).then_some((tail.last_used, id))
+            })
+            .min()?;
+        let chain = self.chains.get_mut(&victim.1).expect("victim resident");
+        chain.pop();
+        if chain.is_empty() {
+            self.chains.remove(&victim.1);
+        }
+        self.resident_tokens -= self.block as u64;
+        self.stats.evictions += 1;
+        self.stats.evicted_tokens += self.block as u64;
+        Some(self.block as u64)
+    }
+
+    /// Tokens currently resident (each carrying a live KV reservation).
+    pub fn resident_tokens(&self) -> u64 {
+        self.resident_tokens
+    }
+
+    /// Counter snapshot for report folding.
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_stamp_is_lineage_less() {
+        let s = PrefixStamp::default();
+        assert_eq!(s.prefix_id, 0);
+        assert_eq!((s.prefix_len, s.cached_len, s.shared_len), (0, 0, 0));
+    }
+
+    #[test]
+    fn acquire_miss_then_hit_grows_and_reuses_the_chain() {
+        let mut c = PrefixCache::new(32, 1000);
+        // Cold: whole prefix inserted, nothing hit.
+        let a = c.acquire(7, 96);
+        assert_eq!(a.hit_tokens, 0);
+        assert_eq!(a.inserted_tokens, 96);
+        assert_eq!(a.pinned_len, 96);
+        assert_eq!(c.resident_tokens(), 96);
+        assert_eq!((c.stats().hits, c.stats().misses), (0, 1));
+        // Warm: same lineage, longer shareable prefix → hit on the
+        // resident chain, insert only the extension.
+        let b = c.acquire(7, 160);
+        assert_eq!(b.hit_tokens, 96);
+        assert_eq!(b.inserted_tokens, 64);
+        assert_eq!(b.pinned_len, 160);
+        assert_eq!(c.resident_tokens(), 160);
+        assert_eq!((c.stats().hits, c.stats().misses), (1, 1));
+        assert_eq!(c.stats().hit_tokens, 96);
+        // A shorter turn of the same session hits without inserting.
+        let d = c.acquire(7, 64);
+        assert_eq!(d.hit_tokens, 64);
+        assert_eq!(d.inserted_tokens, 0);
+        assert_eq!(d.pinned_len, 64);
+    }
+
+    #[test]
+    fn sub_block_and_lineage_less_requests_are_plain_misses() {
+        let mut c = PrefixCache::new(32, 1000);
+        assert_eq!(c.acquire(0, 500), Acquired::default());
+        assert_eq!(c.acquire(9, 31), Acquired::default(), "below one block");
+        assert_eq!(c.stats().misses, 2);
+        assert_eq!(c.resident_tokens(), 0);
+        assert_eq!(c.match_len(0, 500), 0);
+        // Partial blocks never count: 95 shareable → 2 whole blocks.
+        c.acquire(9, 95);
+        assert_eq!(c.resident_tokens(), 64);
+        assert_eq!(c.match_len(9, 95), 64);
+        assert_eq!(c.match_len(9, 32), 32, "capped by the probe's own want");
+    }
+
+    #[test]
+    fn release_unpins_without_freeing_and_eviction_peels_lru_tails() {
+        let mut c = PrefixCache::new(32, 128); // 4 blocks total
+        let a = c.acquire(1, 64); // blocks: chain 1 → 2
+        let b = c.acquire(2, 64); // chain 2 → 2; cache full
+        assert_eq!(c.resident_tokens(), 128);
+        // Full and everything pinned: a third lineage cannot insert.
+        let d = c.acquire(3, 64);
+        assert_eq!(d.inserted_tokens, 0);
+        assert_eq!(d.pinned_len, 0);
+        // Unpin chain 1 — still resident (free hits for its session)...
+        c.release(1, a.pinned_len);
+        assert_eq!(c.resident_tokens(), 128);
+        assert_eq!(c.match_len(1, 64), 64);
+        // ...until a new lineage needs the space: LRU peels chain 1
+        // (older last_used than chain 2), not the still-pinned chain 2.
+        let e = c.acquire(4, 64);
+        assert_eq!(e.inserted_tokens, 64);
+        assert_eq!(e.evicted_tokens, 64);
+        assert_eq!(c.match_len(1, 64), 0, "chain 1 evicted");
+        assert_eq!(c.match_len(2, 64), 64, "pinned chain 2 survives");
+        assert_eq!(c.stats().evictions, 2);
+        assert_eq!(c.stats().evicted_tokens, 64);
+        c.release(2, b.pinned_len);
+        c.release(4, e.pinned_len);
+    }
+
+    #[test]
+    fn eviction_is_deterministic_on_lru_ties() {
+        // Two unpinned chains inserted by the same acquisition clock
+        // ordering; ties break on lineage id, lowest first.
+        let mut c = PrefixCache::new(32, 64);
+        let a = c.acquire(5, 32);
+        c.release(5, a.pinned_len);
+        let b = c.acquire(3, 32);
+        c.release(3, b.pinned_len);
+        // Chain 5 is older → evicted first even though 3 < 5.
+        let d = c.acquire(9, 64);
+        assert_eq!(d.inserted_tokens, 64);
+        assert_eq!(d.evicted_tokens, 64, "both chains peeled");
+        assert_eq!(c.match_len(5, 32), 0);
+        assert_eq!(c.match_len(3, 32), 0);
+    }
+
+    #[test]
+    fn pinned_prefix_keeps_its_ancestors_resident() {
+        // Radix invariant: a later turn pins a *longer* chain; releasing
+        // the short pin leaves the deep pin protecting the whole path.
+        let mut c = PrefixCache::new(32, 128);
+        let short = c.acquire(1, 32);
+        let long = c.acquire(1, 128); // pins blocks 0..4
+        c.release(1, short.pinned_len);
+        // Budget pressure from another lineage cannot peel chain 1: its
+        // tail is pinned, and pins are prefix-monotone.
+        let d = c.acquire(2, 64);
+        assert_eq!(d.inserted_tokens, 0, "no unpinned tail to evict");
+        assert_eq!(c.match_len(1, 128), 128);
+        c.release(1, long.pinned_len);
+        // Now the whole chain is unpinned and the insert succeeds.
+        let e = c.acquire(2, 64);
+        assert_eq!(e.inserted_tokens, 64);
+        assert_eq!(e.evicted_tokens, 64);
+    }
+
+    #[test]
+    fn books_balance_inserted_minus_evicted() {
+        // The scheduler charges `inserted - evicted` net per acquisition;
+        // summed over any sequence of operations that must equal the
+        // resident total, or the monitor's KV books would drift.
+        let mut c = PrefixCache::new(16, 160);
+        let mut net = 0i64;
+        let mut pins: Vec<(u64, u32)> = Vec::new();
+        for (id, share) in
+            [(1u64, 64u32), (2, 48), (1, 96), (3, 160), (2, 32), (4, 80)]
+        {
+            let a = c.acquire(id, share);
+            net += a.inserted_tokens as i64 - a.evicted_tokens as i64;
+            pins.push((id, a.pinned_len));
+            if pins.len() % 2 == 0 {
+                let (rid, plen) = pins.remove(0);
+                c.release(rid, plen);
+            }
+        }
+        assert_eq!(net, c.resident_tokens() as i64);
+        assert!(c.resident_tokens() <= 160, "budget respected");
+    }
+}

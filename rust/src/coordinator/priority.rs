@@ -211,6 +211,7 @@ mod tests {
             arrival,
             class,
             tbt_us: 0,
+            prefix: crate::coordinator::prefix::PrefixStamp::default(),
         }
     }
 
@@ -368,6 +369,7 @@ mod tests {
                     RequestClass::Offline
                 },
                 tbt_us: 0,
+                prefix: crate::coordinator::prefix::PrefixStamp::default(),
             };
             let a = mk(g, 0);
             let b = mk(g, 1);

@@ -33,10 +33,11 @@ use super::executor::{self, BoundaryJob, BoundaryOutcome, ExecutorPool, SyncKey}
 use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
 use super::monitor::GlobalMonitor;
 use super::preempt::PreemptionEngine;
+use super::prefix::{PrefixCache, PrefixStamp};
 use super::priority::PriorityScorer;
 use super::shard::ShardSet;
 use crate::cluster::{DecodeBatch, DecodeSeq, Engine, PrefillBatch, PrefillItem};
-use crate::config::SystemConfig;
+use crate::config::{Placement, SystemConfig};
 use crate::workload::request::Completion;
 use crate::workload::{Request, RequestClass, Trace};
 use crate::workload::RequestId;
@@ -118,6 +119,15 @@ pub trait PrefillPlanner {
     /// Current bucket count (1 for non-bucketing planners).
     fn n_buckets(&self) -> usize {
         1
+    }
+
+    /// Distinct prefix lineages queued here, as `(prefix_id, max
+    /// shareable length)` pairs — what the cache-affinity steal scorer
+    /// weighs a shard's stolen tail by. The default (no lineage
+    /// tracking) keeps victim selection on pure queue depth, so planners
+    /// that predate the prefix subsystem need no changes.
+    fn lineage_summary(&self) -> Vec<(u64, u32)> {
+        Vec::new()
     }
 }
 
@@ -310,6 +320,16 @@ impl PrefillPlanner for BucketPlanner {
             arrival: req.arrival,
             class: req.class,
             tbt_us: req.tbt_deadline_us,
+            // Lineage + the router's resident-match hint; `shared_len`
+            // stays 0 until dispatch actually pins cache blocks. All-zero
+            // when the prefix subsystem is off, so bucket keying and
+            // footprints are untouched.
+            prefix: PrefixStamp {
+                prefix_id: req.prefix_id,
+                prefix_len: req.prefix_len.min(req.input_len),
+                cached_len: req.prefix_cached_hint.min(req.input_len),
+                shared_len: 0,
+            },
         };
         self.online_peek.note_insert(&q);
         self.mgr.assign(q);
@@ -444,6 +464,24 @@ impl PrefillPlanner for BucketPlanner {
     fn n_buckets(&self) -> usize {
         self.mgr.n_buckets()
     }
+
+    fn lineage_summary(&self) -> Vec<(u64, u32)> {
+        // O(queued) walk, paid only when the prefix subsystem is armed
+        // (the scheduler never calls this otherwise) and only at steal
+        // cadence. Dedupe by lineage keeping the longest shareable run.
+        let mut out: Vec<(u64, u32)> = Vec::new();
+        for r in self.mgr.buckets().iter().flat_map(|b| b.requests.iter()) {
+            if r.prefix.prefix_id == 0 {
+                continue;
+            }
+            let shareable = r.prefix.prefix_len.min(r.len);
+            match out.iter_mut().find(|(id, _)| *id == r.prefix.prefix_id) {
+                Some((_, len)) => *len = (*len).max(shareable),
+                None => out.push((r.prefix.prefix_id, shareable)),
+            }
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -527,6 +565,24 @@ pub struct RunReport {
     pub tbt_violations_online: u64,
     /// Offline gaps exceeding their (lax) per-token TBT budget.
     pub tbt_violations_offline: u64,
+    /// Whether the prefix-cache subsystem was armed for this run (gates
+    /// the Summary JSON block so disabled output stays byte-identical).
+    pub prefix_enabled: bool,
+    /// Dispatch-time cache acquisitions that found at least one resident
+    /// block, summed across every instance's cache.
+    pub prefix_hits: u64,
+    /// Acquisitions that found nothing resident (lineage-less requests
+    /// included).
+    pub prefix_misses: u64,
+    /// Prompt tokens served from cache — prefill compute the hits saved.
+    pub prefix_hit_tokens: u64,
+    /// Blocks peeled by LRU eviction across every instance's cache.
+    pub prefix_evictions: u64,
+    /// KV tokens those evictions released back to the instance books.
+    pub prefix_evicted_tokens: u64,
+    /// Cache-resident KV tokens still held at run end (cache-charged, so
+    /// the deduplicated per-request books balance against them).
+    pub prefix_resident_tokens: u64,
     /// Resolved executor worker count (1 = the sequential serving loop).
     /// Executor counters live on the `RunReport` only — they are
     /// deliberately kept *out* of Summary JSON so the determinism
@@ -836,6 +892,23 @@ impl PdScheduler {
             );
         }
         let parallel = n_workers > 1 && !realtime;
+        // One radix cache per decode instance, sized as a fraction of
+        // that instance's KV token budget — resident blocks are charged
+        // to the same per-shard books the requests reserve against, so
+        // the cache can never oversubscribe an instance.
+        let prefix_caches: Option<Vec<PrefixCache>> = if self.cfg.prefix.enabled
+        {
+            let budget = (per_decode_budget as f64
+                * self.cfg.prefix.cache_frac.clamp(0.0, 1.0))
+                as u64;
+            Some(
+                (0..n_decode)
+                    .map(|_| PrefixCache::new(self.cfg.prefix.block, budget))
+                    .collect(),
+            )
+        } else {
+            None
+        };
 
         let mut core = RunCore {
             shards: &mut self.shards,
@@ -859,6 +932,7 @@ impl PdScheduler {
                 n_shards,
                 preempt_enabled: self.cfg.preempt.enabled,
                 admission_enabled: admission_active,
+                prefix_enabled: self.cfg.prefix.enabled,
                 executor_threads: if parallel { n_workers } else { 1 },
                 ..Default::default()
             },
@@ -874,6 +948,9 @@ impl PdScheduler {
             preempt_wake: None,
             recheck_preempt: false,
             restore_buf: Vec::new(),
+            prefix: prefix_caches,
+            prefix_affinity: self.cfg.sharding.placement
+                == Placement::PrefixAffinity,
         };
         if core.total > 0 {
             core.events.push(trace.requests[0].arrival, EventKind::Arrival);
@@ -922,6 +999,19 @@ impl PdScheduler {
             core.report.makespan_us = core.report.makespan_us.max(core.clock);
         }
 
+        // Fold per-instance cache counters before the report is taken —
+        // the caches die with the core.
+        if let Some(caches) = &core.prefix {
+            for c in caches {
+                let st = c.stats();
+                core.report.prefix_hits += st.hits;
+                core.report.prefix_misses += st.misses;
+                core.report.prefix_hit_tokens += st.hit_tokens;
+                core.report.prefix_evictions += st.evictions;
+                core.report.prefix_evicted_tokens += st.evicted_tokens;
+                core.report.prefix_resident_tokens += c.resident_tokens();
+            }
+        }
         // Take the report out and drop the core explicitly: dropping the
         // core joins the executor workers (clean shutdown, even when a
         // shard's event partition drained early) before final assembly.
@@ -1002,6 +1092,13 @@ struct RunCore<'a> {
     /// Checkpoint-restored requests awaiting their `RestoreReady` event:
     /// (due time, decode instance whose owner shard requeues them, entry).
     restore_buf: Vec<(Micros, usize, QueuedReq)>,
+    /// One simulated radix prefix cache per decode instance, present only
+    /// when `prefix.enabled`. `None` short-circuits every prefix path to
+    /// a single branch — the disabled byte-identity contract.
+    prefix: Option<Vec<PrefixCache>>,
+    /// `sharding.placement == PrefixAffinity`: arrivals with a resident
+    /// prefix match bypass the load-based router for the owning shard.
+    prefix_affinity: bool,
 }
 
 impl<'a> RunCore<'a> {
@@ -1076,8 +1173,28 @@ impl<'a> RunCore<'a> {
             && trace.requests[self.next_arrival].arrival <= self.clock
         {
             let r = &trace.requests[self.next_arrival];
-            let si = self.shards.route(r.id, &self.decode, self.per_decode_budget);
-            self.shards.get_mut(si).planner.admit(r, self.clock);
+            // Cache-affinity intercept: under `prefix_affinity`, an
+            // arrival whose lineage has resident blocks somewhere routes
+            // to the shard fronting the instance with the longest match
+            // (ties → lowest instance). Everything else — and every
+            // other placement policy — takes the load-based router.
+            let (si, hint) = match self.resident_match(r) {
+                Some((di, m)) => (self.shards.route_to(self.shards.owner_of(di)), m),
+                None => (
+                    self.shards.route(r.id, &self.decode, self.per_decode_budget),
+                    0,
+                ),
+            };
+            if hint > 0 {
+                // The hint rides the queue as `cached_len` so bucket
+                // keying and batch formation see the uncached suffix;
+                // dispatch re-stamps it with the actual hit.
+                let mut hinted = r.clone();
+                hinted.prefix_cached_hint = hint.min(hinted.input_len);
+                self.shards.get_mut(si).planner.admit(&hinted, self.clock);
+            } else {
+                self.shards.get_mut(si).planner.admit(r, self.clock);
+            }
             self.monitor.on_arrival(si, self.clock, r.input_len);
             self.next_arrival += 1;
         }
@@ -1089,14 +1206,88 @@ impl<'a> RunCore<'a> {
         }
     }
 
+    /// The decode instance holding the longest resident prefix of `r`,
+    /// with the match length in tokens — the cache-affinity placement
+    /// signal. `None` unless `prefix_affinity` is on, the caches are
+    /// armed, and some instance actually has resident blocks for this
+    /// lineage (a zero-token match must fall back to load-based routing,
+    /// not pile every lineage-mate onto shard 0). Ties keep the lowest
+    /// instance index so routing is deterministic.
+    fn resident_match(&self, r: &Request) -> Option<(usize, u32)> {
+        if !self.prefix_affinity {
+            return None;
+        }
+        let caches = self.prefix.as_ref()?;
+        let shareable = r.prefix_len.min(r.input_len);
+        let mut best: Option<(usize, u32)> = None;
+        for (di, c) in caches.iter().enumerate() {
+            let m = c.match_len(r.prefix_id, shareable);
+            if m > 0 && best.is_none_or(|(_, bm)| m > bm) {
+                best = Some((di, m));
+            }
+        }
+        best
+    }
+
     /// Run a work-stealing pass and mirror any moves into the monitor's
     /// per-shard queue depths and the run report.
+    ///
+    /// With the prefix caches armed, victim selection is locality-aware:
+    /// each potential victim's queued lineages (deduped, longest
+    /// shareable run) are scored by their best resident match on the
+    /// thief's instances minus their best match on the victim's own —
+    /// see [`balance::steal_victim_with_affinity`]. Queues with no
+    /// lineage anywhere skip the scoring entirely and fall back to the
+    /// legacy queue-depth policy.
     fn rebalance_shards(&mut self) {
-        let moves = self.shards.rebalance(
-            self.clock,
-            &self.decode,
-            self.per_decode_budget,
-        );
+        let gain_inputs: Option<(Vec<Vec<(u64, u32)>>, Vec<Vec<usize>>)> =
+            match &self.prefix {
+                Some(_) if self.shards.n() > 1 => {
+                    let lineages: Vec<Vec<(u64, u32)>> = (0..self.shards.n())
+                        .map(|si| self.shards.get(si).planner.lineage_summary())
+                        .collect();
+                    if lineages.iter().all(|l| l.is_empty()) {
+                        None
+                    } else {
+                        let owned: Vec<Vec<usize>> = (0..self.shards.n())
+                            .map(|si| self.shards.get(si).owned.clone())
+                            .collect();
+                        Some((lineages, owned))
+                    }
+                }
+                _ => None,
+            };
+        let moves = match (&self.prefix, &gain_inputs) {
+            (Some(caches), Some((lineages, owned))) => {
+                let best_match = |si: usize, pid: u64, len: u32| -> i64 {
+                    owned[si]
+                        .iter()
+                        .map(|&di| caches[di].match_len(pid, len) as i64)
+                        .max()
+                        .unwrap_or(0)
+                };
+                let gain = |victim: usize, thief: usize| -> i64 {
+                    lineages[victim]
+                        .iter()
+                        .map(|&(pid, len)| {
+                            best_match(thief, pid, len)
+                                - best_match(victim, pid, len)
+                        })
+                        .sum()
+                };
+                self.shards.rebalance_with_affinity(
+                    self.clock,
+                    &self.decode,
+                    self.per_decode_budget,
+                    Some(&gain),
+                )
+            }
+            _ => self.shards.rebalance(
+                self.clock,
+                &self.decode,
+                self.per_decode_budget,
+            ),
+        };
         for (from, to, n) in moves {
             self.monitor.on_steal(from, to, n);
             self.report.steals += n as u64;
@@ -1159,6 +1350,10 @@ impl<'a> RunCore<'a> {
                         // and boundary-wait latency stay TTFT-side
                         // effects.
                         last_token_at: p.done_at + transfer,
+                        // Dispatch's re-stamp rides along so completion
+                        // and eviction release exactly the pins this
+                        // sequence holds.
+                        prefix: r.prefix,
                     }
                 }
                 None => {
@@ -1178,6 +1373,7 @@ impl<'a> RunCore<'a> {
                         ready_at: p.done_at + transfer,
                         tbt_us: r.tbt_us,
                         last_token_at: p.done_at + transfer,
+                        prefix: r.prefix,
                     }
                 }
             };
@@ -1229,8 +1425,24 @@ impl<'a> RunCore<'a> {
             d.reserved_tokens = d.reserved_tokens.saturating_sub(f.footprint);
             self.monitor.kv_release(shard, f.footprint);
             self.monitor.on_decode_exit(1);
+            // A completed sequence's shared-prefix pins unpin; the blocks
+            // stay resident (cache-charged) until LRU eviction reclaims
+            // them, which is the whole point of cross-request reuse.
+            self.release_prefix_pins(o.di, &f.prefix);
             self.engine.release(f.completion.id);
             self.report.completions.push(f.completion);
+        }
+    }
+
+    /// Drop one departing sequence's refcounts on its pinned prefix
+    /// blocks. A single branch when the subsystem is off or the sequence
+    /// never pinned anything.
+    fn release_prefix_pins(&mut self, di: usize, stamp: &PrefixStamp) {
+        if stamp.shared_len == 0 {
+            return;
+        }
+        if let Some(caches) = &mut self.prefix {
+            caches[di].release(stamp.prefix_id, stamp.shared_len);
         }
     }
 
@@ -1508,6 +1720,9 @@ impl<'a> RunCore<'a> {
             * elapsed as u128
             / p.duration.max(1) as u128) as u64;
         self.report.prefill_aborts += 1;
+        // Release the deduplicated reservations dispatch charged; the
+        // blocks the dispatch *inserted* stay resident on the cache's own
+        // books (still useful to whoever re-dispatches).
         let footprint: u64 = p
             .formed
             .reqs
@@ -1518,8 +1733,19 @@ impl<'a> RunCore<'a> {
         let d = self.decode.get_mut(p.target_decode);
         d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
         self.monitor.kv_release(si, footprint);
-        self.monitor.on_requeue(si, p.formed.reqs.len());
-        self.shards.get_mut(si).planner.absorb(p.formed.reqs, self.clock);
+        let mut reqs = p.formed.reqs;
+        if self.prefix.is_some() {
+            // Unpin and strip acquisition state: a requeued request
+            // reserves its full context again and re-acquires (possibly
+            // re-hitting) at its next dispatch. Lineage survives.
+            for r in reqs.iter_mut() {
+                self.release_prefix_pins(p.target_decode, &r.prefix);
+                r.prefix.cached_len = 0;
+                r.prefix.shared_len = 0;
+            }
+        }
+        self.monitor.on_requeue(si, reqs.len());
+        self.shards.get_mut(si).planner.absorb(reqs, self.clock);
     }
 
     /// Eviction mechanism shared by preemption trigger (b) and the
@@ -1544,6 +1770,11 @@ impl<'a> RunCore<'a> {
         };
         self.monitor.kv_release(si, footprint);
         self.monitor.on_decode_exit(1);
+        // The evicted sequence's prefix pins drop with it; the
+        // checkpoint entry keeps lineage but zeroes acquisition state
+        // (`checkpoint_seq`), so the restore reserves full context and
+        // re-acquires at its recompute dispatch.
+        self.release_prefix_pins(di, &s.prefix);
         self.engine.release(s.id);
         let ckpt = self.engine.checkpoint(s.generated);
         let entry = self.preempt.checkpoint_seq(&s);
@@ -1608,6 +1839,18 @@ impl<'a> RunCore<'a> {
     /// those at this same boundary, so an active-only projection would
     /// systematically undershoot the iteration that actually launches
     /// (trigger (a)'s `tbt_target` counts them for the same reason).
+    ///
+    /// Predicate split (the boundary-to-boundary accounting fix,
+    /// mirrored from the dispatch gate): *actives* have a live
+    /// inter-token clock, so their risk is anchor-charged
+    /// (`deadline_at_risk` — projected iteration plus time already
+    /// burned since their last token). A *due-pending* member's anchor
+    /// is its hand-off landing, which predates the boundary it joins
+    /// at — its gap clock re-anchors on admission, so charging the
+    /// pre-boundary wait against it double-counts and trips the trigger
+    /// spuriously. Pending members are therefore scored
+    /// boundary-to-boundary (`iteration_at_risk`): the projected
+    /// iteration alone against their budgets.
     fn tbt_instance_at_risk(&self, di: usize) -> bool {
         let d = self.decode.get(di);
         let clock = self.clock;
@@ -1619,29 +1862,37 @@ impl<'a> RunCore<'a> {
         let ctx =
             active_ctx(d.active.iter().chain(d.pending.iter().filter(due)));
         let projected = self.engine.projected_decode_us(n, ctx);
-        self.admission.deadline_at_risk(
-            d.active.iter().chain(d.pending.iter().filter(due)),
-            projected,
-            clock,
-        )
+        self.admission.deadline_at_risk(d.active.iter(), projected, clock)
+            || self
+                .admission
+                .iteration_at_risk(d.pending.iter().filter(due), projected)
     }
 
     /// The evict pass's floor: the projected iteration over only the
     /// resident online members (active + due pending — none of which the
-    /// pass may evict) against their own deadlines.
+    /// pass may evict) against their own deadlines, with the same
+    /// active/pending predicate split as [`RunCore::tbt_instance_at_risk`]
+    /// so the floor can never be *easier* to trip than the trigger.
     fn tbt_online_floor_at_risk(&self, di: usize) -> bool {
         let d = self.decode.get(di);
         let clock = self.clock;
-        let online: Vec<&DecodeSeqState> = d
-            .active
+        let online = |s: &&DecodeSeqState| s.class == RequestClass::Online;
+        let active: Vec<&DecodeSeqState> =
+            d.active.iter().filter(online).collect();
+        let pending: Vec<&DecodeSeqState> = d
+            .pending
             .iter()
-            .chain(d.pending.iter().filter(|s| s.ready_at <= clock))
-            .filter(|s| s.class == RequestClass::Online)
+            .filter(|s| s.ready_at <= clock)
+            .filter(online)
             .collect();
-        let ctx = active_ctx(online.iter().copied());
-        let floor = self.engine.projected_decode_us(online.len(), ctx);
+        let ctx = active_ctx(active.iter().copied())
+            + active_ctx(pending.iter().copied());
+        let floor = self
+            .engine
+            .projected_decode_us(active.len() + pending.len(), ctx);
         self.admission
-            .deadline_at_risk(online.into_iter(), floor, clock)
+            .deadline_at_risk(active.into_iter(), floor, clock)
+            || self.admission.iteration_at_risk(pending.into_iter(), floor)
     }
 
     /// The admission layer's trigger (a) decision for a formed batch: the
@@ -1820,11 +2071,59 @@ impl<'a> RunCore<'a> {
                     }
                 }
             }
-            let Some((si, ti, formed)) = chosen else { break };
+            let Some((si, ti, mut formed)) = chosen else { break };
             let had_pending = self.preempt.pending().is_some();
             self.preempt.on_dispatch(&formed.reqs);
             if had_pending && self.preempt.pending().is_none() {
                 self.recheck_preempt = true;
+            }
+            // Prefix-cache acquisition, now that the target instance is
+            // known: each request's stamp is rewritten with the *actual*
+            // hit (`cached_len` — compute it saves) and the pinned run
+            // (`shared_len` — KV it need not reserve). Insertions charge
+            // the instance's books (the cache owns resident blocks);
+            // LRU evictions release theirs.
+            if let Some(caches) = &mut self.prefix {
+                let cache = &mut caches[ti];
+                let mut inserted = 0u64;
+                let mut evicted = 0u64;
+                for r in formed.reqs.iter_mut() {
+                    let shareable = r.prefix.prefix_len.min(r.len);
+                    let a = cache.acquire(r.prefix.prefix_id, shareable);
+                    r.prefix.cached_len = a.hit_tokens;
+                    r.prefix.shared_len = a.pinned_len;
+                    inserted += a.inserted_tokens;
+                    evicted += a.evicted_tokens;
+                }
+                let d = self.decode.get_mut(ti);
+                d.reserved_tokens =
+                    (d.reserved_tokens + inserted).saturating_sub(evicted);
+                self.monitor.kv_reserve(si, inserted);
+                self.monitor.kv_release(si, evicted);
+                // Price prefill on the uncached suffixes only: the batch
+                // the engine executes shrinks to what actually needs
+                // computing (padded among the suffixes). Hit-free
+                // batches keep their original padding so a cold cache
+                // prices exactly like the baseline.
+                if formed.reqs.iter().any(|r| r.prefix.cached_len > 0) {
+                    let items: Vec<PrefillItem> = formed
+                        .reqs
+                        .iter()
+                        .map(|r| PrefillItem {
+                            id: r.id,
+                            len: r.len.saturating_sub(r.prefix.cached_len).max(1),
+                            tokens: vec![],
+                        })
+                        .collect();
+                    let padded_len = items
+                        .iter()
+                        .map(|i| i.len)
+                        .max()
+                        .unwrap_or(1)
+                        .min(formed.batch.padded_len)
+                        .max(1);
+                    formed.batch = PrefillBatch { items, padded_len };
+                }
             }
             let footprint: u64 = formed
                 .reqs
@@ -2441,6 +2740,7 @@ mod tests {
                             arrival: req.arrival,
                             class: req.class,
                             tbt_us: 0,
+                            prefix: PrefixStamp::default(),
                         });
                         next_id += 1;
                     }
@@ -2538,6 +2838,51 @@ mod tests {
         }
         assert_eq!(pre.evicted_kv_tokens > 0, pre.decode_evictions > 0);
         assert_eq!(pre.recompute_tokens > 0, pre.decode_evictions > 0);
+    }
+
+    #[test]
+    fn prefix_disabled_is_inert_and_enabled_cuts_prefill_cost() {
+        // Off by default: zero counters, flag off, and aggressive knobs
+        // behind the master switch change nothing. Armed on a multi-turn
+        // trace: later turns hit the cache, prefill prices only uncached
+        // suffixes, and the run still conserves every request.
+        let mut cfg = small_cfg();
+        let trace = Trace::multi_turn(
+            Dataset::Alpaca, 6, 5, 4.0, cfg.model.max_seq, 61,
+        );
+        let off = run_bucketserve(&cfg, &trace);
+        assert!(!off.prefix_enabled);
+        assert_eq!(off.prefix_hits, 0);
+        assert_eq!(off.prefix_hit_tokens, 0);
+        assert_eq!(off.prefix_resident_tokens, 0);
+        cfg.prefix.block = 16;
+        cfg.prefix.cache_frac = 0.9;
+        let knobs = run_bucketserve(&cfg, &trace);
+        assert_eq!(off.makespan_us, knobs.makespan_us);
+        assert_eq!(off.prefill_busy_us, knobs.prefill_busy_us);
+        assert_eq!(off.decode_iters, knobs.decode_iters);
+        assert_eq!(knobs.prefix_hits, 0);
+
+        cfg.prefix.enabled = true;
+        let on = run_bucketserve(&cfg, &trace);
+        assert_eq!(on.completions.len(), trace.len());
+        assert!(on.error.is_none(), "{:?}", on.error);
+        let mut ids: Vec<_> = on.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "exactly-once completion");
+        assert!(on.prefix_enabled);
+        assert!(
+            on.prefix_hits > 0 && on.prefix_hit_tokens > 0,
+            "session turns share prefixes; the cache must hit: {:?}",
+            (on.prefix_hits, on.prefix_misses)
+        );
+        assert!(
+            on.prefill_busy_us < off.prefill_busy_us,
+            "suffix-only prefill {} must undercut full prefill {}",
+            on.prefill_busy_us,
+            off.prefill_busy_us
+        );
     }
 
     #[test]

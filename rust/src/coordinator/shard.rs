@@ -161,7 +161,11 @@ impl ShardSet {
                     match placement {
                         Placement::Hash => {}
                         Placement::LeastLoaded => l.queued = s.planner.queued(),
-                        Placement::JoinShortestKv => {
+                        // Prefix-affinity arrivals with a resident match
+                        // never reach this policy (the scheduler routes
+                        // them via `route_to`); the rest fall back to
+                        // join-shortest-KV.
+                        Placement::JoinShortestKv | Placement::PrefixAffinity => {
                             l.queued_tokens = s.planner.queued_tokens();
                             l.kv_reserved = s
                                 .owned
@@ -175,6 +179,15 @@ impl ShardSet {
                 .collect();
             self.router.choose(id, &loads)
         };
+        self.shards[si].stats.routed += 1;
+        si
+    }
+
+    /// Route one arrival to an explicitly chosen shard, keeping the
+    /// `routed` accounting consistent with [`ShardSet::route`]. Used by
+    /// the prefix-affinity intercept, which picks the shard owning the
+    /// longest resident prefix match before the load policies run.
+    pub fn route_to(&mut self, si: usize) -> usize {
         self.shards[si].stats.routed += 1;
         si
     }
@@ -244,6 +257,22 @@ impl ShardSet {
         decode: &DecodeFleet,
         per_budget: u64,
     ) -> Vec<(usize, usize, usize)> {
+        self.rebalance_with_affinity(now, decode, per_budget, None)
+    }
+
+    /// [`ShardSet::rebalance`] with an optional locality score for victim
+    /// selection: `steal_gain(victim, thief)` values what moving the
+    /// victim's stolen tail onto the thief is worth to the prefix caches
+    /// (see [`balance::steal_victim_with_affinity`]). `None` — the
+    /// prefix subsystem off, or no lineage in any queue — is exactly the
+    /// queue-depth policy.
+    pub fn rebalance_with_affinity(
+        &mut self,
+        now: Micros,
+        decode: &DecodeFleet,
+        per_budget: u64,
+        steal_gain: Option<&dyn Fn(usize, usize) -> i64>,
+    ) -> Vec<(usize, usize, usize)> {
         if !self.steal_enabled() {
             return Vec::new();
         }
@@ -262,7 +291,15 @@ impl ShardSet {
             }
             let queued: Vec<usize> =
                 self.shards.iter().map(|s| s.planner.queued()).collect();
-            let Some(victim) = balance::steal_victim(thief, &queued, 2) else {
+            let gains: Vec<i64> = match steal_gain {
+                Some(f) => (0..self.shards.len())
+                    .map(|v| if v == thief { 0 } else { f(v, thief) })
+                    .collect(),
+                None => Vec::new(),
+            };
+            let Some(victim) = balance::steal_victim_with_affinity(
+                thief, &queued, 2, &gains,
+            ) else {
                 continue;
             };
             let want = queued[victim] / 2;
@@ -408,6 +445,54 @@ mod tests {
     }
 
     #[test]
+    fn affinity_gain_redirects_the_steal_victim() {
+        // Shards 0 and 1 both have backlog; idle shard 2 would steal from
+        // the deeper queue (shard 0) by default, but a gain function that
+        // says shard 1's tail belongs on the thief redirects the steal.
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 3, steal: true, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 3, || planner(&cfg));
+        let decode = DecodeFleet::new(3);
+        for id in 0..8u64 {
+            let r = req(id, 100, id);
+            set.get_mut(0).planner.admit(&r, id);
+        }
+        for id in 8..12u64 {
+            let r = req(id, 100, id);
+            set.get_mut(1).planner.admit(&r, id);
+        }
+        let gain = |victim: usize, _thief: usize| -> i64 {
+            if victim == 1 { 500 } else { 0 }
+        };
+        let moves =
+            set.rebalance_with_affinity(100, &decode, 10_000, Some(&gain));
+        assert_eq!(moves, vec![(1, 2, 2)], "gain overrides queue depth");
+        // And with no gain function the same setup steals from shard 0.
+        let mut set = ShardSet::new(&spec, 3, || planner(&cfg));
+        for id in 0..8u64 {
+            let r = req(id, 100, id);
+            set.get_mut(0).planner.admit(&r, id);
+        }
+        for id in 8..12u64 {
+            let r = req(id, 100, id);
+            set.get_mut(1).planner.admit(&r, id);
+        }
+        let moves = set.rebalance(100, &decode, 10_000);
+        assert_eq!(moves, vec![(0, 2, 4)]);
+    }
+
+    #[test]
+    fn route_to_counts_like_route() {
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 2, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        assert_eq!(set.route_to(1), 1);
+        assert_eq!(set.route_to(1), 1);
+        assert_eq!(set.get(1).stats.routed, 2);
+        assert_eq!(set.get(0).stats.routed, 0);
+    }
+
+    #[test]
     fn stealing_respects_gates() {
         let cfg = SystemConfig::default();
         // Disabled: no moves even with skew.
@@ -467,6 +552,7 @@ mod tests {
                     Placement::LeastLoaded,
                     Placement::JoinShortestKv,
                     Placement::Hash,
+                    Placement::PrefixAffinity,
                 ]),
                 steal: true,
             };

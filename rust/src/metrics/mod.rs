@@ -26,6 +26,10 @@
 //!   every run (so paired on/off comparisons can read the disabled side
 //!   off the `RunReport`), but disabled JSON stays legacy-shaped and
 //!   skips even the percentile sort.
+//! * the prefix-cache block (`prefix_hit_rate`, `prefix_hits`/
+//!   `prefix_misses`/`prefix_hit_tokens`, `prefix_evictions` +
+//!   `prefix_evicted_tokens`, `prefix_resident_tokens`) — only when
+//!   `prefix.enabled`.
 //! * `error` — only on abnormal termination; its presence means the row
 //!   must not be read as a clean result.
 //!
@@ -116,6 +120,19 @@ pub struct Summary {
     /// Per-class inter-token gaps exceeding their budget.
     pub tbt_violations_online: u64,
     pub tbt_violations_offline: u64,
+    /// Whether the prefix-cache subsystem was armed (gates the prefix
+    /// JSON block so disabled runs stay byte-identical to legacy output).
+    pub prefix_enabled: bool,
+    /// Cache acquisitions that found resident blocks / found none.
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// Prompt tokens served from cache (prefill compute saved).
+    pub prefix_hit_tokens: u64,
+    /// LRU evictions and the KV tokens they released.
+    pub prefix_evictions: u64,
+    pub prefix_evicted_tokens: u64,
+    /// Cache-resident KV tokens at run end.
+    pub prefix_resident_tokens: u64,
     /// Abnormal-termination diagnostics from the run (scheduler stall);
     /// a summary carrying this must not be read as a clean result.
     pub error: Option<String>,
@@ -215,7 +232,25 @@ impl Summary {
             tbt_p99_offline_ms: pct(&mut gaps_offline, 99.0),
             tbt_violations_online: r.tbt_violations_online,
             tbt_violations_offline: r.tbt_violations_offline,
+            prefix_enabled: r.prefix_enabled,
+            prefix_hits: r.prefix_hits,
+            prefix_misses: r.prefix_misses,
+            prefix_hit_tokens: r.prefix_hit_tokens,
+            prefix_evictions: r.prefix_evictions,
+            prefix_evicted_tokens: r.prefix_evicted_tokens,
+            prefix_resident_tokens: r.prefix_resident_tokens,
             error: r.error.clone(),
+        }
+    }
+
+    /// Fraction of cache acquisitions that found at least one resident
+    /// block (0 when the cache saw no traffic).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
         }
     }
 
@@ -311,6 +346,27 @@ impl Summary {
             fields.push((
                 "tbt_violations_offline",
                 Json::from(self.tbt_violations_offline),
+            ));
+        }
+        // Prefix-cache block only when the subsystem is armed: a default
+        // (prefix disabled) run's Summary JSON stays byte-identical to
+        // the pre-prefix scheduler's output.
+        if self.prefix_enabled {
+            fields.push(("prefix_hit_rate", Json::num(self.prefix_hit_rate())));
+            fields.push(("prefix_hits", Json::from(self.prefix_hits)));
+            fields.push(("prefix_misses", Json::from(self.prefix_misses)));
+            fields.push((
+                "prefix_hit_tokens",
+                Json::from(self.prefix_hit_tokens),
+            ));
+            fields.push(("prefix_evictions", Json::from(self.prefix_evictions)));
+            fields.push((
+                "prefix_evicted_tokens",
+                Json::from(self.prefix_evicted_tokens),
+            ));
+            fields.push((
+                "prefix_resident_tokens",
+                Json::from(self.prefix_resident_tokens),
             ));
         }
         if let Some(e) = &self.error {
@@ -452,6 +508,38 @@ mod tests {
         assert!(!parsed.get("tbt_p99_offline_ms").is_null());
         assert!(!parsed.get("tbt_violations_online").is_null());
         assert!(s.tbt_p50_online_ms > 0.0, "percentiles computed when on");
+    }
+
+    #[test]
+    fn prefix_block_only_when_enabled() {
+        let cfg = SystemConfig::default();
+        let trace = Trace::multi_turn(Dataset::Alpaca, 4, 4, 6.0, 4096, 17);
+        // Default config: prefix cache off → no prefix keys in the JSON,
+        // even on a lineage-stamped trace.
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(!r.prefix_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let j = s.to_json();
+        assert!(j.get("prefix_hit_rate").is_null());
+        assert!(j.get("prefix_hits").is_null());
+        assert!(j.get("prefix_resident_tokens").is_null());
+        assert_eq!(s.prefix_hit_rate(), 0.0, "no traffic → rate 0");
+        // Enabled run: the block appears, parses back, and the hit rate
+        // is consistent with its counters.
+        let mut cfg = SystemConfig::default();
+        cfg.prefix.enabled = true;
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(r.prefix_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert!(!parsed.get("prefix_hit_rate").is_null());
+        assert!(!parsed.get("prefix_misses").is_null());
+        assert!(!parsed.get("prefix_evictions").is_null());
+        assert!(!parsed.get("prefix_evicted_tokens").is_null());
+        assert!(!parsed.get("prefix_resident_tokens").is_null());
+        let hits = parsed.get("prefix_hits").as_u64().unwrap();
+        assert!(hits > 0, "multi-turn sessions must hit the cache");
+        assert!(s.prefix_hit_rate() > 0.0 && s.prefix_hit_rate() <= 1.0);
     }
 
     #[test]

@@ -58,6 +58,19 @@ pub struct Request {
     /// TBT-aware admission layer
     /// ([`crate::coordinator::admission::AdmissionEngine`]).
     pub tbt_deadline_us: u64,
+    /// Prefix lineage: requests sharing a `prefix_id != 0` share their
+    /// leading `prefix_len` prompt tokens (a system prompt plus, for
+    /// multi-turn sessions, the conversation so far). Stamped by trace
+    /// generators ([`crate::workload::Trace::multi_turn`]); 0 = no shared
+    /// prefix. Consumed by the prefix-cache subsystem
+    /// ([`crate::coordinator::prefix`]) — inert unless it is armed.
+    pub prefix_id: u64,
+    /// Length (tokens) of the shareable leading prefix; capped at
+    /// `input_len` by consumers. Meaningless when `prefix_id == 0`.
+    pub prefix_len: u32,
+    /// Runtime-only routing hint: the resident prefix match the placement
+    /// layer observed at arrival (never serialized; rewritten per run).
+    pub prefix_cached_hint: u32,
 }
 
 impl Request {
@@ -76,12 +89,23 @@ impl Request {
             arrival,
             tokens: Vec::new(),
             tbt_deadline_us: 0,
+            prefix_id: 0,
+            prefix_len: 0,
+            prefix_cached_hint: 0,
         }
     }
 
     /// Builder-style TBT-budget override (see [`Request::tbt_deadline_us`]).
     pub fn with_tbt_deadline(mut self, us: u64) -> Request {
         self.tbt_deadline_us = us;
+        self
+    }
+
+    /// Builder-style prefix-lineage stamp (see [`Request::prefix_id`]).
+    /// The shareable length is capped at the prompt length.
+    pub fn with_prefix(mut self, prefix_id: u64, prefix_len: u32) -> Request {
+        self.prefix_id = prefix_id;
+        self.prefix_len = prefix_len.min(self.input_len);
         self
     }
 
@@ -199,6 +223,16 @@ mod tests {
             class_tbt_budget_us(RequestClass::Offline, 0, &slo, 0.5),
             100_000
         );
+    }
+
+    #[test]
+    fn prefix_stamp_caps_at_prompt_length() {
+        let r = Request::new(1, RequestClass::Online, 100, 5, 0);
+        assert_eq!((r.prefix_id, r.prefix_len), (0, 0), "unstamped default");
+        let s = r.clone().with_prefix(7, 80);
+        assert_eq!((s.prefix_id, s.prefix_len), (7, 80));
+        let over = r.with_prefix(7, 400);
+        assert_eq!(over.prefix_len, 100, "shareable prefix caps at prompt");
     }
 
     #[test]

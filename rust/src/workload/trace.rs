@@ -90,6 +90,54 @@ impl Trace {
         Trace { requests }
     }
 
+    /// Multi-turn chat sessions — the prefix-cache subsystem's target
+    /// workload. `n_sessions` concurrent sessions each run
+    /// `turns_per_session` online turns; requests arrive as one global
+    /// Poisson stream at `rps`, round-robined across sessions so turn
+    /// order within a session follows arrival order. Session `s` carries
+    /// lineage `prefix_id = s + 1`, its turns share a per-session system
+    /// prompt, and every turn's prompt is the full conversation so far
+    /// (context + the turn's fresh user text, capped at `max_seq`):
+    /// `prefix_len` marks the shared context, so an armed prefix cache
+    /// can serve each turn from the previous turn's resident KV. The
+    /// stamps are inert unless the run arms
+    /// [`crate::config::PrefixSpec`].
+    pub fn multi_turn(
+        dataset: Dataset,
+        n_sessions: usize,
+        turns_per_session: usize,
+        rps: f64,
+        max_seq: u32,
+        seed: u64,
+    ) -> Trace {
+        assert!(n_sessions > 0 && turns_per_session > 0);
+        let mut len_rng = Pcg::new(seed, 1);
+        let mut arr = Poisson::new(rps, Pcg::new(seed, 2));
+        let mut sys_rng = Pcg::new(seed, 3);
+        let sampler = dataset.sampler(max_seq);
+        // Per-session shared system prompt and running context length.
+        let mut context: Vec<u32> = (0..n_sessions)
+            .map(|_| (sys_rng.range_u64(64, 512) as u32).min(max_seq))
+            .collect();
+        let n = n_sessions * turns_per_session;
+        let mut t: Micros = 0;
+        let mut requests = Vec::with_capacity(n);
+        for k in 0..n {
+            t = arr.next_after(t);
+            let s = k % n_sessions;
+            let (fresh, output) = sampler.sample(&mut len_rng);
+            let shared = context[s];
+            let input = shared.saturating_add(fresh.max(1)).min(max_seq);
+            requests.push(
+                Request::new(k as u64, RequestClass::Online, input, output, t)
+                    .with_prefix(s as u64 + 1, shared),
+            );
+            // Next turn replays this turn's full exchange as context.
+            context[s] = input.saturating_add(output).min(max_seq);
+        }
+        Trace { requests }
+    }
+
     /// Stamp per-class TBT budgets onto every request (builder-style):
     /// a nonzero value overrides that class's per-token budget, 0 leaves
     /// the class at the run-time default (`slo.tbt_us` for online,
@@ -156,6 +204,13 @@ impl Trace {
                             Json::from(r.tbt_deadline_us),
                         ));
                     }
+                    if r.prefix_id != 0 {
+                        fields.push(("prefix_id", Json::from(r.prefix_id)));
+                        fields.push((
+                            "prefix_len",
+                            Json::from(r.prefix_len as u64),
+                        ));
+                    }
                     Json::obj(fields)
                 })
                 .collect(),
@@ -180,6 +235,12 @@ impl Trace {
             );
             req.tbt_deadline_us =
                 item.get("tbt_deadline_us").as_u64().unwrap_or(0);
+            req.prefix_id = item.get("prefix_id").as_u64().unwrap_or(0);
+            req.prefix_len = item
+                .get("prefix_len")
+                .as_u64()
+                .unwrap_or(0)
+                .min(req.input_len as u64) as u32;
             requests.push(req);
         }
         requests.sort_by_key(|r| r.arrival);
@@ -252,6 +313,61 @@ mod tests {
             .all(|r| r.arrival == 0));
         let ids: Vec<u64> = t.requests.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..50).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn multi_turn_sessions_share_growing_prefixes() {
+        let t = Trace::multi_turn(Dataset::Alpaca, 4, 5, 8.0, 4096, 11);
+        assert_eq!(t.len(), 20);
+        assert!(t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(t.requests.iter().all(|r| r.class == RequestClass::Online));
+        // Deterministic for a seed.
+        let t2 = Trace::multi_turn(Dataset::Alpaca, 4, 5, 8.0, 4096, 11);
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!((a.input_len, a.prefix_id, a.prefix_len),
+                       (b.input_len, b.prefix_id, b.prefix_len));
+        }
+        for sid in 1..=4u64 {
+            let turns: Vec<&Request> = t
+                .requests
+                .iter()
+                .filter(|r| r.prefix_id == sid)
+                .collect();
+            assert_eq!(turns.len(), 5, "round-robin fills every session");
+            // First turn shares only the system prompt; every later
+            // turn's shared context is the previous turn's full exchange
+            // (capped), so the prefix grows monotonically.
+            assert!(turns[0].prefix_len >= 64);
+            for w in turns.windows(2) {
+                assert!(w[1].prefix_len >= w[0].prefix_len);
+                assert_eq!(
+                    w[1].prefix_len,
+                    (w[0].input_len + w[0].output_len).min(4096),
+                    "turn context replays the prior exchange"
+                );
+            }
+            for r in &turns {
+                assert!(r.prefix_len <= r.input_len);
+                assert!(r.input_len <= 4096);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_lineage_round_trips_and_unstamped_traces_omit_keys() {
+        let plain = Trace::generate(
+            Dataset::Alpaca, 10, 8.0, RequestClass::Online, 4096, 3,
+        );
+        assert!(!plain.to_json().to_string().contains("prefix_id"));
+        let t = Trace::multi_turn(Dataset::Alpaca, 3, 4, 8.0, 4096, 7);
+        let j = t.to_json().to_string();
+        assert!(j.contains("prefix_id") && j.contains("prefix_len"));
+        let t2 = Trace::from_json(&Json::parse(&j).unwrap()).unwrap();
+        for (a, b) in t.requests.iter().zip(&t2.requests) {
+            assert_eq!(a.prefix_id, b.prefix_id);
+            assert_eq!(a.prefix_len, b.prefix_len);
+            assert_eq!(b.prefix_cached_hint, 0, "runtime hint never persists");
+        }
     }
 
     #[test]

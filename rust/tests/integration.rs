@@ -130,10 +130,15 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
     // sharding/placement settings swept here. The TBT-admission subsystem
     // extends it again: with `admission.enabled = false` (the default)
     // its knobs are equally inert and no TBT key appears in the JSON,
-    // even though gap measurement itself runs. bucket_overhead_ns is the
-    // one wall-clock (hence nondeterministic) field and is normalized
-    // before comparison; everything else (makespans, per-class SLOs,
-    // counts) is virtual-time deterministic.
+    // even though gap measurement itself runs. The prefix-cache subsystem
+    // is the newest party to the contract: with `prefix.enabled = false`
+    // (the default) no cache is built, no stamp ever carries nonzero
+    // cached/shared tokens, and no prefix key appears in the JSON — even
+    // under the `prefix_affinity` placement (which falls back to
+    // join-shortest-KV) and aggressive block/frac knobs. bucket_overhead_ns
+    // is the one wall-clock (hence nondeterministic) field and is
+    // normalized before comparison; everything else (makespans, per-class
+    // SLOs, counts) is virtual-time deterministic.
     let trace = Trace::mixed_classes(
         Dataset::Alpaca, 40, 8.0, Dataset::LongBench, 20, 4096, 33,
     );
@@ -161,9 +166,18 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 && !baseline.contains("admission_deferrals"),
             "admission disabled must not grow the Summary JSON: {baseline}"
         );
-        for placement in
-            [Placement::LeastLoaded, Placement::JoinShortestKv, Placement::Hash]
-        {
+        assert!(
+            !baseline.contains("prefix_hit")
+                && !baseline.contains("prefix_evictions")
+                && !baseline.contains("prefix_resident_tokens"),
+            "prefix disabled must not grow the Summary JSON: {baseline}"
+        );
+        for placement in [
+            Placement::LeastLoaded,
+            Placement::JoinShortestKv,
+            Placement::Hash,
+            Placement::PrefixAffinity,
+        ] {
             for steal in [false, true] {
                 let mut cfg = SystemConfig::default();
                 cfg.sharding.shards = 1;
@@ -178,6 +192,9 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 cfg.admission.slack_margin = 0.99;
                 cfg.admission.offline_tbt_factor = 1.0;
                 cfg.admission.max_evictions = 64;
+                // And every prefix knob except its master switch.
+                cfg.prefix.block = 1;
+                cfg.prefix.cache_frac = 1.0;
                 // And the executor: with one shard, any thread count
                 // resolves to the sequential path, so `threads = 1`
                 // stays byte-identical to the pre-executor scheduler.
@@ -186,7 +203,7 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                     summary(system, &cfg),
                     baseline,
                     "{} diverged with shards=1 placement={} steal={steal} \
-                     preempt-and-admission-knobs-armed",
+                     preempt-admission-and-prefix-knobs-armed",
                     system.name(),
                     placement.name(),
                 );
@@ -204,37 +221,52 @@ fn executor_determinism_matrix_across_threads_and_features() {
     // `threads = 1` run. Only `bucket_overhead_ns` — the one wall-clock
     // field — is normalized. The matrix crosses the subsystems whose
     // scheduling the executor must not perturb: priority, preemption,
-    // and TBT admission, over a sharded fleet with stealing on.
-    let features: [(bool, bool, bool); 5] = [
-        (false, false, false),
-        (true, false, false),
-        (true, true, false),
-        (true, false, true),
-        (true, true, true),
+    // TBT admission, and the prefix cache, over a sharded fleet with
+    // stealing on. Prefix-armed rows run a multi-turn trace under the
+    // affinity placement so dispatch acquisitions, pin releases, and LRU
+    // evictions all actually fire — all of which mutate cache state on
+    // the merge loop and must be invisible to the thread count.
+    let features: [(bool, bool, bool, bool); 7] = [
+        (false, false, false, false),
+        (true, false, false, false),
+        (true, true, false, false),
+        (true, false, true, false),
+        (true, true, true, false),
+        (false, false, false, true),
+        (true, true, true, true),
     ];
     for seed in [33u64, 77] {
-        let trace = Trace::mixed_classes(
+        let mixed = Trace::mixed_classes(
             Dataset::Alpaca, 30, 10.0, Dataset::LongBench, 15, 4096, seed,
         );
-        for &(priority, preempt, admission) in &features {
+        let turns = Trace::multi_turn(Dataset::Alpaca, 8, 4, 12.0, 4096, seed);
+        for &(priority, preempt, admission, prefix) in &features {
+            let trace = if prefix { &turns } else { &mixed };
             let mut base = SystemConfig::default();
             base.fleet.n_prefill = 2;
             base.fleet.n_decode = 4;
             base.sharding.shards = 0; // one shard per decode instance
-            base.sharding.placement = Placement::Hash;
+            base.sharding.placement = if prefix {
+                Placement::PrefixAffinity
+            } else {
+                Placement::Hash
+            };
             base.sharding.steal = true;
             base.priority.enabled = priority;
             base.preempt.enabled = preempt;
             base.admission.enabled = admission;
+            base.prefix.enabled = prefix;
             // Tight budgets so the armed subsystems actually fire inside
-            // the matrix (aborts, evictions, deferrals), not just idle.
+            // the matrix (aborts, evictions, deferrals, cache churn), not
+            // just idle. The small cache_frac forces LRU evictions.
             base.slo.ttft_us = 2_000_000;
             base.slo.tbt_us = 40_000;
             base.preempt.urgency_threshold = 0.5;
+            base.prefix.cache_frac = 0.05;
             let summary = |threads: u32| {
                 let mut cfg = base.clone();
                 cfg.executor.threads = threads;
-                let mut r = System::BucketServe.run_sim(&cfg, &trace);
+                let mut r = System::BucketServe.run_sim(&cfg, trace);
                 let resolved = r.executor_threads;
                 r.bucket_overhead_ns = 0; // wall clock: the one normalized field
                 let json = Summary::from_report("BucketServe", &r, &cfg.slo)
@@ -251,7 +283,7 @@ fn executor_determinism_matrix_across_threads_and_features() {
                     parallel, sequential,
                     "threads={threads} diverged from sequential \
                      (priority={priority} preempt={preempt} \
-                     admission={admission} seed={seed})"
+                     admission={admission} prefix={prefix} seed={seed})"
                 );
             }
         }
@@ -433,22 +465,36 @@ fn prop_sharded_serving_conserves_requests() {
         cfg.admission.slack_margin = g.f64_in(0.0, 0.5);
         cfg.admission.max_evictions = g.usize(1, 8) as u32;
         cfg.slo.tbt_us = g.u64(25_000, 120_000);
+        // The prefix cache must conserve too: random block sizes and
+        // tight budgets churn the LRU, and deduplicated KV books (the
+        // cache holding shared-block reservations on requests' behalf)
+        // must still land every completion with its original token split.
+        cfg.prefix.enabled = g.bool();
+        cfg.prefix.block = g.usize(8, 128) as u32;
+        cfg.prefix.cache_frac = g.f64_in(0.02, 0.9);
+        if cfg.prefix.enabled && g.bool() {
+            cfg.sharding.placement = Placement::PrefixAffinity;
+        }
         let n = g.usize(5, 60);
         let rps = g.f64_in(1.0, 40.0);
         let seed = g.u64(0, 1 << 30);
         // Mixed-class traces exercise the eviction path (victims are
         // offline-only); single-class online traces exercise the abort
-        // path against less-urgent online batches.
-        let trace = if g.bool() {
-            Trace::mixed_classes(
+        // path against less-urgent online batches; multi-turn traces
+        // carry the lineage stamps the prefix cache feeds on.
+        let trace = match g.usize(0, 2) {
+            0 => Trace::mixed_classes(
                 Dataset::Alpaca, n, rps, Dataset::LongBench, g.usize(5, 25),
                 cfg.model.max_seq, seed,
-            )
-        } else {
-            Trace::generate(
+            ),
+            1 => Trace::generate(
                 Dataset::Mixed, n, rps, RequestClass::Online,
                 cfg.model.max_seq, seed,
-            )
+            ),
+            _ => Trace::multi_turn(
+                Dataset::Alpaca, (n / 4).max(1), 4, rps,
+                cfg.model.max_seq, seed,
+            ),
         };
         let total = trace.len();
         let sys = *g.pick(&[System::BucketServe, System::DistServe]);
@@ -468,6 +514,28 @@ fn prop_sharded_serving_conserves_requests() {
         }
         if !cfg.admission.enabled {
             assert_eq!(r.admission_deferrals + r.tbt_evictions, 0);
+        }
+        if cfg.prefix.enabled {
+            // Every LRU eviction frees exactly one block: the token
+            // counter and the event counter must stay in lockstep or the
+            // deduplicated KV books have drifted.
+            assert_eq!(
+                r.prefix_evicted_tokens,
+                r.prefix_evictions * cfg.prefix.block as u64,
+                "{} eviction books",
+                sys.name()
+            );
+        } else {
+            assert_eq!(
+                r.prefix_hits
+                    + r.prefix_misses
+                    + r.prefix_hit_tokens
+                    + r.prefix_evictions
+                    + r.prefix_resident_tokens,
+                0,
+                "{} prefix counters must stay silent when disabled",
+                sys.name()
+            );
         }
         for c in &r.completions {
             assert!(c.first_token >= c.arrival);
@@ -565,6 +633,98 @@ fn tbt_admission_rescues_online_tbt_under_decode_oversubscription() {
     if on.tbt_evictions > 0 {
         assert!(on.tbt_evicted_kv_tokens > 0 && on.tbt_recompute_tokens > 0);
     }
+}
+
+#[test]
+fn prefix_cache_hit_reduces_prefill_cost() {
+    // The prefix subsystem's acceptance scenario: multi-turn chat
+    // sessions whose growing conversation prefixes are the cache's food,
+    // over a sharded fleet under deliberate backlog (so makespan tracks
+    // total prefill work, not arrival pacing). Three claims:
+    //
+    //  1. Arming the cache cuts measured prefill GPU time — turns are
+    //     priced on their uncached suffix only.
+    //  2. `prefix_affinity` placement beats both lineage-blind policies
+    //     (`hash`, `least_loaded`) on cache hit rate AND throughput:
+    //     keeping a session's turns on the instance that already holds
+    //     their KV is what converts shared context into hits.
+    //  3. The hit/eviction counters stay consistent with the
+    //     deduplicated KV accounting, and conservation holds throughout.
+    let mut base = SystemConfig::default();
+    base.fleet.n_prefill = 2;
+    base.fleet.n_decode = 2;
+    base.sharding.shards = 0; // one scheduler shard per decode instance
+    base.slo.ttft_us = 30_000_000; // backlog run: TTFT is not the subject
+    let trace = Trace::multi_turn(
+        Dataset::Alpaca, 16, 6, 32.0, base.model.max_seq, 71,
+    );
+    let run_with = |placement: Placement, enabled: bool| {
+        let mut cfg = base.clone();
+        cfg.sharding.placement = placement;
+        cfg.prefix.enabled = enabled;
+        System::BucketServe.run_sim(&cfg, &trace)
+    };
+    let off = run_with(Placement::PrefixAffinity, false);
+    let aff = run_with(Placement::PrefixAffinity, true);
+    let hash = run_with(Placement::Hash, true);
+    let ll = run_with(Placement::LeastLoaded, true);
+
+    // Conservation first, on every variant.
+    for (r, label) in
+        [(&off, "off"), (&aff, "affinity"), (&hash, "hash"), (&ll, "ll")]
+    {
+        assert_eq!(r.completions.len(), trace.len(), "prefix-{label}");
+        assert!(r.error.is_none(), "prefix-{label}: {:?}", r.error);
+        let mut ids: Vec<_> = r.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "prefix-{label} exactly-once");
+        let in_tokens: u64 =
+            trace.requests.iter().map(|q| q.total_len() as u64).sum();
+        let out_tokens: u64 = r
+            .completions
+            .iter()
+            .map(|c| (c.input_len + c.output_len) as u64)
+            .sum();
+        assert_eq!(in_tokens, out_tokens, "prefix-{label} token books");
+    }
+    assert!(!off.prefix_enabled && aff.prefix_enabled);
+    assert_eq!(off.prefix_hits + off.prefix_misses + off.prefix_hit_tokens, 0);
+
+    // Claim 1: cache hits shrink the priced prefill.
+    assert!(aff.prefix_hits > 0 && aff.prefix_hit_tokens > 0);
+    assert!(
+        aff.prefill_busy_us < off.prefill_busy_us,
+        "cache hits must cut prefill GPU time: on {} vs off {}",
+        aff.prefill_busy_us,
+        off.prefill_busy_us
+    );
+
+    // Claim 2: affinity placement beats lineage-blind placement on hit
+    // rate and throughput at equal cache configuration.
+    let hit_rate = |r: &RunReport| {
+        r.prefix_hits as f64 / (r.prefix_hits + r.prefix_misses).max(1) as f64
+    };
+    for (r, label) in [(&hash, "hash"), (&ll, "least_loaded")] {
+        assert!(
+            hit_rate(&aff) > hit_rate(r),
+            "affinity hit rate {} <= {label} {}",
+            hit_rate(&aff),
+            hit_rate(r)
+        );
+        assert!(
+            aff.throughput_tps() > r.throughput_tps(),
+            "affinity tok/s {} <= {label} {}",
+            aff.throughput_tps(),
+            r.throughput_tps()
+        );
+    }
+
+    // Claim 3: eviction counters in lockstep (one block per eviction).
+    assert_eq!(
+        aff.prefix_evicted_tokens,
+        aff.prefix_evictions * base.prefix.block as u64
+    );
 }
 
 #[test]

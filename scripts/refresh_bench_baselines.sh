@@ -1,0 +1,42 @@
+#!/usr/bin/env bash
+# Refresh the in-repo bench baseline snapshots (benches/baselines/).
+#
+# Each tracked bench prints one Summary JSON object per run row on
+# stdout alongside its human-readable table; this script runs the bench
+# in release mode, scrapes those lines, and rewrites the corresponding
+# BENCH_<name>.json with the rows plus capture provenance. Simulation
+# rows are virtual-time deterministic, so diffs in `rows` across
+# commits are real scheduling changes, not hardware noise — only the
+# wall-clock columns some benches print in their *tables* vary by host,
+# and those are not scraped.
+#
+# Usage: scripts/refresh_bench_baselines.sh [bench ...]
+#   (default: every bench with a snapshot file in benches/baselines/)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+benches=("$@")
+if [ ${#benches[@]} -eq 0 ]; then
+    for f in benches/baselines/BENCH_*.json; do
+        b=$(basename "$f" .json)
+        benches+=("${b#BENCH_}")
+    done
+fi
+
+for bench in "${benches[@]}"; do
+    out="benches/baselines/BENCH_${bench}.json"
+    echo ">> capturing ${bench} -> ${out}"
+    rows=$(cargo bench --bench "$bench" 2>/dev/null | grep '^{' | paste -sd, -)
+    {
+        echo '{'
+        echo "  \"bench\": \"${bench}\","
+        echo '  "schema": "one Summary JSON object per row, scraped from the bench'"'"'s stdout (lines starting with '"'"'{'"'"'); refresh with scripts/refresh_bench_baselines.sh",'
+        echo "  \"captured_at\": \"$(date -u +%Y-%m-%dT%H:%M:%SZ)\","
+        echo "  \"toolchain\": \"$(rustc --version)\","
+        echo "  \"host\": \"$(uname -sm)\","
+        echo "  \"rows\": [${rows}]"
+        echo '}'
+    } > "$out"
+    n=$(grep -c '"system"' "$out" || true)
+    echo "   ${n} rows"
+done
