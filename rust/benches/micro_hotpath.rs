@@ -2,7 +2,9 @@
 //!
 //! Times the coordinator's per-request-path operations: bucket assignment
 //! (binary vs. linear), AdjustBuckets, batch formation, the Eq. 1–6
-//! memory model, the cost model, and JSON parsing (gateway protocol).
+//! memory model, the cost model, the executor's boundary and plan/commit
+//! sync points at 8 shards (pool vs inline), and JSON parsing (gateway
+//! protocol).
 
 use bucketserve::config::{Policy, SystemConfig};
 use bucketserve::coordinator::batcher::{DynamicBatcher, KvMemoryModel};
@@ -221,6 +223,123 @@ fn main() {
         .print();
         // Isolate the (empty) manager clone cost to subtract mentally.
         time_it("  (manager clone baseline)", || mgr0.clone().total()).print();
+    }
+
+    // Executor sync points at 8 shards: one decode-iteration boundary
+    // fan-out and one plan/commit speculation round, pool vs inline.
+    // Job capture (buffer moves, planner clone_box snapshots) runs on
+    // the merge loop in both modes, so both closures pay it identically;
+    // the pool rows measure what fanning the pure computation out to
+    // per-shard workers costs/saves against running it inline.
+    {
+        use bucketserve::coordinator::executor::{
+            self, BoundaryJob, ExecutorPool, PlanJob, SyncKey,
+        };
+        use bucketserve::coordinator::fleet::DecodeSeqState;
+        use bucketserve::coordinator::scheduler::BucketPlanner;
+        use bucketserve::coordinator::PrefillPlanner;
+        use bucketserve::workload::Request;
+
+        const SHARDS: usize = 8;
+        let pool = ExecutorPool::new(SHARDS);
+
+        // Boundary sync point: 8 instances × 64 active sequences.
+        let mut rng = Pcg::seeded(13);
+        let actives: Vec<Vec<DecodeSeqState>> = (0..SHARDS)
+            .map(|di| {
+                (0..64u64)
+                    .map(|i| DecodeSeqState {
+                        id: di as u64 * 100 + i,
+                        class: RequestClass::Online,
+                        arrival: i,
+                        input_len: rng.range(100, 3000) as u32,
+                        padded_len: 4096,
+                        output_len: rng.range(50, 400) as u32,
+                        generated: rng.range(1, 40) as u32,
+                        first_token: 500,
+                        ready_at: 0,
+                        tbt_us: 0,
+                        last_token_at: 900,
+                        prefix: PrefixStamp::default(),
+                    })
+                    .collect()
+            })
+            .collect();
+        let bjobs = |src: &[Vec<DecodeSeqState>]| -> Vec<BoundaryJob> {
+            src.iter()
+                .enumerate()
+                .map(|(di, a)| BoundaryJob {
+                    key: SyncKey { at: 1_000, event: di as u64, shard: di },
+                    di,
+                    iter_end: 1_000,
+                    active: a.clone(),
+                    gaps: Vec::new(),
+                    done: Vec::new(),
+                    stall_us: 0,
+                })
+                .collect()
+        };
+        time_it("executor: 8-boundary sync point (pool)", || {
+            pool.process(bjobs(&actives)).len()
+        })
+        .print();
+        time_it("executor: 8-boundary sync point (inline)", || {
+            bjobs(&actives)
+                .into_iter()
+                .map(executor::boundary_outcome)
+                .count()
+        })
+        .print();
+
+        // Plan/commit sync point: 8 shards × 256 queued requests each.
+        let mut rng = Pcg::seeded(17);
+        let planners: Vec<BucketPlanner> = (0..SHARDS)
+            .map(|si| {
+                let mut p = BucketPlanner::new(&cfg);
+                for i in 0..256u64 {
+                    let r = Request::new(
+                        si as u64 * 1_000 + i,
+                        if i % 3 == 0 {
+                            RequestClass::Online
+                        } else {
+                            RequestClass::Offline
+                        },
+                        rng.range(1, 4000) as u32,
+                        rng.range(1, 400) as u32,
+                        i,
+                    );
+                    p.admit(&r, i);
+                }
+                p
+            })
+            .collect();
+        let pjobs = |src: &[BucketPlanner]| -> Vec<PlanJob> {
+            src.iter()
+                .enumerate()
+                .map(|(si, p)| PlanJob {
+                    key: SyncKey { at: 1_000, event: si as u64, shard: si },
+                    now: 1_000,
+                    headroom: 100_000,
+                    snapshot: p.clone_box(),
+                })
+                .collect()
+        };
+        time_it("executor: 8-plan sync point (pool)", || {
+            pool.plan(pjobs(&planners)).len()
+        })
+        .print();
+        time_it("executor: 8-plan sync point (inline)", || {
+            pjobs(&planners)
+                .into_iter()
+                .map(executor::speculate_plan)
+                .count()
+        })
+        .print();
+        // Isolate the snapshot (capture) cost to subtract mentally.
+        time_it("  (snapshot baseline: 8 clone_box)", || {
+            pjobs(&planners).len()
+        })
+        .print();
     }
 
     // Gateway JSON parse (TCP protocol hot path).

@@ -13,14 +13,32 @@
 //!   most-loaded shard's highest-urgency bucket at decode-iteration
 //!   boundaries.
 //! * `…/t2`, `…/tN` — the thread-count axis: the same sharded+steal run
-//!   under the parallel executor (2 workers / one per shard). The
-//!   Summary JSON of these rows is byte-identical to `sharded+steal` by
-//!   the determinism contract; what the axis measures is **wall-clock**
-//!   executor behavior (the `wall ms` and `sync pts` columns — executor
-//!   counters live on `RunReport`, never in Summary JSON). Boundary
-//!   handlers in simulation are cheap arithmetic, so expect bounded
-//!   gains here; the axis exists to keep the fan-out/merge overhead
-//!   honest as fleets scale.
+//!   under the parallel executor (2 workers / one per shard) with plan
+//!   offload on — boundary accounting *and* per-shard planning (bucket
+//!   adjust, drain sorts, batch formation) run on the workers behind
+//!   the plan/commit protocol.
+//! * `…/tN-inline` — one worker per shard but `plan_offload = false`:
+//!   boundaries stay parallel while planning runs inline on the merge
+//!   loop. The contrast between this row's and `…/tN`'s `plan on µs/rd`
+//!   column isolates what speculation takes *off* the merge loop.
+//!
+//! The Summary JSON of every executor-axis row is byte-identical to
+//! `sharded+steal` by the determinism contract; what the axis measures
+//! is **wall-clock** executor behavior. The `wall ms` and planning
+//! µs/round columns are host-dependent and live in this table only;
+//! `plan rds` / `sync pts` — and the `bench` sub-object appended to each
+//! row's Summary JSON line (plan_rounds, parallel_plans,
+//! plan_invalidations) — are deterministic functions of the schedule,
+//! safe for the scraped baseline snapshots. Planning columns:
+//!
+//! * `plan rds`       — dispatch rounds in which ≥ 1 shard planned.
+//! * `plan on µs/rd`  — merge-loop planning time per such round: the
+//!   eager speculation block (snapshots + blocking on the worker
+//!   fan-out) plus any inline plans/re-plans. This is the column
+//!   parallel planning exists to shrink at n_decode ≥ 4.
+//! * `plan off µs/rd` — worker-side speculation time per round (Σ over
+//!   proposals): the work that left the merge loop. 0 when sequential
+//!   or inline.
 //!
 //! Each row also emits its Summary JSON on stdout (one line per run) so
 //! trajectory tooling can scrape the sweep.
@@ -29,6 +47,7 @@ use bucketserve::baselines::System;
 use bucketserve::config::{Placement, SystemConfig};
 use bucketserve::metrics::Summary;
 use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::util::json::Json;
 use bucketserve::workload::{Dataset, RequestClass, Trace};
 use std::time::Instant;
 
@@ -37,6 +56,7 @@ fn main() {
     let mut t = Table::new(&[
         "n_decode", "variant", "threads", "tok/s", "online SLO",
         "mean TTFT ms", "steals", "makespan s", "wall ms", "sync pts",
+        "plan rds", "plan on µs/rd", "plan off µs/rd",
     ]);
     for &nd in &[1usize, 2, 4, 8] {
         let mut base = SystemConfig::default();
@@ -53,18 +73,20 @@ fn main() {
             base.model.max_seq,
             base.seed,
         );
-        for (label, shards, placement, steal, threads) in [
-            ("global", 1u32, Placement::LeastLoaded, false, 1u32),
-            ("sharded", 0, Placement::Hash, false, 1),
-            ("sharded+steal", 0, Placement::Hash, true, 1),
-            ("sharded+steal/t2", 0, Placement::Hash, true, 2),
-            ("sharded+steal/tN", 0, Placement::Hash, true, 0),
+        for (label, shards, placement, steal, threads, offload) in [
+            ("global", 1u32, Placement::LeastLoaded, false, 1u32, true),
+            ("sharded", 0, Placement::Hash, false, 1, true),
+            ("sharded+steal", 0, Placement::Hash, true, 1, true),
+            ("sharded+steal/t2", 0, Placement::Hash, true, 2, true),
+            ("sharded+steal/tN", 0, Placement::Hash, true, 0, true),
+            ("sharded+steal/tN-inline", 0, Placement::Hash, true, 0, false),
         ] {
             let mut cfg = base.clone();
             cfg.sharding.shards = shards;
             cfg.sharding.placement = placement;
             cfg.sharding.steal = steal;
             cfg.executor.threads = threads;
+            cfg.executor.plan_offload = offload;
             let wall_start = Instant::now();
             let r = System::BucketServe.run_sim(&cfg, &trace);
             let wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
@@ -73,7 +95,34 @@ fn main() {
                 &r,
                 &cfg.slo,
             );
-            println!("{}", s.to_json());
+            // Augment the scraped line with the deterministic executor
+            // counters (never the wall-clock fields — baseline rows must
+            // stay host-independent).
+            let mut j = s.to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert(
+                    "bench".to_string(),
+                    Json::obj(vec![
+                        ("plan_rounds", Json::from(r.executor_plan_rounds)),
+                        (
+                            "parallel_plans",
+                            Json::from(r.executor_parallel_plans),
+                        ),
+                        (
+                            "plan_invalidations",
+                            Json::from(r.executor_plan_invalidations),
+                        ),
+                    ]),
+                );
+            }
+            println!("{j}");
+            let per_round = |ns: u64| {
+                if r.executor_plan_rounds == 0 {
+                    0.0
+                } else {
+                    ns as f64 / r.executor_plan_rounds as f64 / 1e3
+                }
+            };
             t.row(vec![
                 nd.to_string(),
                 label.to_string(),
@@ -89,6 +138,9 @@ fn main() {
                 f2(r.makespan_us as f64 / 1e6),
                 f2(wall_ms),
                 r.executor_sync_points.to_string(),
+                r.executor_plan_rounds.to_string(),
+                f2(per_round(r.plan_merge_ns)),
+                f2(per_round(r.plan_worker_ns)),
             ]);
         }
     }

@@ -22,6 +22,11 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 /// FCFS planner (no bucketing).
+///
+/// `Clone` is the snapshot stage of the executor's plan/commit protocol
+/// ([`PrefillPlanner::clone_box`]): all fields are owned data, so the
+/// derived clone is a complete deep copy.
+#[derive(Clone)]
 pub struct FcfsPlanner {
     queue: VecDeque<QueuedReq>,
     max_batch: usize,
@@ -45,6 +50,10 @@ impl FcfsPlanner {
 }
 
 impl PrefillPlanner for FcfsPlanner {
+    fn clone_box(&self) -> Box<dyn PrefillPlanner> {
+        Box::new(self.clone())
+    }
+
     fn admit(&mut self, req: &Request, _now: Micros) {
         let q = QueuedReq {
             id: req.id,

@@ -395,6 +395,13 @@ impl Default for PrefixSpec {
 pub struct ExecutorSpec {
     /// Worker threads: 1 = sequential (default), 0 = one per shard.
     pub threads: u32,
+    /// Offload per-shard prefill *planning* (bucket adjust, drain sorts,
+    /// batch formation) to the worker threads behind the plan/commit
+    /// protocol (default true). Only meaningful when the executor is
+    /// parallel (`threads != 1`); false keeps boundary accounting
+    /// parallel but plans inline on the merge loop — the bench axis for
+    /// isolating planning offload. Either setting is byte-identical.
+    pub plan_offload: bool,
 }
 
 impl Default for ExecutorSpec {
@@ -407,7 +414,7 @@ impl Default for ExecutorSpec {
             .ok()
             .and_then(|v| v.parse().ok())
             .unwrap_or(1);
-        ExecutorSpec { threads }
+        ExecutorSpec { threads, plan_offload: true }
     }
 }
 
@@ -587,6 +594,9 @@ impl SystemConfig {
             if let Some(v) = ex.get("threads").as_u64() {
                 c.executor.threads = v as u32;
             }
+            if let Some(v) = ex.get("plan_offload").as_bool() {
+                c.executor.plan_offload = v;
+            }
         }
         let o = j.get("slo");
         if !o.is_null() {
@@ -650,6 +660,9 @@ impl SystemConfig {
                 "prefix.block" => set_u32(&mut self.prefix.block, v),
                 "prefix.cache_frac" => set_f64(&mut self.prefix.cache_frac, v),
                 "executor.threads" => set_u32(&mut self.executor.threads, v),
+                "executor.plan_offload" => {
+                    set_bool(&mut self.executor.plan_offload, v)
+                }
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
                 "slo.ttft_us" => { if let Ok(x) = v.parse() { self.slo.ttft_us = x; } }
@@ -726,6 +739,7 @@ impl SystemConfig {
             ])),
             ("executor", Json::obj(vec![
                 ("threads", Json::from(self.executor.threads as u64)),
+                ("plan_offload", Json::from(self.executor.plan_offload)),
             ])),
             ("slo", Json::obj(vec![
                 ("ttft_us", Json::from(self.slo.ttft_us)),
@@ -1045,30 +1059,36 @@ mod tests {
         // Note: no test asserts the *default* thread count — it is
         // deliberately env-sensitive (EXECUTOR_THREADS) so CI can run the
         // whole suite through the parallel executor.
-        let seq = ExecutorSpec { threads: 1 };
+        let seq = ExecutorSpec { threads: 1, plan_offload: true };
         assert_eq!(seq.resolve(1), 1);
         assert_eq!(seq.resolve(8), 1);
-        let per_shard = ExecutorSpec { threads: 0 };
+        let per_shard = ExecutorSpec { threads: 0, plan_offload: true };
         assert_eq!(per_shard.resolve(1), 1);
         assert_eq!(per_shard.resolve(4), 4);
         assert_eq!(per_shard.resolve(0), 1, "degenerate fleet still runs");
-        let fixed = ExecutorSpec { threads: 3 };
+        let fixed = ExecutorSpec { threads: 3, plan_offload: true };
         assert_eq!(fixed.resolve(8), 3);
         assert_eq!(fixed.resolve(2), 2, "never more workers than shards");
     }
 
     #[test]
     fn executor_json_and_cli_overrides() {
-        let j = Json::parse(r#"{"executor":{"threads":4}}"#).unwrap();
+        let j =
+            Json::parse(r#"{"executor":{"threads":4,"plan_offload":false}}"#)
+                .unwrap();
         let c = SystemConfig::from_json(&j);
         assert_eq!(c.executor.threads, 4);
+        assert!(!c.executor.plan_offload);
 
         let args = Args::parse(
-            ["--executor.threads", "0"].iter().map(|s| s.to_string()),
+            ["--executor.threads", "0", "--executor.plan_offload", "false"]
+                .iter()
+                .map(|s| s.to_string()),
         );
         let mut c = SystemConfig::default();
         c.apply_overrides(&args);
         assert_eq!(c.executor.threads, 0, "0 = one worker per shard");
+        assert!(!c.executor.plan_offload, "plan offload CLI-disableable");
     }
 
     #[test]

@@ -85,6 +85,20 @@ pub struct FormedBatch {
     pub bucket_up: u32,
 }
 
+impl FormedBatch {
+    /// Scheduling-relevant identity of the batch — member ids in drain
+    /// order, the padded slot length, and the source bucket. Two batches
+    /// with equal signatures dispatch identically; the plan/commit
+    /// property tests compare speculated and inline plans through this.
+    pub fn signature(&self) -> (Vec<u64>, u32, u32) {
+        (
+            self.reqs.iter().map(|r| r.id).collect(),
+            self.batch.padded_len,
+            self.bucket_up,
+        )
+    }
+}
+
 /// The Dynamic Batching Controller.
 #[derive(Debug, Clone)]
 pub struct DynamicBatcher {

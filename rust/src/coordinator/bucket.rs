@@ -221,6 +221,19 @@ impl BucketManager {
         self.buckets.iter().map(|b| b.len()).sum()
     }
 
+    /// Σ full-context (prompt + expected generation) footprint of every
+    /// queued request, as one integer-exact u64 sum. Feeds the mean-
+    /// length estimate in Eq. 6's `N_max` and KV-aware placement weights;
+    /// kept in integer space so the value is independent of bucket
+    /// iteration order (an f64 accumulation would not be).
+    pub fn total_footprint(&self) -> u64 {
+        self.buckets
+            .iter()
+            .flat_map(|b| b.requests.iter())
+            .map(|r| r.footprint())
+            .sum()
+    }
+
     pub fn n_buckets(&self) -> usize {
         self.buckets.len()
     }
@@ -594,6 +607,36 @@ mod tests {
         assert_eq!(arrivals, sorted, "merge must restore FCFS order");
         assert_eq!(m.total(), 12);
         m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn total_footprint_sums_queued_requests_across_buckets() {
+        let mut m = BucketManager::new(1024, 0.5, 16);
+        assert_eq!(m.total_footprint(), 0);
+        for i in 0..8 {
+            m.assign(req(i, 100));
+        }
+        for i in 8..12 {
+            m.assign(req(i, 900));
+        }
+        m.adjust(4); // split — the sum must span every bucket
+        assert!(m.n_buckets() >= 2);
+        let expected: u64 = (0..8)
+            .map(|_| (100 + 10) as u64)
+            .chain((8..12).map(|_| (900 + 10) as u64))
+            .sum();
+        assert_eq!(m.total_footprint(), expected);
+        // Prefix-stamped requests contribute their deduplicated
+        // (uncached-suffix) footprint, same as placement weighing.
+        let mut r = req(100, 900);
+        r.prefix = PrefixStamp {
+            prefix_id: 7,
+            prefix_len: 800,
+            cached_len: 800,
+            shared_len: 800,
+        };
+        m.assign(r);
+        assert_eq!(m.total_footprint(), expected + (900 + 10 - 800) as u64);
     }
 
     #[test]

@@ -183,6 +183,20 @@ impl EventQueue {
         EventId(seq)
     }
 
+    /// Allocate an id from the global push counter *without* scheduling
+    /// anything — the executor stamps plan-round [`SyncKey`]s from the
+    /// same counter boundary events use, so one total `(at, id)` order
+    /// covers both job kinds. The resulting gap in queued events' seq
+    /// numbers is harmless: pop order depends only on the *relative*
+    /// order of issued ids, never on their density.
+    ///
+    /// [`SyncKey`]: super::executor::SyncKey
+    pub fn stamp(&mut self) -> u64 {
+        let seq = self.seq;
+        self.seq += 1;
+        seq
+    }
+
     /// Tombstone a *pending* event so `pop`/`pop_due` skip it. Returns
     /// true when the id was newly cancelled. Cancelling an event that has
     /// already fired is a caller bug (it would desynchronize `len`);
@@ -286,6 +300,29 @@ mod tests {
         q.push(5, EventKind::PrefillDone { instance: 0 });
         q.push(5, EventKind::PrefillDone { instance: 1 });
         q.push(5, EventKind::PrefillDone { instance: 2 });
+        let kinds: Vec<EventKind> =
+            std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::PrefillDone { instance: 0 },
+                EventKind::PrefillDone { instance: 1 },
+                EventKind::PrefillDone { instance: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn stamp_allocates_ids_without_perturbing_pop_order() {
+        let mut q = EventQueue::new();
+        let a = q.push(5, EventKind::PrefillDone { instance: 0 });
+        let s1 = q.stamp(); // plan-round id between two pushes
+        let b = q.push(5, EventKind::PrefillDone { instance: 1 });
+        let s2 = q.stamp();
+        let c = q.push(5, EventKind::PrefillDone { instance: 2 });
+        // Stamped ids interleave the push ids in one total order...
+        assert!(a.0 < s1 && s1 < b.0 && b.0 < s2 && s2 < c.0);
+        // ...and the seq-number gaps they leave never change FIFO pops.
         let kinds: Vec<EventKind> =
             std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
         assert_eq!(

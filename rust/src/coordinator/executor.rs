@@ -1,83 +1,107 @@
 //! Thread-per-shard parallel executor: deterministic fan-out of
-//! decode-iteration boundaries.
+//! decode-iteration boundaries (phase 1) and per-shard prefill planning
+//! (phase 2).
 //!
 //! The sharding refactor (PR 2) left the coordinator with no shared queue
 //! state between shards; this module removes the last global serialization
-//! point — the event loop itself — for the work that dominates event
-//! counts: decode-iteration boundary accounting. The design splits every
-//! boundary into three strictly separated stages:
+//! points — the event loop itself — for the two kinds of per-shard work
+//! that dominate scheduler CPU time: decode-iteration boundary accounting
+//! and prefill planning (bucket adjust, drain sorts, batch formation).
+//! Both run behind the same three-stage discipline:
 //!
-//! 1. **Capture** (merge loop): `RunCore::take_boundary_job` snapshots the
-//!    instance's active set and iteration end into a self-contained
-//!    [`BoundaryJob`] keyed by a [`SyncKey`].
-//! 2. **Compute** (worker thread): [`boundary_outcome`] — a *pure*
-//!    function of the job — produces the per-token gap samples, finished
-//!    completions, and surviving active set.
-//! 3. **Apply** (merge loop): outcomes are merged back **sorted by
-//!    [`SyncKey`]** and folded into the report/monitor/fleet in exactly
-//!    the order the sequential loop would have produced them.
+//! 1. **Snapshot / capture** (merge loop): the shared state a worker needs
+//!    is captured into a self-contained job keyed by a [`SyncKey`] —
+//!    [`BoundaryJob`] moves the instance's drained active set out;
+//!    [`PlanJob`] carries a deep copy of the shard's planner
+//!    ([`super::scheduler::PrefillPlanner::clone_box`]) plus the planner
+//!    inputs (clock, target-instance KV headroom).
+//! 2. **Compute / speculate** (worker thread): a *pure* function of the
+//!    job — [`boundary_outcome`] for boundaries, [`speculate_plan`] for
+//!    planning. Speculation mutates only the job's private snapshot; the
+//!    live planner is untouched until commit.
+//! 3. **Apply / commit** (merge loop): outcomes merge back **sorted by
+//!    [`SyncKey`]** and are folded in exactly the order the sequential
+//!    loop would have produced them. A [`PlanProposal`] commits by
+//!    *installing* its speculated planner state — but only after
+//!    [`proposal_valid`] re-checks the captured inputs against the live
+//!    ones; a stale proposal is discarded and the shard re-plans inline.
+//!    A proposal never consumed (an earlier shard won the dispatch round)
+//!    simply drops: speculation left no trace on the live planner.
 //!
 //! The determinism contract rests on two facts. First, the sequential
-//! scheduler runs the *same* capture → [`boundary_outcome`] → apply
-//! pipeline inline, so the two modes share every instruction of boundary
-//! accounting — there is no second implementation to drift. Second, the
-//! merge key orders outcomes by `(virtual_time, event_id)` where event
-//! ids come from the event queue's single global push counter, i.e. the
-//! key *is* the sequential pop order; worker interleaving, thread count,
-//! and OS scheduling can therefore never reach the schedule. For any seed
-//! and any `executor.threads`, the Summary JSON is byte-identical to the
-//! sequential run — pinned by the determinism matrix in
-//! `tests/integration.rs`. (Executor counters live on
-//! [`super::scheduler::RunReport`] only and are deliberately kept *out*
-//! of Summary JSON so that contract can hold exactly.)
+//! scheduler runs the *same* snapshot → speculate → commit pipeline
+//! inline (lazily, at the moment a shard's plan is consumed), so the two
+//! modes share every instruction of boundary accounting and planning —
+//! there is no second implementation to drift. Second, the merge key
+//! orders outcomes by `(virtual_time, event_id)` where event ids come
+//! from the event queue's single global counter ([`SyncKey::event`] for
+//! plan jobs is allocated by `EventQueue::stamp` from the same counter),
+//! i.e. the key *is* the sequential order; worker interleaving, thread
+//! count, and OS scheduling can therefore never reach the schedule. For
+//! any seed, any `executor.threads`, and either `executor.plan_offload`
+//! setting, the Summary JSON is byte-identical to the sequential run —
+//! pinned by the determinism matrix in `tests/integration.rs`. (Executor
+//! counters live on [`super::scheduler::RunReport`] only and are
+//! deliberately kept *out* of Summary JSON so that contract can hold
+//! exactly.)
 //!
-//! A synchronization point is a maximal consecutive run of due
+//! A synchronization point is either a maximal consecutive run of due
 //! `DecodeIterEnd` events at one virtual instant (collected with
 //! [`super::events::EventQueue::pop_due_if`], which refuses to reorder
-//! across an interleaved event of another kind). Runs fan out to workers
-//! by owner shard (`shard % threads`, thread-per-shard when
-//! `executor.threads = 0`). Everything decision-making — prefill
-//! dispatch, preemption, admission, stealing — stays on the merge loop:
+//! across an interleaved event of another kind) or one prefill dispatch
+//! round's eager speculation fan-out. Jobs route to workers by owner
+//! shard (`shard % threads`, thread-per-shard when `executor.threads =
+//! 0`). Everything decision-making — the dispatch commit order,
+//! preemption, admission gating, stealing — stays on the merge loop:
 //! those paths *choose between* shards, and running them speculatively
-//! would perturb planner state the sequential schedule never touched.
-//! Cross-shard traffic created while applying a sync point (steal moves,
-//! preemption requeues, checkpoint restores) is likewise applied
-//! merge-side, at the member's ordinal position in the sorted order.
+//! would perturb state the sequential schedule never touched.
+//!
+//! Steady-state boundary sync points are allocation-free: a job's
+//! `active` buffer is compacted in place (survivors travel back to the
+//! fleet in the same `Vec` the capture stage moved out), and the
+//! `gaps`/`done` buffers recycle through the scheduler's scratch pool
+//! after each apply.
 //!
 //! Worker lifecycle: workers are plain channel consumers; dropping the
 //! pool closes the job channels and joins every thread, so a shard whose
 //! event partition drains early just idles until shutdown. A panic
-//! inside a boundary computation is caught on the worker and delivered
-//! as an `Err` outcome that [`ExecutorPool::process`] re-raises on the
-//! merge thread — never a deadlock, even while sibling workers hold the
-//! outcome channel open.
+//! inside a worker computation is caught and delivered as an `Err`
+//! outcome that the merge loop re-raises — never a deadlock, even while
+//! sibling workers hold the outcome channel open.
 
+use super::batcher::FormedBatch;
 use super::fleet::DecodeSeqState;
 use super::prefix::PrefixStamp;
+use super::scheduler::PrefillPlanner;
 use crate::workload::request::Completion;
 use crate::workload::RequestClass;
 use crate::Micros;
 use std::sync::mpsc;
 use std::thread;
+use std::time::Instant;
 
-/// Deterministic merge key of one boundary event: ordered by
+/// Deterministic merge key of one executor job: ordered by
 /// `(virtual_time, event_id)` — event ids are issued by one global
-/// counter, so this is exactly the sequential pop order. The owner shard
-/// rides along for worker routing and diagnostics (per shard, the triple
-/// `(virtual_time, shard, event_id)` sorts identically).
+/// counter (boundary jobs use their event's id, plan jobs an id stamped
+/// from the same counter), so this is exactly the sequential order. The
+/// owner shard rides along for worker routing and diagnostics (per
+/// shard, the triple `(virtual_time, shard, event_id)` sorts
+/// identically).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct SyncKey {
-    /// Virtual timestamp the boundary fires at.
+    /// Virtual timestamp the job belongs to.
     pub at: Micros,
-    /// Global event-queue push id (the FIFO tie-break).
+    /// Global event-queue counter id (the FIFO tie-break).
     pub event: u64,
-    /// Scheduler shard owning the decode instance.
+    /// Scheduler shard owning the work.
     pub shard: usize,
 }
 
 /// One captured decode-iteration boundary, self-contained so it can cross
 /// a thread boundary: the instance's drained active set plus the
-/// iteration end time every member's token lands at.
+/// iteration end time every member's token lands at. The `gaps`/`done`
+/// buffers arrive empty (recycled from previous boundaries, capacity
+/// retained) and come back filled in the [`BoundaryOutcome`].
 #[derive(Debug)]
 pub struct BoundaryJob {
     pub key: SyncKey,
@@ -86,8 +110,12 @@ pub struct BoundaryJob {
     /// End of the iteration (the boundary instant).
     pub iter_end: Micros,
     /// The instance's active set, moved out for the duration of the
-    /// computation.
+    /// computation and compacted in place into the outcome's survivors.
     pub active: Vec<DecodeSeqState>,
+    /// Recycled output buffer for gap samples (empty on entry).
+    pub gaps: Vec<GapSample>,
+    /// Recycled output buffer for finished sequences (empty on entry).
+    pub done: Vec<FinishedSeq>,
     /// Test-only adversarial delay (µs) a worker sleeps before computing,
     /// so the sync-point tests can force hostile interleavings. Always 0
     /// on the serving path.
@@ -122,7 +150,8 @@ pub struct BoundaryOutcome {
     pub key: SyncKey,
     pub di: usize,
     /// Members that still have tokens to generate, in original order,
-    /// with their token counts and gap anchors advanced.
+    /// with their token counts and gap anchors advanced. Same buffer the
+    /// job's `active` arrived in, compacted in place.
     pub still_active: Vec<DecodeSeqState>,
     /// One gap sample per member, in active-set order.
     pub gaps: Vec<GapSample>,
@@ -135,13 +164,25 @@ pub struct BoundaryOutcome {
 /// (called behind a channel). Every member produced one token at
 /// `iter_end`: measure its inter-token gap from its last anchor, advance
 /// the anchor and the token count, and split finishers from survivors.
+/// Survivors compact in place (order-preserving) so steady state
+/// allocates nothing: the active buffer, the gap buffer, and the done
+/// buffer all recycle through the scheduler's scratch pool.
 pub fn boundary_outcome(job: BoundaryJob) -> BoundaryOutcome {
-    let mut still_active = Vec::with_capacity(job.active.len());
-    let mut gaps = Vec::with_capacity(job.active.len());
-    let mut done = Vec::new();
-    for mut s in job.active {
-        let gap = job.iter_end.saturating_sub(s.last_token_at);
-        s.last_token_at = job.iter_end;
+    let BoundaryJob {
+        key,
+        di,
+        iter_end,
+        mut active,
+        mut gaps,
+        mut done,
+        stall_us: _,
+    } = job;
+    debug_assert!(gaps.is_empty() && done.is_empty(), "dirty scratch buffer");
+    let mut write = 0usize;
+    for read in 0..active.len() {
+        let s = &mut active[read];
+        let gap = iter_end.saturating_sub(s.last_token_at);
+        s.last_token_at = iter_end;
         gaps.push(GapSample { class: s.class, tbt_us: s.tbt_us, gap });
         s.generated += 1;
         if s.generated >= s.output_len {
@@ -155,33 +196,122 @@ pub fn boundary_outcome(job: BoundaryJob) -> BoundaryOutcome {
                     output_len: s.output_len,
                     arrival: s.arrival,
                     first_token: s.first_token,
-                    finished: job.iter_end,
+                    finished: iter_end,
                     padded_len: s.padded_len,
                 },
             });
         } else {
-            still_active.push(s);
+            // Order-preserving compaction: every slot below `write` holds
+            // a survivor; slots between `write` and `read` hold only
+            // already-finished members, safe to overwrite.
+            active.swap(write, read);
+            write += 1;
         }
     }
-    BoundaryOutcome { key: job.key, di: job.di, still_active, gaps, done }
+    active.truncate(write);
+    BoundaryOutcome { key, di, still_active: active, gaps, done }
 }
 
-/// The worker pool: `threads` plain threads consuming [`BoundaryJob`]s
-/// from per-worker channels and answering on one shared outcome channel.
-/// [`ExecutorPool::process`] is the synchronization point — it blocks for
-/// every submitted job and hands the outcomes back in [`SyncKey`] order,
+/// Snapshot stage of one shard's prefill planning: the planner inputs the
+/// merge loop captured (clock, the shard's target decode instance's KV
+/// headroom) plus a deep copy of the shard's planner for the worker to
+/// speculate on. Self-contained — the live planner never leaves the
+/// merge loop.
+pub struct PlanJob {
+    /// Merge key; `key.shard` is the scheduler shard being planned and
+    /// `key.event` an id stamped from the event queue's global counter.
+    pub key: SyncKey,
+    /// Virtual clock at capture.
+    pub now: Micros,
+    /// KV headroom (tokens) of the shard's dispatch-order target.
+    pub headroom: u64,
+    /// Deep copy of the shard's planner state (the speculation
+    /// substrate).
+    pub snapshot: Box<dyn PrefillPlanner>,
+}
+
+/// Speculate-stage output: the formed batch (if any) plus the
+/// post-planning planner state. Committing a proposal means *installing*
+/// `speculated` as the shard's planner — exactly the state an inline
+/// `plan` call would have left — and taking `formed`; discarding it
+/// leaves the live planner untouched.
+pub struct PlanProposal {
+    pub key: SyncKey,
+    /// Captured inputs, re-validated at commit time by
+    /// [`proposal_valid`].
+    pub now: Micros,
+    pub headroom: u64,
+    /// Planner state after speculation (bucket adjust, drain sort, and
+    /// batch drain applied).
+    pub speculated: Box<dyn PrefillPlanner>,
+    /// The speculated batch; `None` when the planner had nothing
+    /// admissible under `headroom`.
+    pub formed: Option<FormedBatch>,
+    /// Wall-clock the speculation took on the worker, ns (RunReport
+    /// diagnostics only — never Summary JSON).
+    pub spec_ns: u64,
+}
+
+/// Speculate stage — a pure function of the job, shared verbatim by the
+/// worker threads and the sequential path's inline (lazy) speculation.
+/// Runs bucket adjust + drain sort + batch formation against the job's
+/// private planner snapshot.
+pub fn speculate_plan(mut job: PlanJob) -> PlanProposal {
+    let t0 = Instant::now();
+    let formed = job.snapshot.plan(job.now, job.headroom);
+    PlanProposal {
+        key: job.key,
+        now: job.now,
+        headroom: job.headroom,
+        speculated: job.snapshot,
+        formed,
+        spec_ns: t0.elapsed().as_nanos() as u64,
+    }
+}
+
+/// Commit-time validation: a proposal may be installed only when the
+/// inputs it speculated over still hold. `now` drifts never inside one
+/// dispatch round; `headroom` changes when the same shard already
+/// committed a batch this round (its target's reservations grew), in
+/// which case the proposal describes a drain the live planner no longer
+/// matches and the shard must re-plan inline. The scheduler additionally
+/// drops a shard's proposal outright after any commit on that shard
+/// (belt and braces: a zero-footprint commit would leave `headroom`
+/// unchanged while the queue did change).
+pub fn proposal_valid(p: &PlanProposal, now: Micros, headroom: u64) -> bool {
+    p.now == now && p.headroom == headroom
+}
+
+/// A unit of worker work: one captured boundary or one plan speculation.
+enum Job {
+    Boundary(BoundaryJob),
+    Plan(PlanJob),
+}
+
+/// A worker's answer, mirroring [`Job`].
+enum Outcome {
+    Boundary(BoundaryOutcome),
+    Plan(PlanProposal),
+}
+
+/// The worker pool: `threads` plain threads consuming jobs (captured
+/// boundaries or plan speculations) from per-worker channels and
+/// answering on one shared outcome channel.
+/// [`ExecutorPool::process`] (boundaries) and [`ExecutorPool::plan`]
+/// (speculations) are the synchronization points — each blocks for every
+/// submitted job and hands the outcomes back in [`SyncKey`] order,
 /// whatever order the workers finished in.
 ///
-/// Workers answer with `Result`: a panic inside [`boundary_outcome`] is
-/// caught and delivered as an `Err`, which `process` re-raises on the
-/// merge thread. Delivering the failure (rather than letting the worker
-/// die) matters with more than one worker — the survivors keep outcome
-/// senders alive, so a silently lost outcome would park `process` in
-/// `recv` forever instead of failing fast.
+/// Workers answer with `Result`: a panic inside a computation is caught
+/// and delivered as an `Err`, which the merge loop re-raises. Delivering
+/// the failure (rather than letting the worker die) matters with more
+/// than one worker — the survivors keep outcome senders alive, so a
+/// silently lost outcome would park the merge thread in `recv` forever
+/// instead of failing fast.
 #[derive(Debug)]
 pub struct ExecutorPool {
-    txs: Vec<mpsc::Sender<BoundaryJob>>,
-    rx: mpsc::Receiver<Result<BoundaryOutcome, &'static str>>,
+    txs: Vec<mpsc::Sender<Job>>,
+    rx: mpsc::Receiver<Result<Outcome, &'static str>>,
     workers: Vec<thread::JoinHandle<()>>,
 }
 
@@ -193,19 +323,26 @@ impl ExecutorPool {
         let mut txs = Vec::with_capacity(threads);
         let mut workers = Vec::with_capacity(threads);
         for _ in 0..threads {
-            let (tx, job_rx) = mpsc::channel::<BoundaryJob>();
+            let (tx, job_rx) = mpsc::channel::<Job>();
             let out = out_tx.clone();
             workers.push(thread::spawn(move || {
                 while let Ok(job) = job_rx.recv() {
-                    if job.stall_us > 0 {
-                        thread::sleep(std::time::Duration::from_micros(
-                            job.stall_us,
-                        ));
-                    }
                     let outcome = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| boundary_outcome(job)),
+                        std::panic::AssertUnwindSafe(|| match job {
+                            Job::Boundary(b) => {
+                                if b.stall_us > 0 {
+                                    thread::sleep(
+                                        std::time::Duration::from_micros(
+                                            b.stall_us,
+                                        ),
+                                    );
+                                }
+                                Outcome::Boundary(boundary_outcome(b))
+                            }
+                            Job::Plan(p) => Outcome::Plan(speculate_plan(p)),
+                        }),
                     )
-                    .map_err(|_| "boundary computation panicked on a worker");
+                    .map_err(|_| "executor computation panicked on a worker");
                     if out.send(outcome).is_err() {
                         break;
                     }
@@ -223,31 +360,75 @@ impl ExecutorPool {
         self.txs.len()
     }
 
-    /// Worker a shard's boundaries run on (thread-per-shard, wrapping
-    /// when shards outnumber workers).
+    /// Worker a shard's jobs run on (thread-per-shard, wrapping when
+    /// shards outnumber workers).
     pub fn worker_of(&self, shard: usize) -> usize {
         shard % self.txs.len()
     }
 
-    /// Fan one synchronization point's jobs out to their owner-shard
-    /// workers, block for every outcome, and return them sorted by
-    /// [`SyncKey`] — the deterministic merge order.
-    pub fn process(&self, jobs: Vec<BoundaryJob>) -> Vec<BoundaryOutcome> {
+    /// Fan a batch of jobs out to their owner-shard workers, block for
+    /// every outcome, and unwrap with `extract`, sorted by `key` — the
+    /// deterministic merge order.
+    fn round<T>(
+        &self,
+        jobs: Vec<Job>,
+        shard_of: impl Fn(&Job) -> usize,
+        extract: impl Fn(Outcome) -> T,
+        key: impl Fn(&T) -> SyncKey,
+    ) -> Vec<T> {
         let n = jobs.len();
         for job in jobs {
-            let w = self.worker_of(job.key.shard);
+            let w = self.worker_of(shard_of(&job));
             self.txs[w].send(job).expect("executor worker hung up");
         }
-        let mut outs: Vec<BoundaryOutcome> = (0..n)
+        let mut outs: Vec<T> = (0..n)
             .map(|_| {
-                self.rx
-                    .recv()
-                    .expect("executor worker died")
-                    .unwrap_or_else(|e| panic!("{e}"))
+                extract(
+                    self.rx
+                        .recv()
+                        .expect("executor worker died")
+                        .unwrap_or_else(|e| panic!("{e}")),
+                )
             })
             .collect();
-        outs.sort_by_key(|o| o.key);
+        outs.sort_by_key(&key);
         outs
+    }
+
+    /// Fan one boundary synchronization point's jobs out, block for
+    /// every outcome, and return them sorted by [`SyncKey`].
+    pub fn process(&self, jobs: Vec<BoundaryJob>) -> Vec<BoundaryOutcome> {
+        self.round(
+            jobs.into_iter().map(Job::Boundary).collect(),
+            |j| match j {
+                Job::Boundary(b) => b.key.shard,
+                Job::Plan(_) => unreachable!(),
+            },
+            |o| match o {
+                Outcome::Boundary(b) => b,
+                Outcome::Plan(_) => panic!("plan outcome in a boundary round"),
+            },
+            |b| b.key,
+        )
+    }
+
+    /// Fan one dispatch round's plan speculations out, block for every
+    /// proposal, and return them sorted by [`SyncKey`].
+    pub fn plan(&self, jobs: Vec<PlanJob>) -> Vec<PlanProposal> {
+        self.round(
+            jobs.into_iter().map(Job::Plan).collect(),
+            |j| match j {
+                Job::Plan(p) => p.key.shard,
+                Job::Boundary(_) => unreachable!(),
+            },
+            |o| match o {
+                Outcome::Plan(p) => p,
+                Outcome::Boundary(_) => {
+                    panic!("boundary outcome in a plan round")
+                }
+            },
+            |p| p.key,
+        )
     }
 }
 
@@ -293,18 +474,36 @@ mod tests {
         SyncKey { at: 1_000, event, shard }
     }
 
+    fn bjob(
+        key: SyncKey,
+        di: usize,
+        iter_end: Micros,
+        active: Vec<DecodeSeqState>,
+        stall_us: u64,
+    ) -> BoundaryJob {
+        BoundaryJob {
+            key,
+            di,
+            iter_end,
+            active,
+            gaps: Vec::new(),
+            done: Vec::new(),
+            stall_us,
+        }
+    }
+
     #[test]
     fn boundary_outcome_splits_finishers_and_advances_anchors() {
-        let job = BoundaryJob {
-            key: key(3, 0),
-            di: 2,
-            iter_end: 1_000,
-            active: vec![
+        let job = bjob(
+            key(3, 0),
+            2,
+            1_000,
+            vec![
                 seq(10, RequestClass::Online, 5, 50, 970), // survives
                 seq(11, RequestClass::Offline, 9, 10, 940), // finishes
             ],
-            stall_us: 0,
-        };
+            0,
+        );
         let o = boundary_outcome(job);
         assert_eq!((o.key, o.di), (key(3, 0), 2));
         // Gaps in active-set order, measured from each member's anchor.
@@ -331,14 +530,40 @@ mod tests {
     }
 
     #[test]
+    fn boundary_outcome_compacts_in_place_and_reuses_buffers() {
+        // Satellite: steady-state sync points are allocation-free. The
+        // survivors come back in the same buffer the job carried in, and
+        // pre-sized gap/done scratch never reallocates.
+        let active: Vec<DecodeSeqState> = (0..8u64)
+            .map(|i| {
+                // Every odd member finishes at this boundary.
+                let left = if i % 2 == 1 { 1 } else { 10 };
+                seq(i, RequestClass::Online, 20 - left, 20, 980)
+            })
+            .collect();
+        let active_ptr = active.as_ptr();
+        let mut job = bjob(key(0, 0), 0, 1_000, active, 0);
+        job.gaps = Vec::with_capacity(8);
+        job.done = Vec::with_capacity(8);
+        let gaps_ptr = job.gaps.as_ptr();
+        let done_ptr = job.done.as_ptr();
+        let o = boundary_outcome(job);
+        // Order-preserving compaction of survivors, same allocation.
+        assert_eq!(
+            o.still_active.iter().map(|s| s.id).collect::<Vec<_>>(),
+            vec![0, 2, 4, 6]
+        );
+        assert_eq!(o.still_active.as_ptr(), active_ptr);
+        assert_eq!(o.done.iter().map(|f| f.completion.id).collect::<Vec<_>>(),
+            vec![1, 3, 5, 7]);
+        assert_eq!(o.gaps.len(), 8);
+        assert_eq!(o.gaps.as_ptr(), gaps_ptr);
+        assert_eq!(o.done.as_ptr(), done_ptr);
+    }
+
+    #[test]
     fn empty_boundary_is_a_clean_no_op() {
-        let o = boundary_outcome(BoundaryJob {
-            key: key(0, 1),
-            di: 0,
-            iter_end: 5,
-            active: vec![],
-            stall_us: 0,
-        });
+        let o = boundary_outcome(bjob(key(0, 1), 0, 5, vec![], 0));
         assert!(o.still_active.is_empty() && o.gaps.is_empty());
         assert!(o.done.is_empty());
     }
@@ -352,12 +577,14 @@ mod tests {
         let pool = ExecutorPool::new(3);
         assert_eq!(pool.threads(), 3);
         let jobs: Vec<BoundaryJob> = (0..6u64)
-            .map(|i| BoundaryJob {
-                key: key(i, i as usize % 3),
-                di: i as usize,
-                iter_end: 1_000,
-                active: vec![seq(i, RequestClass::Online, 1, 50, 990)],
-                stall_us: (6 - i) * 3_000, // earliest key stalls longest
+            .map(|i| {
+                bjob(
+                    key(i, i as usize % 3),
+                    i as usize,
+                    1_000,
+                    vec![seq(i, RequestClass::Online, 1, 50, 990)],
+                    (6 - i) * 3_000, // earliest key stalls longest
+                )
             })
             .collect();
         let outs = pool.process(jobs);
@@ -365,17 +592,58 @@ mod tests {
         assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
         // Same pool again with the stalls inverted — order unchanged.
         let jobs: Vec<BoundaryJob> = (0..6u64)
-            .map(|i| BoundaryJob {
-                key: key(i, i as usize % 3),
-                di: i as usize,
-                iter_end: 1_000,
-                active: vec![],
-                stall_us: i * 3_000,
+            .map(|i| {
+                bjob(key(i, i as usize % 3), i as usize, 1_000, vec![], i * 3_000)
             })
             .collect();
         let order: Vec<u64> =
             pool.process(jobs).iter().map(|o| o.key.event).collect();
         assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn plan_proposals_merge_in_key_order_and_validate() {
+        use crate::config::SystemConfig;
+        use crate::coordinator::scheduler::BucketPlanner;
+        use crate::workload::Request;
+        let cfg = SystemConfig::default();
+        let pool = ExecutorPool::new(2);
+        let jobs: Vec<PlanJob> = (0..4usize)
+            .map(|si| {
+                let mut p = BucketPlanner::new(&cfg);
+                for i in 0..3u64 {
+                    let r = Request::new(
+                        si as u64 * 10 + i,
+                        RequestClass::Online,
+                        100,
+                        10,
+                        i,
+                    );
+                    p.admit(&r, i);
+                }
+                PlanJob {
+                    // Event ids deliberately descending in shard order so
+                    // the merge has to reorder across workers.
+                    key: SyncKey { at: 1_000, event: (4 - si) as u64, shard: si },
+                    now: 1_000,
+                    headroom: 100_000,
+                    snapshot: p.clone_box(),
+                }
+            })
+            .collect();
+        let props = pool.plan(jobs);
+        let events: Vec<u64> = props.iter().map(|p| p.key.event).collect();
+        assert_eq!(events, vec![1, 2, 3, 4], "proposals sorted by SyncKey");
+        for p in &props {
+            // Validation: exactly the captured inputs pass.
+            assert!(proposal_valid(p, 1_000, 100_000));
+            assert!(!proposal_valid(p, 1_000, 99_999), "stale headroom");
+            assert!(!proposal_valid(p, 1_001, 100_000), "stale clock");
+            // Speculation drained the snapshot, not any live planner:
+            // the formed members and the speculated residue add up.
+            let f = p.formed.as_ref().expect("queued work must form");
+            assert_eq!(f.reqs.len() + p.speculated.queued(), 3);
+        }
     }
 
     #[test]
@@ -396,13 +664,7 @@ mod tests {
         // and join them without hanging. The test passes by terminating.
         let pool = ExecutorPool::new(4);
         let jobs: Vec<BoundaryJob> = (0..3u64)
-            .map(|i| BoundaryJob {
-                key: key(i, 0), // all shard 0 → worker 0 only
-                di: 0,
-                iter_end: 10,
-                active: vec![],
-                stall_us: 0,
-            })
+            .map(|i| bjob(key(i, 0), 0, 10, vec![], 0)) // all → worker 0
             .collect();
         assert_eq!(pool.worker_of(0), 0);
         assert_eq!(pool.worker_of(5), 1);

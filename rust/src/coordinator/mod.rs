@@ -36,11 +36,13 @@
 //!   aggregated into the system view that feeds the batcher and
 //!   scheduler.
 //! * [`executor`] — the thread-per-shard parallel executor: same-instant
-//!   decode-iteration boundaries fan out to per-shard worker threads as
-//!   pure jobs and merge back in deterministic `(virtual_time,
-//!   event_id)` order; for any seed and any `executor.threads` the
-//!   Summary JSON is byte-identical to the sequential run (`threads =
-//!   1`, the default).
+//!   decode-iteration boundaries *and* per-shard prefill planning
+//!   (snapshot → speculate → commit, `executor.plan_offload`) fan out to
+//!   per-shard worker threads as pure jobs and merge back in
+//!   deterministic `(virtual_time, event_id)` order; for any seed, any
+//!   `executor.threads`, and either `plan_offload` setting the Summary
+//!   JSON is byte-identical to the sequential run (`threads = 1`, the
+//!   default).
 //! * [`scheduler`] — the thin P/D orchestrator shared by BucketServe and
 //!   the disaggregated baseline: pops events, dispatches to the fleet,
 //!   plans batches through per-shard [`PrefillPlanner`] plug-ins.

@@ -29,7 +29,10 @@ use super::balance;
 use super::batcher::{DynamicBatcher, FormedBatch, KvMemoryModel};
 use super::bucket::{BucketManager, QueuedReq};
 use super::events::{Event, EventId, EventKind, EventQueue};
-use super::executor::{self, BoundaryJob, BoundaryOutcome, ExecutorPool, SyncKey};
+use super::executor::{
+    self, BoundaryJob, BoundaryOutcome, ExecutorPool, PlanJob, PlanProposal,
+    SyncKey,
+};
 use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
 use super::monitor::GlobalMonitor;
 use super::preempt::PreemptionEngine;
@@ -50,9 +53,21 @@ use std::time::Instant;
 const MAX_SCHED_EVENTS: u64 = 50_000_000;
 
 /// Planner plug-in: how arriving requests queue and batches form.
-pub trait PrefillPlanner {
+///
+/// `Send` because the plan/commit protocol ships planner *snapshots*
+/// (see [`clone_box`](Self::clone_box)) to executor worker threads for
+/// speculation; the live planner itself never leaves the merge loop.
+pub trait PrefillPlanner: Send {
     /// A request arrived at the gateway.
     fn admit(&mut self, req: &Request, now: Micros);
+
+    /// Deep copy of the full planner state — the snapshot stage of the
+    /// executor's plan/commit protocol. Speculation runs [`plan`](Self::plan)
+    /// against the copy on a worker thread; committing the proposal
+    /// *installs* the copy as the shard's planner, so the copy must be
+    /// complete enough that installing it is indistinguishable from
+    /// having planned inline.
+    fn clone_box(&self) -> Box<dyn PrefillPlanner>;
 
     /// Form the next prefill batch given the target decode instance's KV
     /// headroom (in tokens). Returning None means "wait".
@@ -174,7 +189,7 @@ pub(crate) fn oldest_online_in<'a>(
 /// (min under insertion is a comparison); only removing the cached
 /// minimum itself forces a rescan, so `oldest_online` is O(1) amortized
 /// across the event loop.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct OnlinePeek {
     cached: Option<Option<QueuedReq>>,
 }
@@ -272,6 +287,11 @@ fn record_tbt_gap(
 
 /// BucketServe's planner: Bucketing Manager + Dynamic Batching Controller
 /// (+ the priority scorer when `cfg.priority.enabled`).
+///
+/// `Clone` is the snapshot stage of the executor's plan/commit protocol
+/// (see [`PrefillPlanner::clone_box`]): every field is plain owned data,
+/// so the derived clone is a complete deep copy.
+#[derive(Clone)]
 pub struct BucketPlanner {
     mgr: BucketManager,
     batcher: DynamicBatcher,
@@ -312,6 +332,10 @@ impl BucketPlanner {
 }
 
 impl PrefillPlanner for BucketPlanner {
+    fn clone_box(&self) -> Box<dyn PrefillPlanner> {
+        Box::new(self.clone())
+    }
+
     fn admit(&mut self, req: &Request, _now: Micros) {
         let q = QueuedReq {
             id: req.id,
@@ -340,14 +364,11 @@ impl PrefillPlanner for BucketPlanner {
         // the queue's mean full-context length — the Global Monitor view).
         let queued = self.mgr.total();
         if queued > 0 {
-            let mean_len: f64 = self
-                .mgr
-                .buckets()
-                .iter()
-                .flat_map(|b| b.requests.iter())
-                .map(|r| r.footprint() as f64)
-                .sum::<f64>()
-                / queued as f64;
+            // Integer-exact total (one u64 sum in the manager) instead
+            // of a per-request f64 accumulation, so the mean — and the
+            // N_max it derives — cannot drift with summation order when
+            // a planner snapshot replans on a worker thread.
+            let mean_len = self.mgr.total_footprint() as f64 / queued as f64;
             let n_max = (headroom_tokens as f64 / mean_len.max(1.0))
                 .floor()
                 .max(1.0) as usize;
@@ -400,12 +421,7 @@ impl PrefillPlanner for BucketPlanner {
     }
 
     fn queued_tokens(&self) -> u64 {
-        self.mgr
-            .buckets()
-            .iter()
-            .flat_map(|b| b.requests.iter())
-            .map(QueuedReq::footprint)
-            .sum()
+        self.mgr.total_footprint()
     }
 
     fn steal_tail(
@@ -589,13 +605,36 @@ pub struct RunReport {
     /// contract (parallel output byte-identical to sequential) holds
     /// exactly; the `shard_scaling` bench surfaces them per row.
     pub executor_threads: usize,
-    /// Synchronization points the parallel executor processed (maximal
-    /// same-instant runs of decode-iteration boundaries fanned out to
-    /// workers). Deterministic: a function of the virtual-time schedule,
-    /// not of thread timing. 0 on the sequential path.
+    /// Synchronization points the parallel executor processed: maximal
+    /// same-instant runs of decode-iteration boundaries, plus (with
+    /// `executor.plan_offload`) dispatch rounds whose plan speculations
+    /// were fanned out to workers. Deterministic: a function of the
+    /// virtual-time schedule, not of thread timing. 0 on the sequential
+    /// path.
     pub executor_sync_points: u64,
     /// Boundary events that crossed a worker channel. 0 when sequential.
     pub executor_parallel_events: u64,
+    /// Prefill dispatch rounds in which at least one shard planned
+    /// (speculatively or inline). Deterministic — a function of the
+    /// schedule — and counted identically in both modes, so it is the
+    /// denominator for the per-round planning wall-clock columns.
+    pub executor_plan_rounds: u64,
+    /// Plan speculations that crossed a worker channel (the plan/commit
+    /// protocol's fan-out volume). 0 when sequential or when
+    /// `executor.plan_offload` is off. Deterministic.
+    pub executor_parallel_plans: u64,
+    /// Proposals rejected by commit-time validation (stale headroom →
+    /// inline re-plan). Deterministic.
+    pub executor_plan_invalidations: u64,
+    /// Wall-clock the merge loop itself spent on planning, ns: the eager
+    /// speculation block (snapshot + blocking on the worker fan-out) plus
+    /// every inline plan/re-plan. Host-dependent — RunReport/bench tables
+    /// only, never Summary JSON (same rule as `bucket_overhead_ns`,
+    /// which Summary normalizes away).
+    pub plan_merge_ns: u64,
+    /// Wall-clock workers spent inside plan speculations, ns (Σ over
+    /// proposals; off-merge-loop time). Host-dependent, RunReport only.
+    pub plan_worker_ns: u64,
     /// Set when the run ended abnormally (scheduler stall / livelock
     /// guard); carries the diagnostics the old panic printed. Completions
     /// gathered before the stall are still reported.
@@ -948,6 +987,9 @@ impl PdScheduler {
             preempt_wake: None,
             recheck_preempt: false,
             restore_buf: Vec::new(),
+            deferred_mask: Vec::new(),
+            boundary_scratch: Vec::new(),
+            plan_offload: parallel && self.cfg.executor.plan_offload,
             prefix: prefix_caches,
             prefix_affinity: self.cfg.sharding.placement
                 == Placement::PrefixAffinity,
@@ -1099,6 +1141,22 @@ struct RunCore<'a> {
     /// `sharding.placement == PrefixAffinity`: arrivals with a resident
     /// prefix match bypass the load-based router for the owning shard.
     prefix_affinity: bool,
+    /// Per-shard "already deferred this round" mask for
+    /// [`RunCore::dispatch_prefill`] — reused across rounds (cleared, not
+    /// reallocated) so the membership test the old `Vec<usize>` +
+    /// `contains` scan paid is one indexed load.
+    deferred_mask: Vec<bool>,
+    /// Recycled `(gaps, done)` output buffers for boundary jobs: popped
+    /// in [`RunCore::take_boundary_job`], refilled by the worker, drained
+    /// and returned in [`RunCore::apply_boundary`]. Together with the
+    /// in-place `active` compaction this makes steady-state sync points
+    /// allocation-free.
+    boundary_scratch: Vec<(Vec<executor::GapSample>, Vec<executor::FinishedSeq>)>,
+    /// `executor.plan_offload` resolved against the run mode: true only
+    /// when the pool exists. Gates the eager speculation fan-out in
+    /// [`RunCore::dispatch_prefill`]; planning falls back inline (same
+    /// pipeline, lazy) when false.
+    plan_offload: bool,
 }
 
 impl<'a> RunCore<'a> {
@@ -1400,7 +1458,10 @@ impl<'a> RunCore<'a> {
         }
         let iter_end = d.iter_end.take().unwrap();
         let active = std::mem::take(&mut d.active);
-        Some(BoundaryJob { key, di, iter_end, active, stall_us: 0 })
+        // Recycled output buffers: returned (cleared, capacity kept) by
+        // `apply_boundary`, so steady-state boundaries allocate nothing.
+        let (gaps, done) = self.boundary_scratch.pop().unwrap_or_default();
+        Some(BoundaryJob { key, di, iter_end, active, gaps, done, stall_us: 0 })
     }
 
     /// Apply stage of a decode-iteration boundary: fold one
@@ -1409,8 +1470,9 @@ impl<'a> RunCore<'a> {
     /// pre-executor handler used (gap records in active-set order, then
     /// completions in active-set order).
     fn apply_boundary(&mut self, o: BoundaryOutcome) {
-        let shard = self.shards.owner_of(o.di);
-        for g in &o.gaps {
+        let BoundaryOutcome { key: _, di, still_active, mut gaps, mut done } = o;
+        let shard = self.shards.owner_of(di);
+        for g in &gaps {
             record_tbt_gap(
                 &mut self.report,
                 self.admission,
@@ -1419,19 +1481,24 @@ impl<'a> RunCore<'a> {
                 g.gap,
             );
         }
-        self.decode.get_mut(o.di).active = o.still_active;
-        for f in o.done {
-            let d = self.decode.get_mut(o.di);
+        // Survivors travel back in the buffer the capture stage moved
+        // out (compacted in place on the worker) — no allocation.
+        self.decode.get_mut(di).active = still_active;
+        for f in done.drain(..) {
+            let d = self.decode.get_mut(di);
             d.reserved_tokens = d.reserved_tokens.saturating_sub(f.footprint);
             self.monitor.kv_release(shard, f.footprint);
             self.monitor.on_decode_exit(1);
             // A completed sequence's shared-prefix pins unpin; the blocks
             // stay resident (cache-charged) until LRU eviction reclaims
             // them, which is the whole point of cross-request reuse.
-            self.release_prefix_pins(o.di, &f.prefix);
+            self.release_prefix_pins(di, &f.prefix);
             self.engine.release(f.completion.id);
             self.report.completions.push(f.completion);
         }
+        // Return the output buffers to the scratch pool, capacity kept.
+        gaps.clear();
+        self.boundary_scratch.push((gaps, done));
     }
 
     /// Drop one departing sequence's refcounts on its pinned prefix
@@ -1968,44 +2035,161 @@ impl<'a> RunCore<'a> {
         self.shards.get_mut(si).planner.absorb(ready, clock);
     }
 
+    /// Consume stage of the plan/commit protocol — the ONLY way a shard
+    /// plans during a dispatch round, in both executor modes. Commit a
+    /// speculative [`PlanProposal`] when one is waiting and its captured
+    /// inputs still hold (install the speculated planner state, take the
+    /// formed batch); otherwise run the identical snapshot → speculate →
+    /// install pipeline inline (the sequential mode and the re-plan path
+    /// after an invalidation). Installing the clone an inline
+    /// speculation just mutated is indistinguishable from having planned
+    /// on the live planner, so parallel ≡ sequential ≡ the pre-protocol
+    /// `planner.plan()` call, instruction for instruction.
+    fn consume_plan(
+        &mut self,
+        si: usize,
+        headroom: u64,
+        proposals: &mut [Option<PlanProposal>],
+        planned: &mut bool,
+    ) -> Option<FormedBatch> {
+        if self.shards.get(si).planner.queued() == 0 {
+            // Nothing to plan over — and provably no proposal either
+            // (speculation is only fanned out for non-empty queues, and
+            // a queue cannot empty mid-round without its proposal being
+            // consumed by the commit that drained it).
+            return None;
+        }
+        if let Some(p) = proposals[si].take() {
+            if executor::proposal_valid(&p, self.clock, headroom) {
+                *planned = true;
+                self.shards.get_mut(si).planner = p.speculated;
+                return p.formed;
+            }
+            // Stale: an earlier commit this round changed the shard's
+            // target headroom. Discard (the live planner was never
+            // touched by the speculation) and re-plan inline below.
+            self.report.executor_plan_invalidations += 1;
+        }
+        *planned = true;
+        let t0 = Instant::now();
+        let p = executor::speculate_plan(PlanJob {
+            // Never crosses a channel — no merge key to allocate.
+            key: SyncKey { at: self.clock, event: 0, shard: si },
+            now: self.clock,
+            headroom,
+            snapshot: self.shards.get(si).planner.clone_box(),
+        });
+        self.shards.get_mut(si).planner = p.speculated;
+        self.report.plan_merge_ns += t0.elapsed().as_nanos() as u64;
+        p.formed
+    }
+
     /// Form and dispatch prefill batches onto idle instances. The shard
     /// layer supplies the candidates: shards in descending order of their
     /// best owned decode instance's KV headroom (Eq. 6 admission), each
     /// paired with that target instance. The first shard whose planner
     /// yields a batch wins; with one shard this is exactly the seed's
     /// global max-headroom `best_target` scan.
+    ///
+    /// Planning runs behind the executor's plan/commit protocol: with
+    /// `plan_offload`, every candidate shard's planner is snapshotted up
+    /// front and speculated on the worker pool while the merge loop
+    /// waits, then each shard's proposal is committed (or invalidated
+    /// and re-planned inline) at the moment the headroom scan reaches it
+    /// — see [`RunCore::consume_plan`]. The dispatch order is computed
+    /// once per round and repaired entry-by-entry as commits change
+    /// shards' target headroom ([`ShardSet::repair_dispatch_order`]),
+    /// instead of the old from-scratch recompute per idle instance.
     fn dispatch_prefill(&mut self) {
+        if (0..self.prefill.n()).all(|pi| !self.prefill.is_idle(pi)) {
+            return;
+        }
         // Shards whose head batch the admission gate deferred this round:
         // nothing about the decision's inputs changes within one dispatch
         // pass, so re-planning the same batch for the next idle prefill
         // instance would just repeat the plan/sort/absorb churn (and
         // double-count the deferral). Cleared every round — the *next*
-        // event re-evaluates against fresh decode state.
-        let mut deferred_shards: Vec<usize> = Vec::new();
+        // event re-evaluates against fresh decode state. (A reused
+        // boolean mask: the old `Vec<usize>` + `contains` scan was
+        // O(deferred) per candidate.)
+        self.deferred_mask.clear();
+        self.deferred_mask.resize(self.shards.n(), false);
+        let mut order = self
+            .shards
+            .dispatch_order(&self.decode, self.per_decode_budget);
+        // Eager speculation fan-out: snapshot every candidate shard with
+        // queued work and let the workers plan them all concurrently.
+        // Proposals land indexed by shard, awaiting their commit/discard
+        // at the scan below. The elapsed time of this whole block —
+        // snapshots plus blocking on the slowest worker — is what the
+        // merge loop actually pays for planning (`plan_merge_ns`); the
+        // Σ of per-proposal worker time (`plan_worker_ns`) is what it
+        // would have paid inline.
+        let mut proposals: Vec<Option<PlanProposal>> =
+            (0..self.shards.n()).map(|_| None).collect();
+        if self.plan_offload {
+            let t0 = Instant::now();
+            let mut jobs: Vec<PlanJob> = Vec::new();
+            for &(si, _, headroom) in &order {
+                if self.shards.get(si).planner.queued() == 0 {
+                    continue;
+                }
+                jobs.push(PlanJob {
+                    key: SyncKey {
+                        at: self.clock,
+                        event: self.events.stamp(),
+                        shard: si,
+                    },
+                    now: self.clock,
+                    headroom,
+                    snapshot: self.shards.get(si).planner.clone_box(),
+                });
+            }
+            if !jobs.is_empty() {
+                let props = self
+                    .pool
+                    .as_ref()
+                    .expect("plan offload without a worker pool")
+                    .plan(jobs);
+                self.report.executor_sync_points += 1;
+                self.report.executor_parallel_plans += props.len() as u64;
+                for p in props {
+                    self.report.plan_worker_ns += p.spec_ns;
+                    proposals[p.key.shard] = Some(p);
+                }
+            }
+            self.report.plan_merge_ns += t0.elapsed().as_nanos() as u64;
+        }
+        let mut planned = false;
         for pi in 0..self.prefill.n() {
             if !self.prefill.is_idle(pi) {
                 continue;
             }
-            let mut order = self
-                .shards
-                .dispatch_order(&self.decode, self.per_decode_budget);
             // A prefill abort promised its slot to the preempting
-            // candidate's shard; honor that before the headroom order.
-            if let Some(bs) = self.boost_shard.take() {
-                if let Some(pos) = order.iter().position(|&(si, _, _)| si == bs)
-                {
-                    let entry = order.remove(pos);
-                    order.insert(0, entry);
-                }
-            }
+            // candidate's shard; honor that before the headroom order —
+            // as an iteration adapter (boosted entry first, then the
+            // rest in order), leaving the cached order itself intact.
+            let boost_pos = self.boost_shard.take().and_then(|bs| {
+                order.iter().position(|&(si, _, _)| si == bs)
+            });
+            let scan: Vec<usize> = match boost_pos {
+                Some(bp) => std::iter::once(bp)
+                    .chain((0..order.len()).filter(|&i| i != bp))
+                    .collect(),
+                None => (0..order.len()).collect(),
+            };
             let mut chosen: Option<(usize, usize, FormedBatch)> = None;
-            for &(si, ti, headroom) in &order {
-                if deferred_shards.contains(&si) {
+            for &oi in &scan {
+                let (si, ti, headroom) = order[oi];
+                if self.deferred_mask[si] {
                     continue;
                 }
-                let Some(f) =
-                    self.shards.get_mut(si).planner.plan(self.clock, headroom)
-                else {
+                let Some(f) = self.consume_plan(
+                    si,
+                    headroom,
+                    &mut proposals,
+                    &mut planned,
+                ) else {
                     continue;
                 };
                 if self.admission_active && self.admission.defer_enabled() {
@@ -2027,7 +2211,7 @@ impl<'a> RunCore<'a> {
                             // events, so the retry cadence is its online
                             // actives draining — no lost wake-up.
                             self.report.admission_deferrals += 1;
-                            deferred_shards.push(si);
+                            self.deferred_mask[si] = true;
                             self.shards
                                 .get_mut(si)
                                 .planner
@@ -2161,6 +2345,25 @@ impl<'a> RunCore<'a> {
                     done_event,
                 },
             );
+            // Commit bookkeeping. Any proposal still held for this shard
+            // speculated over a queue that just changed — drop it
+            // outright (commit-time validation alone could miss a
+            // zero-footprint commit, which leaves headroom untouched
+            // while the queue shrank). Then repair the shard's entry in
+            // the cached dispatch order: this commit's reservations only
+            // moved *this* shard's target headroom — shards own disjoint
+            // decode instances — so one entry repair keeps the cache
+            // byte-identical to a full recompute.
+            proposals[si] = None;
+            self.shards.repair_dispatch_order(
+                &mut order,
+                si,
+                &self.decode,
+                self.per_decode_budget,
+            );
+        }
+        if planned {
+            self.report.executor_plan_rounds += 1;
         }
     }
 
@@ -2775,6 +2978,149 @@ mod tests {
                 );
             }
         });
+    }
+
+    #[test]
+    fn prop_plan_commit_speculate_matches_inline() {
+        // The plan/commit protocol's core equivalence, for both planner
+        // families: running `plan` on a worker-thread *snapshot* and
+        // committing the result (installing the speculated state) is
+        // indistinguishable from planning inline on the live planner —
+        // whatever traffic preceded the plan and however many rival
+        // speculations from the same snapshot state were produced and
+        // discarded in between (speculation is pure, so discards leave
+        // zero trace and any rival commits identically).
+        use crate::baselines::distserve::FcfsPlanner;
+        prop::check("speculate-over-snapshot ≡ inline planning", 40, |g| {
+            let mut cfg = SystemConfig::default();
+            cfg.priority.enabled = g.bool();
+            let bucket = g.bool();
+            let mk = |cfg: &SystemConfig| -> Box<dyn PrefillPlanner> {
+                if bucket {
+                    Box::new(BucketPlanner::new(cfg))
+                } else {
+                    Box::new(FcfsPlanner::new(cfg))
+                }
+            };
+            // `live` runs the sequential (inline) consume path; `spec`
+            // the speculative one with random rival/discard
+            // interleavings. Identical traffic feeds both.
+            let mut live = mk(&cfg);
+            let mut spec = mk(&cfg);
+            let mut now: Micros = 0;
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1, 30) {
+                now += g.u64(0, 50_000);
+                for _ in 0..g.usize(0, 4) {
+                    let class = if g.bool() {
+                        RequestClass::Online
+                    } else {
+                        RequestClass::Offline
+                    };
+                    let req = Request::new(
+                        next_id,
+                        class,
+                        g.u64(1, 4000) as u32,
+                        g.u64(1, 400) as u32,
+                        g.u64(0, now + 1),
+                    );
+                    live.admit(&req, now);
+                    spec.admit(&req, now);
+                    next_id += 1;
+                }
+                let headroom = g.u64(0, 30_000);
+                // Inline pipeline (what consume_plan does sequentially).
+                let pa = executor::speculate_plan(PlanJob {
+                    key: SyncKey { at: now, event: 0, shard: 0 },
+                    now,
+                    headroom,
+                    snapshot: live.clone_box(),
+                });
+                live = pa.speculated;
+                // Speculative pipeline: several rival proposals off the
+                // same snapshot state, commit a random one, drop the
+                // rest on the floor.
+                let n_props = g.usize(1, 3);
+                let mut props: Vec<PlanProposal> = (0..n_props)
+                    .map(|i| {
+                        executor::speculate_plan(PlanJob {
+                            key: SyncKey {
+                                at: now,
+                                event: i as u64,
+                                shard: 0,
+                            },
+                            now,
+                            headroom,
+                            snapshot: spec.clone_box(),
+                        })
+                    })
+                    .collect();
+                let pb = props.swap_remove(g.usize(0, n_props - 1));
+                assert!(executor::proposal_valid(&pb, now, headroom));
+                assert!(!executor::proposal_valid(&pb, now, headroom + 1));
+                spec = pb.speculated;
+                match (&pa.formed, &pb.formed) {
+                    (Some(fa), Some(fb)) => {
+                        assert_eq!(
+                            fa.signature(),
+                            fb.signature(),
+                            "speculated batch diverged from inline"
+                        );
+                    }
+                    (None, None) => {}
+                    _ => panic!("one pipeline formed a batch, the other not"),
+                }
+                assert_eq!(live.queued(), spec.queued());
+                assert_eq!(live.queued_tokens(), spec.queued_tokens());
+                assert_eq!(live.oldest_online(), spec.oldest_online());
+            }
+        });
+    }
+
+    #[test]
+    fn plan_commit_stale_proposal_replans_not_dispatches() {
+        // A proposal speculated against headroom an earlier commit then
+        // consumed must FAIL commit-time validation and be replaced by
+        // an inline re-plan against the real headroom — never dispatch
+        // the stale (over-sized) batch, and never lose a request.
+        let cfg = SystemConfig::default();
+        let mut live: Box<dyn PrefillPlanner> =
+            Box::new(BucketPlanner::new(&cfg));
+        for i in 0..2u64 {
+            // Footprint 110 each (len 100 + output 10).
+            live.admit(&Request::new(i, RequestClass::Online, 100, 10, i), i);
+        }
+        let now: Micros = 1_000;
+        // Speculate against generous headroom: both requests fit.
+        let p = executor::speculate_plan(PlanJob {
+            key: SyncKey { at: now, event: 0, shard: 0 },
+            now,
+            headroom: 10_000,
+            snapshot: live.clone_box(),
+        });
+        assert_eq!(p.formed.as_ref().unwrap().reqs.len(), 2);
+        // By commit time, an earlier commit shrank the target to one
+        // request's worth of headroom. Validation rejects the proposal…
+        let headroom_now = 115;
+        assert!(!executor::proposal_valid(&p, now, headroom_now));
+        drop(p); // …the speculated clone drops with zero trace…
+        // …and the shard re-plans inline against the real headroom:
+        // consume_plan's invalidation path, verbatim.
+        let rp = executor::speculate_plan(PlanJob {
+            key: SyncKey { at: now, event: 0, shard: 0 },
+            now,
+            headroom: headroom_now,
+            snapshot: live.clone_box(),
+        });
+        live = rp.speculated;
+        let f = rp.formed.expect("one request fits the shrunk headroom");
+        assert_eq!(f.reqs.len(), 1, "stale two-request batch must not ship");
+        // Conservation: dispatched + still-queued covers both requests.
+        assert_eq!(live.queued(), 1);
+        let mut ids: Vec<u64> = f.reqs.iter().map(|r| r.id).collect();
+        ids.push(live.oldest_online().expect("survivor still queued").id);
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
     }
 
     #[test]

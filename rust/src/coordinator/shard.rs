@@ -239,6 +239,32 @@ impl ShardSet {
         order
     }
 
+    /// Repair one shard's entry in a cached [`ShardSet::dispatch_order`]
+    /// after a commit changed its target's headroom, instead of
+    /// recomputing the whole order from scratch: remove the stale entry,
+    /// re-resolve the shard's best owned decode instance, and re-insert
+    /// at the sorted position. The insertion predicate mirrors the sort
+    /// comparator exactly (descending headroom, ascending shard id on
+    /// ties), so the repaired vector is byte-identical to a full
+    /// recompute — pinned by `repair_matches_full_recompute` below.
+    pub fn repair_dispatch_order(
+        &self,
+        order: &mut Vec<(usize, usize, u64)>,
+        si: usize,
+        decode: &DecodeFleet,
+        per_budget: u64,
+    ) {
+        if let Some(pos) = order.iter().position(|&(s, _, _)| s == si) {
+            order.remove(pos);
+        }
+        let (ti, headroom) =
+            balance::best_decode_in(&self.shards[si].owned, decode, per_budget);
+        let at = order.partition_point(|&(s, _, h)| {
+            h > headroom || (h == headroom && s < si)
+        });
+        order.insert(at, (si, ti, headroom));
+    }
+
     /// Work-stealing pass, run at decode-iteration boundaries: every
     /// shard with an empty queue and free KV pulls up to half of the
     /// most-loaded shard's queue — specifically the *tail* of its
@@ -534,6 +560,56 @@ mod tests {
         let order = set.dispatch_order(&decode, 1000);
         // Shards 1 and 2 tie at 900 headroom → shard id order; shard 0 last.
         assert_eq!(order, vec![(1, 1, 900), (2, 2, 900), (0, 0, 500)]);
+    }
+
+    #[test]
+    fn repair_matches_full_recompute() {
+        // Satellite: dispatch_prefill caches the round's order and only
+        // repairs entries a commit changed. The repaired vector must be
+        // byte-identical to a from-scratch dispatch_order, including on
+        // headroom ties (where shard id breaks), so exercise random
+        // reservation changes across random fleets.
+        prop::check("repair_dispatch_order ≡ full recompute", 60, |g| {
+            let cfg = SystemConfig::default();
+            let n_decode = g.usize(1, 6);
+            let spec = ShardingSpec {
+                shards: g.usize(0, 4) as u32,
+                ..Default::default()
+            };
+            let set = ShardSet::new(&spec, n_decode, || planner(&cfg));
+            let per_budget = g.u64(500, 5_000);
+            let mut decode = DecodeFleet::new(n_decode);
+            for d in 0..n_decode {
+                // Coarse quantization makes headroom ties likely.
+                decode.get_mut(d).reserved_tokens =
+                    g.u64(0, 4) * per_budget / 4;
+            }
+            let mut cached = set.dispatch_order(&decode, per_budget);
+            // A sequence of commits, each changing one shard's target
+            // reservations then repairing that shard's entry.
+            for _ in 0..g.usize(1, 8) {
+                let si = g.usize(0, set.n() - 1);
+                let (_, ti, _) = *cached
+                    .iter()
+                    .find(|&&(s, _, _)| s == si)
+                    .expect("every shard has an entry");
+                let d = decode.get_mut(ti);
+                d.reserved_tokens =
+                    (d.reserved_tokens + g.u64(0, per_budget / 2))
+                        .min(per_budget);
+                set.repair_dispatch_order(
+                    &mut cached,
+                    si,
+                    &decode,
+                    per_budget,
+                );
+                assert_eq!(
+                    cached,
+                    set.dispatch_order(&decode, per_budget),
+                    "repaired order diverged from full recompute"
+                );
+            }
+        });
     }
 
     #[test]

@@ -263,28 +263,42 @@ fn executor_determinism_matrix_across_threads_and_features() {
             base.slo.tbt_us = 40_000;
             base.preempt.urgency_threshold = 0.5;
             base.prefix.cache_frac = 0.05;
-            let summary = |threads: u32| {
+            let summary = |threads: u32, plan_offload: bool| {
                 let mut cfg = base.clone();
                 cfg.executor.threads = threads;
+                cfg.executor.plan_offload = plan_offload;
                 let mut r = System::BucketServe.run_sim(&cfg, trace);
                 let resolved = r.executor_threads;
+                let plans = r.executor_parallel_plans;
                 r.bucket_overhead_ns = 0; // wall clock: the one normalized field
                 let json = Summary::from_report("BucketServe", &r, &cfg.slo)
                     .to_json()
                     .to_string();
-                (resolved, json)
+                (resolved, plans, json)
             };
-            let (t1, sequential) = summary(1);
+            let (t1, p1, sequential) = summary(1, true);
             assert_eq!(t1, 1);
+            assert_eq!(p1, 0, "sequential mode must not fan out plans");
+            // The parallel-planning axis: threads × plan_offload. Every
+            // cell — planning speculated on workers or inline on the
+            // merge loop — must reproduce the sequential bytes.
             for threads in [2u32, 0] {
-                let (tn, parallel) = summary(threads);
-                assert!(tn > 1, "matrix config must actually go parallel");
-                assert_eq!(
-                    parallel, sequential,
-                    "threads={threads} diverged from sequential \
-                     (priority={priority} preempt={preempt} \
-                     admission={admission} prefix={prefix} seed={seed})"
-                );
+                for plan_offload in [true, false] {
+                    let (tn, plans, parallel) = summary(threads, plan_offload);
+                    assert!(tn > 1, "matrix config must actually go parallel");
+                    assert_eq!(
+                        plans > 0,
+                        plan_offload,
+                        "plan fan-out must follow executor.plan_offload"
+                    );
+                    assert_eq!(
+                        parallel, sequential,
+                        "threads={threads} plan_offload={plan_offload} \
+                         diverged from sequential (priority={priority} \
+                         preempt={preempt} admission={admission} \
+                         prefix={prefix} seed={seed})"
+                    );
+                }
             }
         }
     }
@@ -315,6 +329,10 @@ fn prop_executor_determinism_under_cross_shard_stress() {
         cfg.preempt.urgency_threshold = g.f64_in(0.05, 1.0);
         cfg.admission.enabled = g.bool();
         cfg.admission.slack_margin = g.f64_in(0.0, 0.5);
+        // Random parallel-planning mode: offloaded speculation and
+        // inline planning must both reproduce the sequential schedule
+        // (the sequential run below never consults this flag).
+        cfg.executor.plan_offload = g.bool();
         cfg.slo.ttft_us = g.u64(1_000_000, 20_000_000);
         cfg.slo.tbt_us = g.u64(25_000, 120_000);
         let trace = Trace::mixed_classes(
@@ -389,6 +407,10 @@ fn prop_executor_determinism_under_cross_shard_stress() {
         assert_eq!(par.makespan_us, seq_r.makespan_us);
         assert_eq!(par.decode_iters, seq_r.decode_iters);
         assert_eq!(par.prefill_batches, seq_r.prefill_batches);
+        // Plan rounds are a function of the schedule, counted by the
+        // consume stage both modes share — so they match exactly (unlike
+        // invalidations, which only exist under eager speculation).
+        assert_eq!(par.executor_plan_rounds, seq_r.executor_plan_rounds);
     });
 }
 

@@ -8,7 +8,10 @@
 # rows are virtual-time deterministic, so diffs in `rows` across
 # commits are real scheduling changes, not hardware noise — only the
 # wall-clock columns some benches print in their *tables* vary by host,
-# and those are not scraped.
+# and those are not scraped. Benches may append extra deterministic
+# counters to each row as a "bench" sub-object (e.g. shard_scaling's
+# plan_rounds / parallel_plans / plan_invalidations from the executor's
+# plan/commit protocol); planning wall-clock stays table-only.
 #
 # Usage: scripts/refresh_bench_baselines.sh [bench ...]
 #   (default: every bench with a snapshot file in benches/baselines/)
