@@ -1,0 +1,115 @@
+//! Loopback load bench for the realtime serving path: sustained-RPS
+//! sweep with online TTFT/TBT attainment columns.
+//!
+//! Each row replays a generated arrival schedule against a live
+//! `PdScheduler::run_realtime` loop over the wall-clock
+//! `RealtimeEngine`, submitting through the same `LiveCmd` channel the
+//! TCP front end uses and draining every request's stream sink. Time is
+//! pace-compressed: engine durations are divided by `realtime.pace`,
+//! the submitter compresses the trace's inter-arrival gaps by the same
+//! factor, and the SLO budgets are scaled identically — so attainment
+//! is measured against budgets that mean the same thing they mean at
+//! `pace = 1.0`.
+//!
+//! Unlike the simulation benches, these rows are *wall-clock* numbers:
+//! scheduler poll latency, thread wakeup jitter, and host load all leak
+//! into TTFT/TBT, which is precisely what the realtime path exists to
+//! measure. Expect run-to-run noise; the baseline snapshot records a
+//! reference capture, not a deterministic contract (see
+//! benches/baselines/BENCH_realtime_load.json).
+
+use bucketserve::cluster::realtime::RealtimeEngine;
+use bucketserve::config::SystemConfig;
+use bucketserve::coordinator::scheduler::BucketPlanner;
+use bucketserve::coordinator::{LiveCmd, PdScheduler, RunReport, StreamSink};
+use bucketserve::metrics::Summary;
+use bucketserve::util::bench::{f1, f2, Table};
+use bucketserve::workload::{Dataset, RequestClass, Trace};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Wall-time compression: 1 simulated second runs in 0.5 ms.
+const PACE: f64 = 2_000.0;
+
+/// Drive one arrival schedule through the realtime loop; returns the
+/// drained run report.
+fn run_row(cfg: &SystemConfig, trace: &Trace) -> RunReport {
+    let (tx, rx) = mpsc::channel::<LiveCmd>();
+    thread::scope(|s| {
+        let server = s.spawn(move || {
+            let mut engine = RealtimeEngine::new(cfg);
+            let mut sched =
+                PdScheduler::new(cfg, || Box::new(BucketPlanner::new(cfg)));
+            sched.run_realtime(&mut engine, rx)
+        });
+        let t0 = Instant::now();
+        let mut sinks = Vec::with_capacity(trace.requests.len());
+        for r in &trace.requests {
+            let due = Duration::from_micros((r.arrival as f64 / PACE) as u64);
+            if let Some(gap) = due.checked_sub(t0.elapsed()) {
+                thread::sleep(gap);
+            }
+            let sink = StreamSink::new(cfg.realtime.stream_buf.max(1) as usize);
+            let cmd = LiveCmd::Submit { req: r.clone(), sink: sink.clone() };
+            tx.send(cmd).expect("serving loop alive");
+            sinks.push(sink);
+        }
+        // Closed-loop drain: consume every stream to its final line.
+        for sink in &sinks {
+            while !sink.finished() {
+                let _ = sink.recv_timeout(Duration::from_millis(20));
+            }
+        }
+        tx.send(LiveCmd::Shutdown).expect("serving loop alive");
+        drop(tx);
+        server.join().expect("serving loop panicked")
+    })
+}
+
+fn main() {
+    println!(
+        "realtime_load — wall-clock serving loop under sustained RPS \
+         (pace {PACE})\n"
+    );
+    let mut cfg = SystemConfig::default();
+    cfg.realtime.pace = PACE;
+    // Budgets scaled with the pace so attainment is meaningful in
+    // compressed time.
+    cfg.slo.ttft_us = ((400_000.0 / PACE) as u64).max(1);
+    cfg.slo.tbt_us = ((100_000.0 / PACE) as u64).max(1);
+    let online = RequestClass::Online;
+    let mut t = Table::new(&[
+        "rps", "n", "done", "TTFT attain", "TBT attain", "mean TTFT ms",
+        "p99 gap ms", "drops",
+    ]);
+    for &rps in &[2.0f64, 6.0, 12.0] {
+        let trace = Trace::generate(
+            Dataset::Alpaca, 48, rps, online, cfg.model.max_seq, cfg.seed,
+        );
+        let r = run_row(&cfg, &trace);
+        let s = Summary::from_report(
+            &format!("BucketServe/realtime/rps{rps}"),
+            &r,
+            &cfg.slo,
+        );
+        println!("{}", s.to_json());
+        // Report latencies in *simulated* milliseconds (compressed wall
+        // time re-expanded by the pace) so rows are comparable with the
+        // virtual-time benches.
+        t.row(vec![
+            f1(rps),
+            trace.len().to_string(),
+            r.completions.len().to_string(),
+            f2(r.slo_attainment_class(online, cfg.slo.ttft_us, u64::MAX)),
+            f2(r.tbt_attainment_class(online)),
+            f1(r.mean_ttft_class_us(online) * PACE / 1e3),
+            f1(r.tbt_gap_percentile_us(online, 99.0) * PACE / 1e3),
+            r.stream_drops.to_string(),
+        ]);
+    }
+    t.print(
+        "realtime loopback: 48 Alpaca online requests per row, arrival \
+         schedule and SLO budgets pace-compressed together",
+    );
+}

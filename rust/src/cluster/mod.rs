@@ -10,11 +10,17 @@
 //! * [`crate::runtime::PjrtEngine`] — real execution of the AOT-compiled
 //!   JAX+Pallas artifacts on the PJRT CPU client, in wall time; used by the
 //!   end-to-end examples.
+//! * [`realtime::RealtimeEngine`] — the simulator's cost oracle executed
+//!   as wall-clock blocking sleeps (optionally pace-compressed), with
+//!   `projected_decode_us` served from an EWMA over *observed* iteration
+//!   latencies instead of the cost model; drives the live serving path
+//!   ([`crate::server::realtime`]).
 //!
 //! The scheduler is engine-agnostic: it plans batches, asks the engine for
 //! durations (simulated or measured), and owns all queueing/timeline logic.
 
 pub mod gpu;
+pub mod realtime;
 pub mod sim;
 
 use crate::config::ModelSpec;

@@ -1,0 +1,166 @@
+//! `RealtimeEngine`: the wall-clock execution substrate for the live
+//! serving path.
+//!
+//! Wraps [`SimEngine`]'s cost oracle but *blocks* for each step's
+//! duration, so the scheduler's realtime drive mode experiences genuine
+//! wall-clock execution (timestamps come from the wall, not the event
+//! clock). Two deliberate differences from the simulator:
+//!
+//! * **Pace.** Durations are divided by `realtime.pace` before sleeping
+//!   and before being returned, so tests and the loopback bench compress
+//!   time (e.g. `pace = 1000` runs a 24 ms decode iteration as a 24 µs
+//!   sleep). All wall-clock metrics of a paced run are in compressed
+//!   time; callers that score SLO attainment scale the SLO budgets by
+//!   the same factor. `pace = 1.0` is true wall-clock.
+//! * **Observed projection.** `projected_decode_us` does **not** consult
+//!   the cost model — a real engine has none. It serves the
+//!   EWMA-fitted [`ObservedDecodeModel`] fed by this engine's own
+//!   completed iterations, which is what lets TBT admission and
+//!   preemption run on engines whose latency is only measurable. The
+//!   model handle is shared ([`RealtimeEngine::observed`]) so the
+//!   server's `loads` introspection can read the live fit.
+
+use std::sync::{Arc, Mutex};
+
+use super::sim::SimEngine;
+use super::{DecodeBatch, Engine, PrefillBatch};
+use crate::config::{ModelSpec, SystemConfig};
+use crate::coordinator::monitor::ObservedDecodeModel;
+use crate::workload::RequestId;
+use crate::Micros;
+
+/// Shared handle onto the observed decode-latency model: written by the
+/// engine on every completed iteration, read by admission projections
+/// and the server's `loads` op.
+pub type SharedDecodeModel = Arc<Mutex<ObservedDecodeModel>>;
+
+/// Wall-clock engine: simulated costs executed as (paced) real sleeps.
+#[derive(Debug)]
+pub struct RealtimeEngine {
+    sim: SimEngine,
+    pace: f64,
+    observed: SharedDecodeModel,
+}
+
+impl RealtimeEngine {
+    pub fn new(cfg: &SystemConfig) -> RealtimeEngine {
+        let pace = cfg.realtime.pace;
+        RealtimeEngine {
+            sim: SimEngine::new(cfg),
+            pace: if pace.is_finite() && pace > 0.0 { pace } else { 1.0 },
+            observed: Arc::new(Mutex::new(ObservedDecodeModel::new(
+                cfg.realtime.ewma_alpha,
+            ))),
+        }
+    }
+
+    /// Clone of the shared observed-latency model handle.
+    pub fn observed(&self) -> SharedDecodeModel {
+        Arc::clone(&self.observed)
+    }
+
+    /// A simulated duration compressed by the pace factor (min 1 µs so a
+    /// step is never free).
+    fn scaled(&self, us: Micros) -> Micros {
+        ((us as f64 / self.pace).round() as Micros).max(1)
+    }
+
+    fn block_for(us: Micros) {
+        std::thread::sleep(std::time::Duration::from_micros(us));
+    }
+}
+
+impl Engine for RealtimeEngine {
+    fn model(&self) -> &ModelSpec {
+        self.sim.model()
+    }
+
+    fn realtime(&self) -> bool {
+        true
+    }
+
+    fn prefill(&mut self, batch: &PrefillBatch) -> anyhow::Result<Micros> {
+        let us = self.scaled(self.sim.prefill(batch)?);
+        Self::block_for(us);
+        Ok(us)
+    }
+
+    fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros> {
+        let us = self.scaled(self.sim.decode_step(batch)?);
+        Self::block_for(us);
+        self.observed.lock().unwrap().observe(batch.total_ctx(), us);
+        Ok(us)
+    }
+
+    fn projected_decode_us(&self, _n: usize, total_ctx: u64) -> Micros {
+        self.observed.lock().unwrap().projected_us(total_ctx)
+    }
+
+    fn kv_transfer(&mut self, tokens: u64) -> Micros {
+        // Modeled as an async NVLink push: charged to the hand-off
+        // timeline, not blocked on.
+        self.scaled(self.sim.kv_transfer(tokens))
+    }
+
+    fn decode_mem_budget(&self) -> u64 {
+        self.sim.decode_mem_budget()
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.sim.release(id);
+    }
+
+    fn checkpoint(&mut self, generated: u32) -> Micros {
+        self.scaled(self.sim.checkpoint(generated))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::DecodeSeq;
+    use crate::cluster::PrefillItem;
+
+    fn fast_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.realtime.pace = 10_000.0; // ~24 ms iterations become ~2 µs
+        cfg
+    }
+
+    #[test]
+    fn is_realtime_and_paces_durations() {
+        let cfg = fast_cfg();
+        let mut e = RealtimeEngine::new(&cfg);
+        assert!(e.realtime());
+        let b = PrefillBatch {
+            items: vec![PrefillItem { id: 0, len: 100, tokens: vec![] }],
+            padded_len: 128,
+        };
+        let sim_us = SimEngine::new(&cfg).prefill(&b).unwrap();
+        let rt_us = e.prefill(&b).unwrap();
+        assert!(rt_us >= 1);
+        assert!(
+            rt_us <= sim_us / 1_000,
+            "paced duration {rt_us} not compressed vs simulated {sim_us}"
+        );
+    }
+
+    #[test]
+    fn projection_comes_from_observed_iterations_not_the_cost_model() {
+        let cfg = fast_cfg();
+        let mut e = RealtimeEngine::new(&cfg);
+        assert_eq!(
+            e.projected_decode_us(4, 4 * 512),
+            0,
+            "before any iteration there is nothing to project from"
+        );
+        let d = DecodeBatch {
+            seqs: (0..4).map(|i| DecodeSeq { id: i, ctx_len: 512 }).collect(),
+        };
+        let stepped = e.decode_step(&d).unwrap();
+        let projected = e.projected_decode_us(4, 4 * 512);
+        assert_eq!(projected, stepped, "one sample -> projection is that sample");
+        // The shared handle sees the same fit.
+        assert_eq!(e.observed().lock().unwrap().samples(), 1);
+    }
+}

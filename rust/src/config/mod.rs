@@ -431,6 +431,44 @@ impl ExecutorSpec {
     }
 }
 
+/// Realtime serving knobs (consumed by [`crate::server::realtime`] and
+/// the scheduler's wall-clock drive mode): streaming delivery buffers,
+/// the observed-latency EWMA that replaces the cost model's decode
+/// projection on real engines, and shutdown drain behavior. These only
+/// apply to the realtime path — virtual-time replay never reads them,
+/// so every existing Summary JSON stays byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealtimeSpec {
+    /// Per-connection stream buffer depth (token lines). When a slow
+    /// client falls this far behind, the oldest undelivered token lines
+    /// are dropped (counted as `stream_drops`); the final summary line
+    /// is never dropped.
+    pub stream_buf: u32,
+    /// EWMA smoothing factor for the observed decode-iteration latency
+    /// model feeding `projected_decode_us` (0 < alpha <= 1; higher =
+    /// faster adaptation, noisier projection).
+    pub ewma_alpha: f64,
+    /// On shutdown, how long to keep draining in-flight requests before
+    /// aborting the remainder (ms).
+    pub drain_timeout_ms: u64,
+    /// Wall-clock pace factor for the realtime *simulated* engine: it
+    /// sleeps `simulated_duration / pace` per step, so e.g. 100.0 runs
+    /// 100x faster than real time (tests and the loopback bench use
+    /// high pace; 1.0 = true wall-clock).
+    pub pace: f64,
+}
+
+impl Default for RealtimeSpec {
+    fn default() -> Self {
+        RealtimeSpec {
+            stream_buf: 64,
+            ewma_alpha: 0.2,
+            drain_timeout_ms: 5_000,
+            pace: 1.0,
+        }
+    }
+}
+
 /// SLO targets for online requests (DistServe-style TTFT + TBT).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SloSpec {
@@ -462,6 +500,7 @@ pub struct SystemConfig {
     pub admission: AdmissionSpec,
     pub prefix: PrefixSpec,
     pub executor: ExecutorSpec,
+    pub realtime: RealtimeSpec,
     pub seed: u64,
 }
 
@@ -479,6 +518,7 @@ impl Default for SystemConfig {
             admission: AdmissionSpec::default(),
             prefix: PrefixSpec::default(),
             executor: ExecutorSpec::default(),
+            realtime: RealtimeSpec::default(),
             seed: 42,
         }
     }
@@ -598,6 +638,14 @@ impl SystemConfig {
                 c.executor.plan_offload = v;
             }
         }
+        let rt = j.get("realtime");
+        if !rt.is_null() {
+            let d = &mut c.realtime;
+            if let Some(v) = rt.get("stream_buf").as_u64() { d.stream_buf = v as u32; }
+            if let Some(v) = rt.get("ewma_alpha").as_f64() { d.ewma_alpha = v; }
+            if let Some(v) = rt.get("drain_timeout_ms").as_u64() { d.drain_timeout_ms = v; }
+            if let Some(v) = rt.get("pace").as_f64() { d.pace = v; }
+        }
         let o = j.get("slo");
         if !o.is_null() {
             if let Some(v) = o.get("ttft_us").as_u64() { c.slo.ttft_us = v; }
@@ -663,6 +711,16 @@ impl SystemConfig {
                 "executor.plan_offload" => {
                     set_bool(&mut self.executor.plan_offload, v)
                 }
+                "realtime.stream_buf" => {
+                    set_u32(&mut self.realtime.stream_buf, v)
+                }
+                "realtime.ewma_alpha" => {
+                    set_f64(&mut self.realtime.ewma_alpha, v)
+                }
+                "realtime.drain_timeout_ms" => {
+                    if let Ok(x) = v.parse() { self.realtime.drain_timeout_ms = x; }
+                }
+                "realtime.pace" => set_f64(&mut self.realtime.pace, v),
                 "fleet.n_prefill" => set_u32(&mut self.fleet.n_prefill, v),
                 "fleet.n_decode" => set_u32(&mut self.fleet.n_decode, v),
                 "slo.ttft_us" => { if let Ok(x) = v.parse() { self.slo.ttft_us = x; } }
@@ -740,6 +798,12 @@ impl SystemConfig {
             ("executor", Json::obj(vec![
                 ("threads", Json::from(self.executor.threads as u64)),
                 ("plan_offload", Json::from(self.executor.plan_offload)),
+            ])),
+            ("realtime", Json::obj(vec![
+                ("stream_buf", Json::from(self.realtime.stream_buf as u64)),
+                ("ewma_alpha", Json::num(self.realtime.ewma_alpha)),
+                ("drain_timeout_ms", Json::from(self.realtime.drain_timeout_ms)),
+                ("pace", Json::num(self.realtime.pace)),
             ])),
             ("slo", Json::obj(vec![
                 ("ttft_us", Json::from(self.slo.ttft_us)),
@@ -1089,6 +1153,38 @@ mod tests {
         c.apply_overrides(&args);
         assert_eq!(c.executor.threads, 0, "0 = one worker per shard");
         assert!(!c.executor.plan_offload, "plan offload CLI-disableable");
+    }
+
+    #[test]
+    fn realtime_defaults_and_overridable() {
+        let c = SystemConfig::default();
+        assert!(c.realtime.stream_buf >= 1);
+        assert!((0.0..=1.0).contains(&c.realtime.ewma_alpha));
+        assert!(c.realtime.pace >= 1.0);
+
+        let j = Json::parse(
+            r#"{"realtime":{"stream_buf":8,"ewma_alpha":0.5,"pace":200.0}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert_eq!(c.realtime.stream_buf, 8);
+        assert_eq!(c.realtime.ewma_alpha, 0.5);
+        assert_eq!(c.realtime.pace, 200.0);
+        // Untouched fields keep defaults.
+        assert_eq!(c.realtime.drain_timeout_ms, 5_000);
+
+        let args = Args::parse(
+            ["--realtime.stream_buf", "16", "--realtime.drain_timeout_ms",
+             "100", "--realtime.ewma_alpha", "0.3", "--realtime.pace", "50"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert_eq!(c.realtime.stream_buf, 16);
+        assert_eq!(c.realtime.drain_timeout_ms, 100);
+        assert_eq!(c.realtime.ewma_alpha, 0.3);
+        assert_eq!(c.realtime.pace, 50.0);
     }
 
     #[test]

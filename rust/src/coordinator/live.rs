@@ -1,0 +1,342 @@
+//! Live-serving plumbing between a front end and the scheduler's
+//! realtime drive mode ([`super::PdScheduler::run_realtime`]).
+//!
+//! The coordinator cannot depend on the server layer, so this module
+//! defines the protocol both sides meet at:
+//!
+//! * [`LiveCmd`] — the command channel into the serving loop: submit a
+//!   request with its delivery sink, abort on client disconnect, answer
+//!   `health`/`loads` introspection, request shutdown.
+//! * [`StreamSink`] — a bounded per-request delivery buffer. The
+//!   scheduler *never blocks* on a slow client: token lines drop-oldest
+//!   when the buffer is full (counted as `stream_drops` — the
+//!   backpressure signal), while the final summary line is always
+//!   delivered. The consumer side marks the sink disconnected when its
+//!   socket dies, which the scheduler converts into a client abort.
+//! * [`LiveState`] — the scheduler-side registry (sink per in-flight
+//!   request, pending abort set) carried by the run core only in
+//!   realtime mode; trace runs carry `None` and pay a single branch.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::monitor::MonitorView;
+use super::scheduler::RunReport;
+use crate::config::SloSpec;
+use crate::workload::request::Completion;
+use crate::workload::{Request, RequestId};
+use crate::Micros;
+
+/// One command into the realtime serving loop.
+pub enum LiveCmd {
+    /// Admit a request. `req.arrival` is re-stamped by the scheduler at
+    /// ingest (its wall epoch, not the submitter's), so TTFT/queue-wait
+    /// accounting stays on one clock.
+    Submit { req: Request, sink: StreamSink },
+    /// The client went away: abort the request wherever it is in flight.
+    Abort(RequestId),
+    /// Liveness + request-lifecycle counters.
+    Health { reply: Sender<HealthInfo> },
+    /// Per-shard/per-instance load introspection from the Global Monitor.
+    Loads { reply: Sender<LoadsInfo> },
+    /// Stop accepting and drain (bounded by `realtime.drain_timeout_ms`).
+    Shutdown,
+}
+
+/// `health` payload.
+#[derive(Debug, Clone)]
+pub struct HealthInfo {
+    /// Requests with a live stream (queued, prefilling, or decoding).
+    pub in_flight: usize,
+    /// Requests queued in the shard planners.
+    pub queued: usize,
+    pub completions: u64,
+    pub client_aborts: u64,
+}
+
+/// One decode instance's occupancy in the `loads` payload.
+#[derive(Debug, Clone)]
+pub struct InstanceLoad {
+    pub instance: usize,
+    pub active: usize,
+    pub pending: usize,
+    pub reserved_tokens: u64,
+}
+
+/// `loads` payload: the Global Monitor's system/per-shard view plus
+/// per-instance occupancy and running SLO attainment.
+#[derive(Debug, Clone)]
+pub struct LoadsInfo {
+    pub view: MonitorView,
+    pub instances: Vec<InstanceLoad>,
+    pub ttft_attainment_online: f64,
+    pub tbt_attainment_online: f64,
+}
+
+/// One line of a request's delivery stream.
+#[derive(Debug, Clone)]
+pub enum StreamMsg {
+    /// One generated token: `seq` is the running token ordinal (1 =
+    /// prefill's first token), `at_us` its production time on the run's
+    /// wall clock.
+    Token { id: RequestId, seq: u32, at_us: Micros },
+    /// Final summary line of a completed request.
+    Done { completion: Completion },
+    /// Final line of a request dropped before completion (client abort
+    /// or server shutdown).
+    Aborted { id: RequestId },
+}
+
+#[derive(Default)]
+struct SinkState {
+    buf: VecDeque<StreamMsg>,
+    /// Producer closed: the final line is in (or already consumed).
+    closed: bool,
+    /// Consumer gone: its socket died; stop buffering for it.
+    disconnected: bool,
+}
+
+struct SinkInner {
+    cap: usize,
+    state: Mutex<SinkState>,
+    cond: Condvar,
+}
+
+/// Bounded per-request delivery buffer (see module docs). Clone shares
+/// the buffer: the scheduler holds the producer clone, the connection
+/// thread the consumer clone.
+#[derive(Clone)]
+pub struct StreamSink {
+    inner: Arc<SinkInner>,
+}
+
+impl StreamSink {
+    /// `cap`: maximum buffered token lines (`realtime.stream_buf`).
+    pub fn new(cap: usize) -> StreamSink {
+        StreamSink {
+            inner: Arc::new(SinkInner {
+                cap: cap.max(1),
+                state: Mutex::new(SinkState::default()),
+                cond: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Producer: buffer one token line. When the buffer is full the
+    /// oldest buffered *token* line is dropped to make room (final lines
+    /// are never displaced). Returns the number of lines dropped (0|1) —
+    /// the caller's `stream_drops` charge.
+    pub fn push_token(&self, msg: StreamMsg) -> u64 {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.closed || st.disconnected {
+            return 0;
+        }
+        let mut dropped = 0;
+        if st.buf.len() >= self.inner.cap {
+            if let Some(pos) =
+                st.buf.iter().position(|m| matches!(m, StreamMsg::Token { .. }))
+            {
+                st.buf.remove(pos);
+                dropped = 1;
+            }
+        }
+        st.buf.push_back(msg);
+        drop(st);
+        self.inner.cond.notify_all();
+        dropped
+    }
+
+    /// Producer: deliver the final line and close the stream. Always
+    /// buffered, even past `cap` — a client may lose token lines under
+    /// backpressure but never the summary.
+    pub fn finish(&self, msg: StreamMsg) {
+        let mut st = self.inner.state.lock().unwrap();
+        if !st.closed {
+            st.buf.push_back(msg);
+            st.closed = true;
+        }
+        drop(st);
+        self.inner.cond.notify_all();
+    }
+
+    /// Consumer: the socket died; stop buffering on its behalf.
+    pub fn mark_disconnected(&self) {
+        self.inner.state.lock().unwrap().disconnected = true;
+        self.inner.cond.notify_all();
+    }
+
+    pub fn is_disconnected(&self) -> bool {
+        self.inner.state.lock().unwrap().disconnected
+    }
+
+    /// Consumer: true once the final line has been consumed — the
+    /// stream's end-of-life, distinguishing a timed-out
+    /// [`StreamSink::recv_timeout`] from a finished one.
+    pub fn finished(&self) -> bool {
+        let st = self.inner.state.lock().unwrap();
+        st.closed && st.buf.is_empty()
+    }
+
+    /// Consumer: next buffered line, blocking up to `timeout`. `None`
+    /// means timeout or finished — check [`StreamSink::finished`].
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<StreamMsg> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.buf.pop_front() {
+                return Some(m);
+            }
+            if st.closed {
+                return None;
+            }
+            let (guard, to) =
+                self.inner.cond.wait_timeout(st, timeout).unwrap();
+            st = guard;
+            if to.timed_out() {
+                return st.buf.pop_front();
+            }
+        }
+    }
+}
+
+/// Scheduler-side live-run registry, present on the run core only in
+/// realtime drive mode.
+pub struct LiveState {
+    /// SLO budgets for the `loads` attainment columns.
+    pub slo: SloSpec,
+    /// Delivery sink per in-flight request; removal is the request's
+    /// lifecycle end (completion or abort).
+    pub sinks: HashMap<RequestId, StreamSink>,
+    /// Abort-requested ids awaiting their removal touchpoint (hand-off
+    /// drop for queued work, boundary sweep for decoding work).
+    pub aborted: HashSet<RequestId>,
+}
+
+impl LiveState {
+    pub fn new(slo: SloSpec) -> LiveState {
+        LiveState { slo, sinks: HashMap::new(), aborted: HashSet::new() }
+    }
+
+    /// Register an abort request. A no-op for ids with no live sink
+    /// (already completed, never submitted), so the pending set cannot
+    /// grow without bound.
+    pub fn abort(&mut self, id: RequestId) {
+        if self.sinks.contains_key(&id) {
+            self.aborted.insert(id);
+        }
+    }
+
+    /// Stream one token line; converts a consumer-side disconnect into a
+    /// pending abort and charges buffer-overflow drops to the report.
+    pub fn stream_token(
+        &mut self,
+        id: RequestId,
+        seq: u32,
+        at_us: Micros,
+        report: &mut RunReport,
+    ) {
+        let Some(sink) = self.sinks.get(&id) else { return };
+        if sink.is_disconnected() {
+            self.aborted.insert(id);
+            return;
+        }
+        report.stream_drops += sink.push_token(StreamMsg::Token { id, seq, at_us });
+    }
+
+    /// Lifecycle end, success: deliver the summary line, retire the sink.
+    pub fn finish_ok(&mut self, c: &Completion) {
+        if let Some(sink) = self.sinks.remove(&c.id) {
+            sink.finish(StreamMsg::Done { completion: c.clone() });
+        }
+        self.aborted.remove(&c.id);
+    }
+
+    /// Lifecycle end, client abort: deliver the aborted line, retire the
+    /// sink, charge the counter.
+    pub fn finish_aborted(&mut self, id: RequestId, report: &mut RunReport) {
+        if let Some(sink) = self.sinks.remove(&id) {
+            sink.finish(StreamMsg::Aborted { id });
+        }
+        self.aborted.remove(&id);
+        report.client_aborts += 1;
+    }
+
+    /// Server shutdown with work still in flight: close every remaining
+    /// stream (not charged as client aborts — the server left, not the
+    /// clients).
+    pub fn close_all(&mut self) {
+        for (id, sink) in self.sinks.drain() {
+            sink.finish(StreamMsg::Aborted { id });
+        }
+        self.aborted.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_delivers_in_order() {
+        let s = StreamSink::new(8);
+        for seq in 1..=3 {
+            assert_eq!(s.push_token(StreamMsg::Token { id: 7, seq, at_us: seq as u64 }), 0);
+        }
+        for want in 1..=3u32 {
+            match s.recv_timeout(Duration::from_millis(10)) {
+                Some(StreamMsg::Token { id: 7, seq, .. }) => assert_eq!(seq, want),
+                other => panic!("expected token {want}, got {other:?}"),
+            }
+        }
+        assert!(!s.finished(), "still open: no final line yet");
+        assert!(s.recv_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn sink_overflow_drops_oldest_token_keeps_final() {
+        let s = StreamSink::new(2);
+        assert_eq!(s.push_token(StreamMsg::Token { id: 1, seq: 1, at_us: 1 }), 0);
+        assert_eq!(s.push_token(StreamMsg::Token { id: 1, seq: 2, at_us: 2 }), 0);
+        assert_eq!(s.push_token(StreamMsg::Token { id: 1, seq: 3, at_us: 3 }), 1);
+        s.finish(StreamMsg::Aborted { id: 1 });
+        // Oldest token (seq 1) was shed; the rest arrive in order, final
+        // line last.
+        match s.recv_timeout(Duration::from_millis(10)) {
+            Some(StreamMsg::Token { seq: 2, .. }) => {}
+            other => panic!("expected token 2, got {other:?}"),
+        }
+        match s.recv_timeout(Duration::from_millis(10)) {
+            Some(StreamMsg::Token { seq: 3, .. }) => {}
+            other => panic!("expected token 3, got {other:?}"),
+        }
+        assert!(matches!(
+            s.recv_timeout(Duration::from_millis(10)),
+            Some(StreamMsg::Aborted { id: 1 })
+        ));
+        assert!(s.finished());
+    }
+
+    #[test]
+    fn disconnected_sink_stops_buffering() {
+        let s = StreamSink::new(4);
+        s.mark_disconnected();
+        assert!(s.is_disconnected());
+        assert_eq!(s.push_token(StreamMsg::Token { id: 1, seq: 1, at_us: 1 }), 0);
+        assert!(s.recv_timeout(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn live_state_abort_only_tracks_live_sinks() {
+        let mut l = LiveState::new(SloSpec::default());
+        l.abort(42);
+        assert!(l.aborted.is_empty(), "no sink -> nothing to abort");
+        l.sinks.insert(42, StreamSink::new(2));
+        l.abort(42);
+        assert!(l.aborted.contains(&42));
+        let mut report = RunReport::default();
+        l.finish_aborted(42, &mut report);
+        assert_eq!(report.client_aborts, 1);
+        assert!(l.sinks.is_empty() && l.aborted.is_empty());
+    }
+}

@@ -46,6 +46,11 @@
 //! * [`scheduler`] — the thin P/D orchestrator shared by BucketServe and
 //!   the disaggregated baseline: pops events, dispatches to the fleet,
 //!   plans batches through per-shard [`PrefillPlanner`] plug-ins.
+//! * [`live`] — the realtime-serving protocol between a front end and
+//!   [`PdScheduler::run_realtime`]: the [`live::LiveCmd`] command
+//!   channel (submit/abort/health/loads/shutdown) and the bounded
+//!   [`live::StreamSink`] per-request delivery buffers that carry
+//!   streamed token lines without ever blocking the scheduler.
 //!
 //! # Event flow
 //!
@@ -105,6 +110,7 @@ pub mod balance;
 pub mod events;
 pub mod executor;
 pub mod fleet;
+pub mod live;
 pub mod monitor;
 pub mod preempt;
 pub mod prefix;
@@ -119,6 +125,7 @@ pub use balance::{Router, ShardLoad};
 pub use events::{Event, EventId, EventKind, EventQueue};
 pub use executor::ExecutorPool;
 pub use fleet::{DecodeFleet, PrefillFleet};
+pub use live::{HealthInfo, LiveCmd, LoadsInfo, StreamMsg, StreamSink};
 pub use monitor::{GlobalMonitor, MonitorView, ShardView};
 pub use preempt::{PreemptionEngine, RestoreInfo};
 pub use prefix::{PrefixCache, PrefixStamp};

@@ -198,6 +198,90 @@ impl GlobalMonitor {
     }
 }
 
+/// Observed decode-iteration latency model for real engines.
+///
+/// The virtual-time scheduler projects the next iteration's duration
+/// straight from the roofline cost model
+/// ([`crate::cluster::gpu::CostModel::decode_step_time`]) — that is what
+/// arms TBT admission and preemption. A real engine has no cost model,
+/// but its iteration latency in the bandwidth-bound decode regime is
+/// close to affine in the batch's total resident context (weight read +
+/// KV read over memory bandwidth, plus a fixed step overhead). So the
+/// realtime path fits exactly that shape online: exponentially-weighted
+/// first and second moments of `(total_ctx, duration)` give an
+/// EWMA-weighted least-squares line whose slope is the per-context-token
+/// cost and whose intercept is the weight-read floor. Until the first
+/// observation lands, [`ObservedDecodeModel::projected_us`] returns 0 —
+/// the same "no projection available" sentinel as the
+/// [`crate::cluster::Engine`] default, which admission treats as
+/// projection-off rather than "iterations are free".
+#[derive(Debug, Clone)]
+pub struct ObservedDecodeModel {
+    alpha: f64,
+    n: u64,
+    ex: f64,
+    ey: f64,
+    exx: f64,
+    exy: f64,
+}
+
+impl ObservedDecodeModel {
+    /// `alpha`: EWMA smoothing in (0, 1]; higher adapts faster.
+    pub fn new(alpha: f64) -> ObservedDecodeModel {
+        let alpha = alpha.clamp(1e-3, 1.0);
+        ObservedDecodeModel { alpha, n: 0, ex: 0.0, ey: 0.0, exx: 0.0, exy: 0.0 }
+    }
+
+    /// Record one completed decode iteration: the batch's total resident
+    /// context (tokens) and the observed wall duration (µs).
+    pub fn observe(&mut self, total_ctx: u64, duration_us: Micros) {
+        let x = total_ctx as f64;
+        let y = duration_us as f64;
+        if self.n == 0 {
+            self.ex = x;
+            self.ey = y;
+            self.exx = x * x;
+            self.exy = x * y;
+        } else {
+            let a = self.alpha;
+            self.ex += a * (x - self.ex);
+            self.ey += a * (y - self.ey);
+            self.exx += a * (x * x - self.exx);
+            self.exy += a * (x * y - self.exy);
+        }
+        self.n += 1;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.n
+    }
+
+    /// Projected duration (µs) of an iteration over `total_ctx` resident
+    /// context tokens; 0 until at least one observation has landed.
+    pub fn projected_us(&self, total_ctx: u64) -> Micros {
+        if self.n == 0 {
+            return 0;
+        }
+        let var = self.exx - self.ex * self.ex;
+        // Degenerate spread (all samples at ~one context size): the mean
+        // is the whole model.
+        let y = if var <= f64::EPSILON * self.exx.max(1.0) {
+            self.ey
+        } else {
+            // Iteration time cannot shrink with more resident context;
+            // a transient negative slope from noisy early samples falls
+            // back to the mean rather than extrapolating nonsense.
+            let slope = (self.exy - self.ex * self.ey) / var;
+            if slope < 0.0 {
+                self.ey
+            } else {
+                (self.ey - slope * self.ex) + slope * total_ctx as f64
+            }
+        };
+        y.max(1.0).round() as Micros
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +363,49 @@ mod tests {
         let v = m.view(500_000);
         assert_eq!(v.prefill_queue, 1, "requeued work is queued again");
         assert_eq!(v.arrival_rps, before, "requeue is not an arrival");
+    }
+
+    #[test]
+    fn observed_model_recovers_cost_model_projection() {
+        use crate::cluster::gpu::CostModel;
+        use crate::config::{GpuSpec, ModelSpec};
+        // Feed the estimator iterations priced by the simulator's cost
+        // model (bandwidth-bound regime: duration is affine in total
+        // resident context) and check the fitted line projects within a
+        // few percent of the model it never saw.
+        let cm = CostModel::new(ModelSpec::llama2_13b(), GpuSpec::a100_40g(), 1);
+        let mut m = ObservedDecodeModel::new(0.2);
+        assert_eq!(m.projected_us(4096), 0, "no samples -> no projection");
+        for i in 0..200u64 {
+            let ctx = 1_000 + (i * 137) % 28_000;
+            let n = 1 + (i % 16) as usize;
+            m.observe(ctx, cm.decode_step_time(n, ctx));
+        }
+        assert_eq!(m.samples(), 200);
+        for &ctx in &[2_000u64, 8_000, 16_000, 24_000] {
+            let want = cm.decode_step_time(8, ctx) as f64;
+            let got = m.projected_us(ctx) as f64;
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "ctx {ctx}: observed {got} vs model {want}"
+            );
+        }
+        assert!(
+            m.projected_us(24_000) > m.projected_us(2_000),
+            "more resident context must project slower iterations"
+        );
+    }
+
+    #[test]
+    fn observed_model_degenerate_spread_falls_back_to_mean() {
+        let mut m = ObservedDecodeModel::new(0.5);
+        for _ in 0..10 {
+            m.observe(4_096, 30_000);
+        }
+        // All samples at one context size: projection is the mean
+        // everywhere, never an extrapolated line.
+        assert_eq!(m.projected_us(4_096), 30_000);
+        assert_eq!(m.projected_us(100_000), 30_000);
     }
 
     #[test]

@@ -34,6 +34,7 @@ use super::executor::{
     SyncKey,
 };
 use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
+use super::live::{HealthInfo, InstanceLoad, LiveCmd, LiveState, LoadsInfo};
 use super::monitor::GlobalMonitor;
 use super::preempt::PreemptionEngine;
 use super::prefix::{PrefixCache, PrefixStamp};
@@ -45,7 +46,8 @@ use crate::workload::request::Completion;
 use crate::workload::{Request, RequestClass, Trace};
 use crate::workload::RequestId;
 use crate::Micros;
-use std::time::Instant;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
 
 /// Iteration ceiling standing in for the old 50M-spin livelock guard;
 /// exceeding it ends the run with [`RunReport::error`] set instead of a
@@ -635,6 +637,17 @@ pub struct RunReport {
     /// Wall-clock workers spent inside plan speculations, ns (Σ over
     /// proposals; off-merge-loop time). Host-dependent, RunReport only.
     pub plan_worker_ns: u64,
+    /// Whether the run was driven by the realtime serving path
+    /// ([`PdScheduler::run_realtime`]); gates the Summary JSON block so
+    /// virtual-time replay output stays byte-identical.
+    pub realtime_enabled: bool,
+    /// Requests aborted mid-flight because their client disconnected
+    /// (realtime path only; KV/prefix reservations are released at the
+    /// drop point).
+    pub client_aborts: u64,
+    /// Streamed token lines shed because a client's bounded stream
+    /// buffer was full (final summary lines are never shed).
+    pub stream_drops: u64,
     /// Set when the run ended abnormally (scheduler stall / livelock
     /// guard); carries the diagnostics the old panic printed. Completions
     /// gathered before the stall are still reported.
@@ -993,6 +1006,7 @@ impl PdScheduler {
             prefix: prefix_caches,
             prefix_affinity: self.cfg.sharding.placement
                 == Placement::PrefixAffinity,
+            live: None,
         };
         if core.total > 0 {
             core.events.push(trace.requests[0].arrival, EventKind::Arrival);
@@ -1057,6 +1071,265 @@ impl PdScheduler {
         // Take the report out and drop the core explicitly: dropping the
         // core joins the executor workers (clean shutdown, even when a
         // shard's event partition drained early) before final assembly.
+        let mut report = std::mem::take(&mut core.report);
+        drop(core);
+        for shard in self.shards.iter() {
+            report.bucket_overhead_ns += shard.planner.overhead_ns();
+            report.max_buckets =
+                report.max_buckets.max(shard.planner.n_buckets());
+            report.shard_routed.push(shard.stats.routed);
+            report.shard_batches.push(shard.stats.batches);
+        }
+        if let Some(last) = report.completions.iter().map(|c| c.finished).max() {
+            report.makespan_us = report.makespan_us.max(last);
+        }
+        report
+    }
+
+    /// Drive the scheduler from live wall-clock submissions instead of a
+    /// trace — the serving loop behind the realtime TCP path
+    /// ([`crate::server::realtime`]).
+    ///
+    /// Commands arrive on `cmds` (see [`LiveCmd`]); tokens and final
+    /// summaries stream back through each submission's
+    /// [`super::live::StreamSink`]. The loop runs until a `Shutdown`
+    /// command (or the channel closing) *and* the system drains —
+    /// bounded by `realtime.drain_timeout_ms`, after which any still-open
+    /// stream is closed with an aborted line so no client hangs.
+    ///
+    /// Requires a wall-clock engine ([`Engine::realtime`]): event due
+    /// times are compared against the wall, so a virtual-time engine's
+    /// future-dated events would starve live arrivals forever.
+    pub fn run_realtime(
+        &mut self,
+        engine: &mut dyn Engine,
+        cmds: Receiver<LiveCmd>,
+    ) -> RunReport {
+        assert!(
+            engine.realtime(),
+            "run_realtime requires a realtime engine (Engine::realtime())"
+        );
+        // Setup mirrors `run`, sequential only: a realtime engine's
+        // blocking calls serialize the loop anyway, so no worker pool and
+        // no plan offload.
+        let mem = KvMemoryModel::new(
+            self.cfg.model.clone(),
+            self.cfg.scheduler.mem_safety,
+        );
+        let per_decode_budget = mem.token_budget(engine.decode_mem_budget());
+        let n_shards = self.shards.n();
+        let shard_budgets: Vec<u64> = (0..n_shards)
+            .map(|si| {
+                per_decode_budget * self.shards.get(si).owned.len() as u64
+            })
+            .collect();
+        self.monitor = GlobalMonitor::sharded(
+            self.cfg.scheduler.monitor_window_us,
+            &shard_budgets,
+        );
+        self.preempt = Self::make_preempt(&self.cfg);
+        self.admission = Self::make_admission(&self.cfg);
+        let admission_active = self.cfg.admission.enabled;
+        if admission_active && engine.projected_decode_us(1, 1) == 0 {
+            // Expected at startup with the observed-latency estimator:
+            // it has nothing to project from until iterations land.
+            crate::log_warn!(
+                "admission.enabled: no decode-cost projection yet; TBT \
+                 triggers react only to overdue sequences until observed \
+                 iterations seed the estimator"
+            );
+        }
+        let preempt_active = self.cfg.preempt.enabled
+            && self.shards.get(0).planner.drain_follows_urgency();
+        if self.cfg.preempt.enabled && !preempt_active {
+            crate::log_warn!(
+                "preempt.enabled is inert: the drain order is not \
+                 urgency-ordered (requires priority.enabled with the \
+                 fcfs policy); no trigger will ever fire"
+            );
+        }
+        let n_prefill = self.cfg.fleet.n_prefill.max(1) as usize;
+        let n_decode = self.cfg.fleet.n_decode.max(1) as usize;
+        let weight_bytes = engine.model().weight_bytes() as f64;
+        let kv_per_token = engine.model().kv_bytes_per_token() as f64;
+        let prefix_caches: Option<Vec<PrefixCache>> = if self.cfg.prefix.enabled
+        {
+            let budget = (per_decode_budget as f64
+                * self.cfg.prefix.cache_frac.clamp(0.0, 1.0))
+                as u64;
+            Some(
+                (0..n_decode)
+                    .map(|_| PrefixCache::new(self.cfg.prefix.block, budget))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+
+        let mut core = RunCore {
+            shards: &mut self.shards,
+            monitor: &mut self.monitor,
+            preempt: &mut self.preempt,
+            preempt_active,
+            admission: &self.admission,
+            admission_active,
+            engine,
+            events: EventQueue::with_partitions(n_shards),
+            prefill: PrefillFleet::new(n_prefill),
+            decode: DecodeFleet::new(n_decode),
+            pool: None,
+            report: RunReport {
+                n_prefill,
+                n_decode,
+                n_shards,
+                preempt_enabled: self.cfg.preempt.enabled,
+                admission_enabled: admission_active,
+                prefix_enabled: self.cfg.prefix.enabled,
+                executor_threads: 1,
+                realtime_enabled: true,
+                ..Default::default()
+            },
+            clock: 0,
+            next_arrival: 0,
+            // Arrivals come from the command channel, not a trace, so the
+            // trace cursor stays pinned at "exhausted".
+            total: 0,
+            per_decode_budget,
+            realtime: true,
+            wall_start: Instant::now(),
+            weight_bytes,
+            kv_per_token,
+            boost_shard: None,
+            preempt_wake: None,
+            recheck_preempt: false,
+            restore_buf: Vec::new(),
+            deferred_mask: Vec::new(),
+            boundary_scratch: Vec::new(),
+            plan_offload: false,
+            prefix: prefix_caches,
+            prefix_affinity: self.cfg.sharding.placement
+                == Placement::PrefixAffinity,
+            live: Some(LiveState::new(self.cfg.slo.clone())),
+        };
+
+        let empty = Trace { requests: Vec::new() };
+        let drain_timeout =
+            Duration::from_millis(self.cfg.realtime.drain_timeout_ms);
+        // Idle poll cap: the longest the loop sits blocked before
+        // re-checking drain state; an arriving command wakes it
+        // immediately regardless.
+        let poll = Duration::from_millis(5);
+        let mut open = true; // command channel still connected
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            core.clock = core.clock.max(core.wall_now());
+            // Ingest every queued command without blocking.
+            let mut activity = false;
+            while open {
+                match cmds.try_recv() {
+                    Ok(cmd) => {
+                        if core.apply_cmd(cmd) && drain_deadline.is_none() {
+                            drain_deadline =
+                                Some(Instant::now() + drain_timeout);
+                        }
+                        activity = true;
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        open = false;
+                        if drain_deadline.is_none() {
+                            drain_deadline =
+                                Some(Instant::now() + drain_timeout);
+                        }
+                    }
+                }
+            }
+            // Process every event due on the wall clock.
+            while let Some(at) = core.events.peek_at() {
+                if at > core.wall_now() {
+                    break;
+                }
+                let Some(ev) = core.events.pop() else { break };
+                core.advance_to(ev.at);
+                core.handle_event(ev, &empty);
+                // Same-instant drain + preemption loop, as in `run`.
+                loop {
+                    while let Some(due) = core.events.pop_due(core.clock) {
+                        core.handle_event(due, &empty);
+                    }
+                    core.admit_handoffs();
+                    if !core.check_preemption() {
+                        break;
+                    }
+                }
+                activity = true;
+            }
+            if activity {
+                // State-driven phases, as in `run`, plus the client-abort
+                // sweep (boundary-safe removal of disconnected requests).
+                core.sweep_aborts();
+                core.dispatch_prefill();
+                if std::mem::take(&mut core.recheck_preempt) {
+                    core.check_preemption();
+                }
+                core.launch_decode();
+                core.schedule_idle_wakes();
+                core.report.makespan_us =
+                    core.report.makespan_us.max(core.clock);
+                continue; // commands may have queued while we worked
+            }
+            // Quiescent instant: exit when draining and done (or out of
+            // patience), otherwise wait for the next event or command.
+            if let Some(deadline) = drain_deadline {
+                if core.quiescent() || Instant::now() >= deadline {
+                    break;
+                }
+            }
+            let wait = match core.events.peek_at() {
+                Some(at) => {
+                    Duration::from_micros(at.saturating_sub(core.wall_now()))
+                        .min(poll)
+                }
+                None => poll,
+            };
+            if open {
+                match cmds.recv_timeout(wait) {
+                    Ok(cmd) => {
+                        if core.apply_cmd(cmd) && drain_deadline.is_none() {
+                            drain_deadline =
+                                Some(Instant::now() + drain_timeout);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        if drain_deadline.is_none() {
+                            drain_deadline =
+                                Some(Instant::now() + drain_timeout);
+                        }
+                    }
+                }
+            } else {
+                std::thread::sleep(wait);
+            }
+        }
+        // Anything still in flight past the drain deadline: close its
+        // stream so no client hangs (not charged as a client abort — the
+        // server left, not the client).
+        if let Some(live) = &mut core.live {
+            live.close_all();
+        }
+        if let Some(caches) = &core.prefix {
+            for c in caches {
+                let st = c.stats();
+                core.report.prefix_hits += st.hits;
+                core.report.prefix_misses += st.misses;
+                core.report.prefix_hit_tokens += st.hit_tokens;
+                core.report.prefix_evictions += st.evictions;
+                core.report.prefix_evicted_tokens += st.evicted_tokens;
+                core.report.prefix_resident_tokens += c.resident_tokens();
+            }
+        }
         let mut report = std::mem::take(&mut core.report);
         drop(core);
         for shard in self.shards.iter() {
@@ -1157,6 +1430,11 @@ struct RunCore<'a> {
     /// [`RunCore::dispatch_prefill`]; planning falls back inline (same
     /// pipeline, lazy) when false.
     plan_offload: bool,
+    /// Realtime serving state (per-request stream sinks + pending client
+    /// aborts), present only under [`PdScheduler::run_realtime`]. `None`
+    /// short-circuits every live path to a single branch — trace runs
+    /// stay byte-identical.
+    live: Option<LiveState>,
 }
 
 impl<'a> RunCore<'a> {
@@ -1173,6 +1451,12 @@ impl<'a> RunCore<'a> {
         } else {
             self.clock = self.clock.max(at);
         }
+    }
+
+    /// Microseconds elapsed on this run's wall epoch — the realtime
+    /// loop's notion of "now".
+    fn wall_now(&self) -> Micros {
+        self.wall_start.elapsed().as_micros() as Micros
     }
 
     /// Event dispatch seam between the sequential and parallel paths:
@@ -1230,30 +1514,7 @@ impl<'a> RunCore<'a> {
         while self.next_arrival < self.total
             && trace.requests[self.next_arrival].arrival <= self.clock
         {
-            let r = &trace.requests[self.next_arrival];
-            // Cache-affinity intercept: under `prefix_affinity`, an
-            // arrival whose lineage has resident blocks somewhere routes
-            // to the shard fronting the instance with the longest match
-            // (ties → lowest instance). Everything else — and every
-            // other placement policy — takes the load-based router.
-            let (si, hint) = match self.resident_match(r) {
-                Some((di, m)) => (self.shards.route_to(self.shards.owner_of(di)), m),
-                None => (
-                    self.shards.route(r.id, &self.decode, self.per_decode_budget),
-                    0,
-                ),
-            };
-            if hint > 0 {
-                // The hint rides the queue as `cached_len` so bucket
-                // keying and batch formation see the uncached suffix;
-                // dispatch re-stamps it with the actual hit.
-                let mut hinted = r.clone();
-                hinted.prefix_cached_hint = hint.min(hinted.input_len);
-                self.shards.get_mut(si).planner.admit(&hinted, self.clock);
-            } else {
-                self.shards.get_mut(si).planner.admit(r, self.clock);
-            }
-            self.monitor.on_arrival(si, self.clock, r.input_len);
+            self.admit_one(&trace.requests[self.next_arrival]);
             self.next_arrival += 1;
         }
         if self.next_arrival < self.total {
@@ -1262,6 +1523,34 @@ impl<'a> RunCore<'a> {
                 EventKind::Arrival,
             );
         }
+    }
+
+    /// Route and admit one request — the shared admission seam of the
+    /// trace path above and the realtime `Submit` command.
+    fn admit_one(&mut self, r: &Request) {
+        // Cache-affinity intercept: under `prefix_affinity`, an
+        // arrival whose lineage has resident blocks somewhere routes
+        // to the shard fronting the instance with the longest match
+        // (ties → lowest instance). Everything else — and every
+        // other placement policy — takes the load-based router.
+        let (si, hint) = match self.resident_match(r) {
+            Some((di, m)) => (self.shards.route_to(self.shards.owner_of(di)), m),
+            None => (
+                self.shards.route(r.id, &self.decode, self.per_decode_budget),
+                0,
+            ),
+        };
+        if hint > 0 {
+            // The hint rides the queue as `cached_len` so bucket
+            // keying and batch formation see the uncached suffix;
+            // dispatch re-stamps it with the actual hit.
+            let mut hinted = r.clone();
+            hinted.prefix_cached_hint = hint.min(hinted.input_len);
+            self.shards.get_mut(si).planner.admit(&hinted, self.clock);
+        } else {
+            self.shards.get_mut(si).planner.admit(r, self.clock);
+        }
+        self.monitor.on_arrival(si, self.clock, r.input_len);
     }
 
     /// The decode instance holding the longest resident prefix of `r`,
@@ -1367,6 +1656,7 @@ impl<'a> RunCore<'a> {
             p.duration * p.formed.batch.n() as u64;
         self.monitor.on_batch_done(p.duration);
         let transfer = self.engine.kv_transfer(p.formed.batch.useful_tokens());
+        let mut entered = 0usize;
         for r in &p.formed.reqs {
             // A checkpoint-restored sequence resumes where eviction cut
             // it off: the recompute prefill replayed `input + generated`
@@ -1435,9 +1725,43 @@ impl<'a> RunCore<'a> {
                     }
                 }
             };
+            // Realtime path: a request whose client disconnected while it
+            // was queued or prefilling drops at the hand-off — the
+            // prefill compute is sunk, but its KV reservation, prefix
+            // pins, and engine state release right here instead of
+            // riding a dead sequence through decode.
+            let gone = self
+                .live
+                .as_ref()
+                .is_some_and(|l| l.aborted.contains(&seq.id));
+            if gone {
+                let footprint = seq.footprint();
+                let si = self.shards.owner_of(p.target_decode);
+                let d = self.decode.get_mut(p.target_decode);
+                d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
+                self.monitor.kv_release(si, footprint);
+                self.release_prefix_pins(p.target_decode, &seq.prefix);
+                self.engine.release(seq.id);
+                if let Some(live) = &mut self.live {
+                    live.finish_aborted(seq.id, &mut self.report);
+                }
+                continue;
+            }
+            if let Some(live) = &mut self.live {
+                // Stream the token this prefill just produced (token 1,
+                // or `generated` for a checkpoint-restored sequence) as
+                // soon as it exists.
+                live.stream_token(
+                    seq.id,
+                    seq.generated,
+                    p.done_at,
+                    &mut self.report,
+                );
+            }
             self.decode.get_mut(p.target_decode).pending.push(seq);
+            entered += 1;
         }
-        self.monitor.on_decode_enter(p.formed.reqs.len());
+        self.monitor.on_decode_enter(entered);
     }
 
     /// Capture stage of a decode-iteration boundary: snapshot instance
@@ -1484,6 +1808,23 @@ impl<'a> RunCore<'a> {
         // Survivors travel back in the buffer the capture stage moved
         // out (compacted in place on the worker) — no allocation.
         self.decode.get_mut(di).active = still_active;
+        if self.live.is_some() {
+            // Realtime path: one streamed token line per surviving member
+            // of the completed iteration (finished members get their
+            // final summary line below instead).
+            let lines: Vec<(RequestId, u32, Micros)> = self
+                .decode
+                .get(di)
+                .active
+                .iter()
+                .map(|s| (s.id, s.generated, s.last_token_at))
+                .collect();
+            if let Some(live) = &mut self.live {
+                for (id, seq, at) in lines {
+                    live.stream_token(id, seq, at, &mut self.report);
+                }
+            }
+        }
         for f in done.drain(..) {
             let d = self.decode.get_mut(di);
             d.reserved_tokens = d.reserved_tokens.saturating_sub(f.footprint);
@@ -1494,6 +1835,9 @@ impl<'a> RunCore<'a> {
             // them, which is the whole point of cross-request reuse.
             self.release_prefix_pins(di, &f.prefix);
             self.engine.release(f.completion.id);
+            if let Some(live) = &mut self.live {
+                live.finish_ok(&f.completion);
+            }
             self.report.completions.push(f.completion);
         }
         // Return the output buffers to the scratch pool, capacity kept.
@@ -1857,6 +2201,143 @@ impl<'a> RunCore<'a> {
         let due = self.clock + ckpt;
         self.restore_buf.push((due, di, entry));
         self.events.push_owned(due, EventKind::RestoreReady { decode: di }, si);
+    }
+
+    /// Apply one live command; returns true for `Shutdown` (the caller
+    /// starts the drain clock). Realtime drive mode only.
+    fn apply_cmd(&mut self, cmd: LiveCmd) -> bool {
+        match cmd {
+            LiveCmd::Submit { mut req, sink } => {
+                // Re-stamp arrival on this run's wall epoch so TTFT and
+                // queue-wait accounting stay on one clock regardless of
+                // when the submitter's process started.
+                req.arrival = self.clock;
+                if let Some(live) = &mut self.live {
+                    live.sinks.insert(req.id, sink);
+                }
+                self.admit_one(&req);
+            }
+            LiveCmd::Abort(id) => {
+                if let Some(live) = &mut self.live {
+                    live.abort(id);
+                }
+            }
+            LiveCmd::Health { reply } => {
+                // The submitter may have hung up; a dead reply channel is
+                // its problem, not the serving loop's.
+                let _ = reply.send(HealthInfo {
+                    in_flight: self.live.as_ref().map_or(0, |l| l.sinks.len()),
+                    queued: (0..self.shards.n())
+                        .map(|si| self.shards.get(si).planner.queued())
+                        .sum(),
+                    completions: self.report.completions.len() as u64,
+                    client_aborts: self.report.client_aborts,
+                });
+            }
+            LiveCmd::Loads { reply } => {
+                let view = self.monitor.view(self.clock);
+                let instances = (0..self.decode.n())
+                    .map(|di| {
+                        let d = self.decode.get(di);
+                        InstanceLoad {
+                            instance: di,
+                            active: d.active.len(),
+                            pending: d.pending.len(),
+                            reserved_tokens: d.reserved_tokens,
+                        }
+                    })
+                    .collect();
+                let (ttft, tbt) = match &self.live {
+                    Some(l) => (
+                        self.report.slo_attainment_class(
+                            RequestClass::Online,
+                            l.slo.ttft_us,
+                            u64::MAX,
+                        ),
+                        self.report.tbt_attainment_class(RequestClass::Online),
+                    ),
+                    None => (1.0, 1.0),
+                };
+                let _ = reply.send(LoadsInfo {
+                    view,
+                    instances,
+                    ttft_attainment_online: ttft,
+                    tbt_attainment_online: tbt,
+                });
+            }
+            LiveCmd::Shutdown => return true,
+        }
+        false
+    }
+
+    /// Client-abort sweep (realtime only): remove every abort-flagged
+    /// sequence from decode instances sitting at an iteration boundary —
+    /// mid-iteration KV is pinned by the running kernel, so in-flight
+    /// instances are swept at their next boundary instead. Requests
+    /// still queued or prefilling drop at the prefill hand-off
+    /// (`on_prefill_done`).
+    fn sweep_aborts(&mut self) {
+        let ids: Vec<RequestId> = match &self.live {
+            Some(l) if !l.aborted.is_empty() => {
+                l.aborted.iter().copied().collect()
+            }
+            _ => return,
+        };
+        for di in 0..self.decode.n() {
+            if !self.decode.get(di).at_boundary() {
+                continue;
+            }
+            for &id in &ids {
+                self.abort_decode_seq(di, id);
+            }
+        }
+    }
+
+    /// Mirror of [`RunCore::evict_decode_seq`] minus
+    /// checkpoint-and-restore: the client is gone, so the sequence's
+    /// work is dropped, not requeued — its KV reservation, prefix pins,
+    /// and engine state release here and its stream closes with an
+    /// aborted line. A no-op when `id` is not on instance `di`.
+    fn abort_decode_seq(&mut self, di: usize, id: RequestId) {
+        let si = self.shards.owner_of(di);
+        let (s, footprint) = {
+            let d = self.decode.get_mut(di);
+            let s = match d.active.iter().position(|s| s.id == id) {
+                Some(pos) => d.active.remove(pos),
+                None => match d.pending.iter().position(|s| s.id == id) {
+                    Some(pos) => d.pending.remove(pos),
+                    None => return,
+                },
+            };
+            let footprint = s.footprint();
+            d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
+            (s, footprint)
+        };
+        self.monitor.kv_release(si, footprint);
+        self.monitor.on_decode_exit(1);
+        self.release_prefix_pins(di, &s.prefix);
+        self.engine.release(s.id);
+        if let Some(live) = &mut self.live {
+            live.finish_aborted(s.id, &mut self.report);
+        }
+    }
+
+    /// Nothing queued, prefilling, handing off, decoding, or awaiting a
+    /// checkpoint restore — the realtime drain-exit condition.
+    fn quiescent(&self) -> bool {
+        if self.prefill.any_running() || !self.restore_buf.is_empty() {
+            return false;
+        }
+        for di in 0..self.decode.n() {
+            let d = self.decode.get(di);
+            if !d.active.is_empty()
+                || !d.pending.is_empty()
+                || d.iter_end.is_some()
+            {
+                return false;
+            }
+        }
+        (0..self.shards.n()).all(|si| self.shards.get(si).planner.queued() == 0)
     }
 
     /// The admission layer's trigger (b), run at `di`'s iteration
@@ -3329,5 +3810,156 @@ mod tests {
             1.0
         );
         assert_eq!(empty.mean_ttft_class_us(RequestClass::Online), 0.0);
+    }
+
+    // -- realtime drive mode ------------------------------------------------
+
+    use crate::cluster::realtime::RealtimeEngine;
+    use crate::coordinator::live::{StreamMsg, StreamSink};
+
+    fn realtime_cfg() -> SystemConfig {
+        let mut cfg = small_cfg();
+        // Heavy compression: ~tens-of-ms simulated steps run as ~µs
+        // sleeps, so these tests finish in milliseconds of wall time.
+        cfg.realtime.pace = 50_000.0;
+        cfg
+    }
+
+    #[test]
+    fn realtime_drive_streams_tokens_and_answers_introspection() {
+        let cfg = realtime_cfg();
+        let mut engine = RealtimeEngine::new(&cfg);
+        let mut sched =
+            PdScheduler::new(&cfg, || Box::new(BucketPlanner::new(&cfg)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let report = std::thread::scope(|s| {
+            let serving = s.spawn(|| sched.run_realtime(&mut engine, rx));
+            let sink = StreamSink::new(64);
+            tx.send(LiveCmd::Submit {
+                req: Request::new(0, RequestClass::Online, 64, 6, 0),
+                sink: sink.clone(),
+            })
+            .unwrap();
+            let mut tokens: Vec<(u32, Micros)> = Vec::new();
+            let mut done = None;
+            for _ in 0..10_000 {
+                match sink.recv_timeout(Duration::from_millis(20)) {
+                    Some(StreamMsg::Token { id, seq, at_us }) => {
+                        assert_eq!(id, 0);
+                        tokens.push((seq, at_us));
+                    }
+                    Some(StreamMsg::Done { completion }) => {
+                        done = Some(completion);
+                        break;
+                    }
+                    Some(StreamMsg::Aborted { id }) => {
+                        panic!("unexpected abort of {id}")
+                    }
+                    None => {}
+                }
+            }
+            let done = done.expect("request should stream to completion");
+            assert_eq!(done.id, 0);
+            assert_eq!(done.output_len, 6);
+            assert!(
+                !tokens.is_empty(),
+                "at least the first token must stream before the summary"
+            );
+            for w in tokens.windows(2) {
+                assert!(w[1].0 > w[0].0, "token ordinals strictly increase");
+                assert!(w[1].1 >= w[0].1, "token timestamps are monotone");
+            }
+            let (htx, hrx) = std::sync::mpsc::channel();
+            tx.send(LiveCmd::Health { reply: htx }).unwrap();
+            let health = hrx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(health.completions, 1);
+            assert_eq!(health.client_aborts, 0);
+            assert_eq!(health.in_flight, 0);
+            let (ltx, lrx) = std::sync::mpsc::channel();
+            tx.send(LiveCmd::Loads { reply: ltx }).unwrap();
+            let loads = lrx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(loads.instances.len(), 1);
+            assert_eq!(loads.view.shards.len(), 1);
+            tx.send(LiveCmd::Shutdown).unwrap();
+            serving.join().unwrap()
+        });
+        assert!(report.realtime_enabled);
+        assert_eq!(report.completions.len(), 1);
+        assert_eq!(report.client_aborts, 0);
+        assert!(report.error.is_none(), "{:?}", report.error);
+        // The streamed timeline is causal on the wall clock.
+        let c = &report.completions[0];
+        assert!(c.first_token >= c.arrival && c.finished >= c.first_token);
+    }
+
+    #[test]
+    fn realtime_client_abort_releases_every_reservation() {
+        let cfg = realtime_cfg();
+        let mut engine = RealtimeEngine::new(&cfg);
+        let mut sched =
+            PdScheduler::new(&cfg, || Box::new(BucketPlanner::new(&cfg)));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let report = std::thread::scope(|s| {
+            let serving = s.spawn(|| sched.run_realtime(&mut engine, rx));
+            let sink = StreamSink::new(8);
+            // Generation long enough that the abort lands mid-decode.
+            tx.send(LiveCmd::Submit {
+                req: Request::new(9, RequestClass::Online, 64, 512, 0),
+                sink: sink.clone(),
+            })
+            .unwrap();
+            let mut saw_token = false;
+            for _ in 0..10_000 {
+                if let Some(StreamMsg::Token { .. }) =
+                    sink.recv_timeout(Duration::from_millis(20))
+                {
+                    saw_token = true;
+                    break;
+                }
+            }
+            assert!(saw_token, "request must be live before the disconnect");
+            sink.mark_disconnected();
+            tx.send(LiveCmd::Abort(9)).unwrap();
+            // Conservation: poll `loads` until the abort has released
+            // every reservation (bounded; each poll also pumps the loop).
+            let mut clean = false;
+            for _ in 0..10_000 {
+                let (ltx, lrx) = std::sync::mpsc::channel();
+                tx.send(LiveCmd::Loads { reply: ltx }).unwrap();
+                let l = lrx.recv_timeout(Duration::from_secs(5)).unwrap();
+                if l.view.kv_tokens_in_use == 0
+                    && l.instances.iter().all(|i| {
+                        i.active == 0 && i.pending == 0 && i.reserved_tokens == 0
+                    })
+                {
+                    clean = true;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(clean, "client abort must release every KV reservation");
+            // The final aborted line is still delivered (disconnect sheds
+            // token lines, never the summary).
+            let mut got_abort = false;
+            for _ in 0..1_000 {
+                match sink.recv_timeout(Duration::from_millis(10)) {
+                    Some(StreamMsg::Aborted { id }) => {
+                        assert_eq!(id, 9);
+                        got_abort = true;
+                        break;
+                    }
+                    Some(_) => {}
+                    None if sink.finished() => break,
+                    None => {}
+                }
+            }
+            assert!(got_abort, "aborted summary line must be delivered");
+            tx.send(LiveCmd::Shutdown).unwrap();
+            serving.join().unwrap()
+        });
+        assert!(report.realtime_enabled);
+        assert_eq!(report.client_aborts, 1);
+        assert_eq!(report.completions.len(), 0, "the aborted request never completes");
+        assert!(report.error.is_none(), "{:?}", report.error);
     }
 }

@@ -4,7 +4,9 @@
 //! bucketserve run     --system bucketserve|distserve|uellm --dataset alpaca|longbench|mixed
 //!                     [--n 200] [--rps 8] [--offline] [--engine sim|pjrt]
 //!                     [--config cfg.json] [--scheduler.theta 0.5] [--json]
-//! bucketserve serve   --addr 127.0.0.1:7777 [--system ...]      (TCP gateway)
+//! bucketserve serve   --addr 127.0.0.1:7777 [--system ...]      (TCP gateway;
+//!                     [--realtime] = wall-clock streaming path)
+//! bucketserve smoke   [--realtime.pace 20000]   (in-process realtime round trip)
 //! bucketserve compare --dataset mixed --n 200 [--rps 8]          (3 systems, one trace)
 //! bucketserve info                                               (config + artifact dump)
 //! ```
@@ -14,7 +16,8 @@ use bucketserve::cluster::sim::SimEngine;
 use bucketserve::cluster::Engine;
 use bucketserve::config::SystemConfig;
 use bucketserve::metrics::Summary;
-use bucketserve::server::Server;
+use bucketserve::server::{RealtimeServer, Server, TcpClient};
+use bucketserve::util::json::Json;
 use bucketserve::util::bench::{f1, f2, Table};
 use bucketserve::util::cli::Args;
 use bucketserve::workload::{Dataset, RequestClass, Trace};
@@ -27,6 +30,7 @@ fn main() {
     let code = match cmd {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "smoke" => cmd_smoke(&args),
         "compare" => cmd_compare(&args),
         "info" => cmd_info(&args),
         _ => {
@@ -181,8 +185,22 @@ fn cmd_compare(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let system = System::parse(args.raw("system").unwrap_or("bucketserve"));
     let addr = args.raw("addr").unwrap_or("127.0.0.1:7777").to_string();
+    if args.flag("realtime") {
+        let server = RealtimeServer::new(cfg);
+        log_info!("realtime gateway listening on {addr}");
+        return match server.serve(&addr, |a| println!("listening on {a}")) {
+            Ok(summary) => {
+                println!("{}", summary.to_json());
+                0
+            }
+            Err(e) => {
+                eprintln!("serve: {e}");
+                2
+            }
+        };
+    }
+    let system = System::parse(args.raw("system").unwrap_or("bucketserve"));
     let server = Server::new(cfg, system);
     log_info!("gateway listening on {addr} ({})", system.name());
     if let Err(e) = server.serve(&addr, |a| println!("listening on {a}")) {
@@ -190,6 +208,109 @@ fn cmd_serve(args: &Args) -> i32 {
         return 2;
     }
     0
+}
+
+/// `bucketserve smoke` — spin up the realtime server in-process, run a
+/// scripted client against it over a real socket, and verify streamed
+/// delivery + introspection end to end. Exit code 0 only on full success
+/// (CI's serve-smoke job wraps this in a timeout).
+fn cmd_smoke(args: &Args) -> i32 {
+    match run_smoke(args) {
+        Ok(()) => {
+            println!("smoke: ok");
+            0
+        }
+        Err(e) => {
+            eprintln!("smoke: FAILED: {e}");
+            2
+        }
+    }
+}
+
+fn run_smoke(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = load_config(args);
+    if args.raw("realtime.pace").is_none() {
+        // Compress wall time so the smoke run finishes in well under a
+        // second; the protocol exercised is identical to pace 1.0.
+        cfg.realtime.pace = 20_000.0;
+    }
+    let (btx, brx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        RealtimeServer::new(cfg).serve("127.0.0.1:0", move |a| {
+            let _ = btx.send(a);
+        })
+    });
+    let addr = brx.recv()?;
+    let mut c = TcpClient::connect(&addr)?;
+
+    let pong = c.call(&Json::obj(vec![("op", Json::from("ping"))]))?;
+    anyhow::ensure!(
+        pong.get("realtime").as_bool() == Some(true),
+        "not a realtime server: {pong}"
+    );
+
+    for (input, output, class) in
+        [(64u64, 4u64, "online"), (96, 6, "online"), (128, 8, "offline")]
+    {
+        let ack = c.call(&Json::obj(vec![
+            ("op", Json::from("submit")),
+            ("input_len", Json::from(input)),
+            ("output_len", Json::from(output)),
+            ("class", Json::from(class)),
+        ]))?;
+        anyhow::ensure!(
+            ack.get("ok").as_bool() == Some(true),
+            "submit rejected: {ack}"
+        );
+        let id = ack
+            .get("id")
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("no id in ack: {ack}"))?;
+        let mut last_seq = 0u64;
+        loop {
+            let j = c.read_line()?;
+            anyhow::ensure!(
+                j.get("id").as_u64() == Some(id),
+                "cross-stream line: {j}"
+            );
+            if j.get("done").as_bool() == Some(true) {
+                anyhow::ensure!(
+                    j.get("output_len").as_u64() == Some(output),
+                    "bad summary line: {j}"
+                );
+                break;
+            }
+            anyhow::ensure!(j.get("aborted").is_null(), "unexpected abort: {j}");
+            let seq = j
+                .get("seq")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("bad token line: {j}"))?;
+            anyhow::ensure!(seq > last_seq, "non-monotone token seq: {j}");
+            last_seq = seq;
+        }
+    }
+
+    let health = c.call(&Json::obj(vec![("op", Json::from("health"))]))?;
+    anyhow::ensure!(
+        health.get("completions").as_u64() == Some(3),
+        "bad health after 3 completions: {health}"
+    );
+    let loads = c.call(&Json::obj(vec![("op", Json::from("loads"))]))?;
+    anyhow::ensure!(
+        loads.get("kv_token_budget").as_u64().unwrap_or(0) > 0,
+        "loads reports no KV budget: {loads}"
+    );
+
+    c.call(&Json::obj(vec![("op", Json::from("shutdown"))]))?;
+    let summary = handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+    anyhow::ensure!(
+        summary.n_requests == 3,
+        "expected 3 completions in summary, got {}",
+        summary.n_requests
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> i32 {
@@ -222,7 +343,8 @@ USAGE:
   bucketserve run     --system bucketserve|distserve|uellm --dataset alpaca|longbench|mixed
                       [--n 200] [--rps 8] [--offline] [--engine sim|pjrt] [--json]
   bucketserve compare --dataset mixed --n 200 [--rps 8 | --offline]
-  bucketserve serve   --addr 127.0.0.1:7777 [--system bucketserve]
+  bucketserve serve   --addr 127.0.0.1:7777 [--system bucketserve] [--realtime]
+  bucketserve smoke   [--realtime.pace 20000]   (realtime loopback self-test)
   bucketserve info    [--config cfg.json]
 
 Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
@@ -238,6 +360,9 @@ Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
                   --admission.offline_tbt_factor 8 --admission.max_evictions 2
                   --executor.threads 1|N|0 (0 = one worker per shard;
                       parallel output is byte-identical to sequential)
+                  --realtime.stream_buf 64 --realtime.ewma_alpha 0.2
+                  --realtime.drain_timeout_ms 5000
+                  --realtime.pace 1.0 (wall-clock compression for tests/benches)
 (full knob-by-knob table: docs/ARCHITECTURE.md)"
     );
 }

@@ -30,6 +30,10 @@
 //!   `prefix_misses`/`prefix_hit_tokens`, `prefix_evictions` +
 //!   `prefix_evicted_tokens`, `prefix_resident_tokens`) — only when
 //!   `prefix.enabled`.
+//! * the realtime block (`client_aborts`, `stream_drops`) — only for
+//!   runs driven by the realtime serving path
+//!   ([`crate::coordinator::PdScheduler::run_realtime`]); virtual-time
+//!   replay never emits it.
 //! * `error` — only on abnormal termination; its presence means the row
 //!   must not be read as a clean result.
 //!
@@ -133,6 +137,13 @@ pub struct Summary {
     pub prefix_evicted_tokens: u64,
     /// Cache-resident KV tokens at run end.
     pub prefix_resident_tokens: u64,
+    /// Whether the run was driven by the realtime serving path (gates
+    /// the realtime JSON block so replay runs stay byte-identical).
+    pub realtime_enabled: bool,
+    /// Requests aborted mid-flight by client disconnects.
+    pub client_aborts: u64,
+    /// Streamed token lines shed by full per-client stream buffers.
+    pub stream_drops: u64,
     /// Abnormal-termination diagnostics from the run (scheduler stall);
     /// a summary carrying this must not be read as a clean result.
     pub error: Option<String>,
@@ -239,6 +250,9 @@ impl Summary {
             prefix_evictions: r.prefix_evictions,
             prefix_evicted_tokens: r.prefix_evicted_tokens,
             prefix_resident_tokens: r.prefix_resident_tokens,
+            realtime_enabled: r.realtime_enabled,
+            client_aborts: r.client_aborts,
+            stream_drops: r.stream_drops,
             error: r.error.clone(),
         }
     }
@@ -368,6 +382,12 @@ impl Summary {
                 "prefix_resident_tokens",
                 Json::from(self.prefix_resident_tokens),
             ));
+        }
+        // Realtime block only for runs driven by the live serving path:
+        // virtual-time replay output stays byte-identical.
+        if self.realtime_enabled {
+            fields.push(("client_aborts", Json::from(self.client_aborts)));
+            fields.push(("stream_drops", Json::from(self.stream_drops)));
         }
         if let Some(e) = &self.error {
             fields.push(("error", Json::from(e.as_str())));
@@ -540,6 +560,30 @@ mod tests {
         let hits = parsed.get("prefix_hits").as_u64().unwrap();
         assert!(hits > 0, "multi-turn sessions must hit the cache");
         assert!(s.prefix_hit_rate() > 0.0 && s.prefix_hit_rate() <= 1.0);
+    }
+
+    #[test]
+    fn realtime_block_only_when_realtime() {
+        let cfg = SystemConfig::default();
+        let trace =
+            Trace::batch(Dataset::Alpaca, 10, RequestClass::Offline, 4096, 21);
+        // Virtual-time replay: no realtime keys in the JSON.
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(!r.realtime_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let j = s.to_json();
+        assert!(j.get("client_aborts").is_null());
+        assert!(j.get("stream_drops").is_null());
+        // A realtime-flagged report emits the block (zeros included).
+        let r = RunReport {
+            realtime_enabled: true,
+            client_aborts: 3,
+            ..Default::default()
+        };
+        let s = Summary::from_report("Realtime", &r, &cfg.slo);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("client_aborts").as_u64(), Some(3));
+        assert_eq!(parsed.get("stream_drops").as_u64(), Some(0));
     }
 
     #[test]

@@ -10,15 +10,15 @@ use crate::baselines::System;
 use crate::cluster::Engine;
 use crate::config::SystemConfig;
 use crate::coordinator::RunReport;
+use crate::util::clock::{Clock, WallClock};
 use crate::workload::{Request, RequestClass, Trace};
 use crate::Micros;
-use std::time::Instant;
 
 /// Collects requests and dispatches runs.
 pub struct Gateway {
     cfg: SystemConfig,
     system: System,
-    started: Instant,
+    clock: Box<dyn Clock>,
     pending: Vec<Request>,
     next_id: u64,
     pub accepted: u64,
@@ -27,10 +27,20 @@ pub struct Gateway {
 
 impl Gateway {
     pub fn new(cfg: SystemConfig, system: System) -> Gateway {
+        Gateway::with_clock(cfg, system, Box::new(WallClock::new()))
+    }
+
+    /// Gateway over an injected clock — lets tests stamp arrivals
+    /// deterministically without sleeping.
+    pub fn with_clock(
+        cfg: SystemConfig,
+        system: System,
+        clock: Box<dyn Clock>,
+    ) -> Gateway {
         Gateway {
             cfg,
             system,
-            started: Instant::now(),
+            clock,
             pending: Vec::new(),
             next_id: 0,
             accepted: 0,
@@ -38,13 +48,16 @@ impl Gateway {
         }
     }
 
-    /// Wall-clock arrival timestamp relative to gateway start.
+    /// Arrival timestamp on the gateway's clock (wall time since
+    /// construction unless a test injected a manual clock).
     pub fn now(&self) -> Micros {
-        self.started.elapsed().as_micros() as Micros
+        self.clock.now_us()
     }
 
     /// Admit one request; returns its assigned id, or None if rejected
-    /// (zero-length prompt or prompt beyond the context limit budget).
+    /// (zero-length prompt or generation budget, or `input_len +
+    /// output_len` past the model's context limit — the full sequence
+    /// must fit, not just the prompt).
     pub fn submit(
         &mut self,
         class: RequestClass,
@@ -57,14 +70,13 @@ impl Gateway {
             return None;
         }
         let max = self.cfg.model.max_seq;
-        if input_len > max {
+        if input_len as u64 + output_len as u64 > max as u64 {
             self.rejected += 1;
             return None;
         }
         let id = self.next_id;
         self.next_id += 1;
         self.accepted += 1;
-        let output_len = output_len.min(max.saturating_sub(input_len).max(1));
         self.pending.push(Request::new(
             id,
             class,
@@ -153,6 +165,43 @@ mod tests {
         let report = g.run(&mut engine);
         assert_eq!(report.completions.len(), 10);
         assert_eq!(g.pending(), 0);
+    }
+
+    #[test]
+    fn rejects_combined_length_past_context_limit() {
+        let cfg = SystemConfig::default();
+        let max = cfg.model.max_seq;
+        let mut g = Gateway::new(cfg, System::BucketServe);
+        // Exactly at the limit: admitted, output budget untouched.
+        let id = g.submit(RequestClass::Online, max - 10, 10, Some(0));
+        assert!(id.is_some());
+        let t = g.drain_trace();
+        assert_eq!(t.requests[0].output_len, 10);
+        // One token over the limit: rejected.
+        assert!(g
+            .submit(RequestClass::Online, max - 10, 11, Some(0))
+            .is_none());
+        // Prompt alone at the limit leaves no room to generate.
+        assert!(g.submit(RequestClass::Online, max, 1, Some(0)).is_none());
+        assert_eq!(g.rejected, 2);
+    }
+
+    #[test]
+    fn manual_clock_stamps_arrivals_deterministically() {
+        use crate::util::clock::ManualClock;
+        let clock = ManualClock::new();
+        let mut g = Gateway::with_clock(
+            SystemConfig::default(),
+            System::BucketServe,
+            Box::new(clock.clone()),
+        );
+        clock.set(5_000);
+        g.submit(RequestClass::Online, 100, 10, None).unwrap();
+        clock.advance(2_500);
+        g.submit(RequestClass::Online, 100, 10, None).unwrap();
+        let t = g.drain_trace();
+        assert_eq!(t.requests[0].arrival, 5_000);
+        assert_eq!(t.requests[1].arrival, 7_500);
     }
 
     #[test]

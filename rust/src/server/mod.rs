@@ -5,11 +5,19 @@
 //!   a chosen system over a chosen engine.
 //! * [`tcp`] — newline-delimited-JSON TCP protocol over the gateway: the
 //!   `bucketserve serve` subcommand and its client.
+//! * [`realtime`] — the wall-clock serving path (`bucketserve serve
+//!   --realtime`): arrivals feed a continuously running scheduler over
+//!   the [`RealtimeEngine`], tokens stream back per line, client
+//!   disconnects abort in-flight work, and `health`/`loads` expose live
+//!   occupancy.
 //!
 //! [`Trace`]: crate::workload::Trace
+//! [`RealtimeEngine`]: crate::cluster::realtime::RealtimeEngine
 
 pub mod gateway;
+pub mod realtime;
 pub mod tcp;
 
 pub use gateway::Gateway;
+pub use realtime::RealtimeServer;
 pub use tcp::{Server, TcpClient};

@@ -1,0 +1,449 @@
+//! Realtime TCP front end: wall-clock serving with streamed delivery.
+//!
+//! Unlike [`super::tcp::Server`] — which *accumulates* requests and
+//! replays them as a trace on `{"op":"run"}` — this server feeds every
+//! arrival straight into a continuously running
+//! [`PdScheduler::run_realtime`] loop over a [`RealtimeEngine`], and
+//! streams tokens back as they are produced.
+//!
+//! Protocol (one JSON object per line; one in-flight stream per
+//! connection — open more connections for concurrency):
+//!
+//! ```text
+//! → {"op":"ping"}                         ← {"ok":true,"op":"pong","realtime":true}
+//! → {"op":"submit","input_len":N,
+//!    "output_len":M,
+//!    "class":"online"|"offline"}          ← {"ok":true,"id":K}, then one
+//!                                            {"id":K,"seq":n,"at_us":t} line per
+//!                                            token, then {"id":K,"done":true,
+//!                                            "output_len":..,"ttft_us":..,
+//!                                            "e2e_us":..} (or {"id":K,
+//!                                            "aborted":true})
+//! → {"op":"health"}                       ← {"ok":true,"in_flight":..,"queued":..,
+//!                                            "completions":..,"client_aborts":..}
+//! → {"op":"loads"}                        ← {"ok":true, kv/queue occupancy,
+//!                                            per-shard + per-instance arrays,
+//!                                            running online attainment}
+//! → {"op":"quit"}                         ← {"ok":true} and close
+//! → {"op":"shutdown"}                     ← {"ok":true}; drain and stop serving
+//! ```
+//!
+//! Lifecycle: a connection that dies mid-stream has its sink marked
+//! disconnected and an abort command sent on its behalf; the scheduler
+//! releases the request's KV/prefix reservations at the next touchpoint
+//! and charges `client_aborts` (see [`crate::coordinator::live`]).
+//!
+//! [`PdScheduler::run_realtime`]: crate::coordinator::PdScheduler::run_realtime
+//! [`RealtimeEngine`]: crate::cluster::realtime::RealtimeEngine
+
+use super::gateway::Gateway;
+use crate::baselines::System;
+use crate::cluster::realtime::RealtimeEngine;
+use crate::config::SystemConfig;
+use crate::coordinator::scheduler::BucketPlanner;
+use crate::coordinator::{LiveCmd, PdScheduler, StreamMsg, StreamSink};
+use crate::metrics::Summary;
+use crate::util::json::Json;
+use crate::workload::RequestClass;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// How long an introspection op waits for the serving loop's reply.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(5);
+/// Sink poll cadence while pumping a stream to the socket.
+const PUMP_TICK: Duration = Duration::from_millis(100);
+
+/// The realtime TCP server: accept loop + scheduler thread.
+pub struct RealtimeServer {
+    cfg: SystemConfig,
+}
+
+impl RealtimeServer {
+    pub fn new(cfg: SystemConfig) -> RealtimeServer {
+        RealtimeServer { cfg }
+    }
+
+    /// Bind, run the serving loop, and accept clients until one sends
+    /// `{"op":"shutdown"}`. Returns the drained run's summary.
+    pub fn serve(
+        &self,
+        addr: &str,
+        mut on_bound: impl FnMut(String),
+    ) -> anyhow::Result<Summary> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        on_bound(local.to_string());
+
+        let (tx, rx) = mpsc::channel::<LiveCmd>();
+        let sched_cfg = self.cfg.clone();
+        let sched = thread::spawn(move || {
+            let mut engine = RealtimeEngine::new(&sched_cfg);
+            let mut sched = PdScheduler::new(&sched_cfg, || {
+                Box::new(BucketPlanner::new(&sched_cfg))
+            });
+            sched.run_realtime(&mut engine, rx)
+        });
+
+        // Validation + id assignment reuse the gateway (one per server:
+        // ids stay unique across connections).
+        let gateway = Arc::new(Mutex::new(Gateway::new(
+            self.cfg.clone(),
+            System::BucketServe,
+        )));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stream_buf = self.cfg.realtime.stream_buf.max(1) as usize;
+        let mut conns = Vec::new();
+        for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            let tx = tx.clone();
+            let gateway = Arc::clone(&gateway);
+            let stop = Arc::clone(&stop);
+            conns.push(thread::spawn(move || {
+                if let Err(e) =
+                    handle_conn(stream, &tx, &gateway, stream_buf, &stop, local)
+                {
+                    crate::log_warn!("realtime client error: {e}");
+                }
+            }));
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+        // Last sender gone: even without an explicit shutdown op the
+        // serving loop drains and exits.
+        drop(tx);
+        let report = sched
+            .join()
+            .map_err(|_| anyhow::anyhow!("serving loop panicked"))?;
+        Ok(Summary::from_report("bucketserve-realtime", &report, &self.cfg.slo))
+    }
+}
+
+/// Handle one connection until quit/shutdown/EOF.
+fn handle_conn(
+    stream: TcpStream,
+    tx: &Sender<LiveCmd>,
+    gateway: &Mutex<Gateway>,
+    stream_buf: usize,
+    stop: &AtomicBool,
+    local: SocketAddr,
+) -> anyhow::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                send(&mut writer, &err_json(&format!("bad json: {e}")))?;
+                continue;
+            }
+        };
+        match msg.get("op").as_str() {
+            Some("ping") => send(
+                &mut writer,
+                &Json::obj(vec![
+                    ("ok", Json::from(true)),
+                    ("op", Json::from("pong")),
+                    ("realtime", Json::from(true)),
+                ]),
+            )?,
+            Some("submit") => {
+                let class = match msg.get("class").as_str() {
+                    Some("offline") => RequestClass::Offline,
+                    _ => RequestClass::Online,
+                };
+                let input = msg.get("input_len").as_u64().unwrap_or(0) as u32;
+                let output = msg.get("output_len").as_u64().unwrap_or(0) as u32;
+                // Arrival 0 is a placeholder: the serving loop re-stamps
+                // it on its own wall clock at ingest.
+                let req = {
+                    let mut g = gateway.lock().unwrap();
+                    match g.submit(class, input, output, Some(0)) {
+                        Some(_) => g.drain_trace().requests.pop(),
+                        None => None,
+                    }
+                };
+                let Some(req) = req else {
+                    send(&mut writer, &err_json("rejected"))?;
+                    continue;
+                };
+                let id = req.id;
+                let sink = StreamSink::new(stream_buf);
+                let cmd = LiveCmd::Submit { req, sink: sink.clone() };
+                if tx.send(cmd).is_err() {
+                    send(&mut writer, &err_json("serving loop stopped"))?;
+                    continue;
+                }
+                send(
+                    &mut writer,
+                    &Json::obj(vec![
+                        ("ok", Json::from(true)),
+                        ("id", Json::from(id)),
+                    ]),
+                )?;
+                if !pump_stream(&mut writer, &sink)? {
+                    // Socket died mid-stream: convert to a client abort
+                    // and stop serving this connection.
+                    sink.mark_disconnected();
+                    let _ = tx.send(LiveCmd::Abort(id));
+                    return Ok(());
+                }
+            }
+            Some("health") => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(LiveCmd::Health { reply: rtx }).is_err() {
+                    send(&mut writer, &err_json("serving loop stopped"))?;
+                    continue;
+                }
+                match rrx.recv_timeout(REPLY_TIMEOUT) {
+                    Ok(h) => send(
+                        &mut writer,
+                        &Json::obj(vec![
+                            ("ok", Json::from(true)),
+                            ("in_flight", Json::from(h.in_flight)),
+                            ("queued", Json::from(h.queued)),
+                            ("completions", Json::from(h.completions)),
+                            ("client_aborts", Json::from(h.client_aborts)),
+                        ]),
+                    )?,
+                    Err(_) => send(&mut writer, &err_json("health timeout"))?,
+                }
+            }
+            Some("loads") => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(LiveCmd::Loads { reply: rtx }).is_err() {
+                    send(&mut writer, &err_json("serving loop stopped"))?;
+                    continue;
+                }
+                match rrx.recv_timeout(REPLY_TIMEOUT) {
+                    Ok(l) => send(&mut writer, &loads_json(&l))?,
+                    Err(_) => send(&mut writer, &err_json("loads timeout"))?,
+                }
+            }
+            Some("quit") => {
+                send(&mut writer, &Json::obj(vec![("ok", Json::from(true))]))?;
+                return Ok(());
+            }
+            Some("shutdown") => {
+                let _ = tx.send(LiveCmd::Shutdown);
+                send(&mut writer, &Json::obj(vec![("ok", Json::from(true))]))?;
+                stop.store(true, Ordering::SeqCst);
+                // Wake the acceptor so it observes the stop flag.
+                let _ = TcpStream::connect(local);
+                return Ok(());
+            }
+            other => {
+                send(&mut writer, &err_json(&format!("unknown op {other:?}")))?
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Forward one request's stream to the socket until its final line.
+/// Ok(true) = stream finished; Ok(false) = the socket died mid-stream.
+fn pump_stream(
+    writer: &mut TcpStream,
+    sink: &StreamSink,
+) -> anyhow::Result<bool> {
+    loop {
+        match sink.recv_timeout(PUMP_TICK) {
+            Some(msg) => {
+                let (line, last) = stream_line(&msg);
+                if send(writer, &line).is_err() {
+                    return Ok(false);
+                }
+                if last {
+                    return Ok(true);
+                }
+            }
+            None => {
+                if sink.finished() {
+                    return Ok(true);
+                }
+            }
+        }
+    }
+}
+
+/// NDJSON encoding of one stream line; `true` when it ends the stream.
+fn stream_line(msg: &StreamMsg) -> (Json, bool) {
+    match msg {
+        StreamMsg::Token { id, seq, at_us } => (
+            Json::obj(vec![
+                ("id", Json::from(*id)),
+                ("seq", Json::from(*seq as u64)),
+                ("at_us", Json::from(*at_us)),
+            ]),
+            false,
+        ),
+        StreamMsg::Done { completion: c } => (
+            Json::obj(vec![
+                ("id", Json::from(c.id)),
+                ("done", Json::from(true)),
+                ("output_len", Json::from(c.output_len as u64)),
+                ("ttft_us", Json::from(c.ttft())),
+                ("e2e_us", Json::from(c.e2e())),
+            ]),
+            true,
+        ),
+        StreamMsg::Aborted { id } => (
+            Json::obj(vec![
+                ("id", Json::from(*id)),
+                ("aborted", Json::from(true)),
+            ]),
+            true,
+        ),
+    }
+}
+
+fn loads_json(l: &crate::coordinator::LoadsInfo) -> Json {
+    let shards = l
+        .view
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Json::obj(vec![
+                ("shard", Json::from(i)),
+                ("queue_depth", Json::from(s.queue_depth)),
+                ("kv_tokens_in_use", Json::from(s.kv_tokens_in_use)),
+                ("kv_token_budget", Json::from(s.kv_token_budget)),
+            ])
+        })
+        .collect();
+    let instances = l
+        .instances
+        .iter()
+        .map(|i| {
+            Json::obj(vec![
+                ("instance", Json::from(i.instance)),
+                ("active", Json::from(i.active)),
+                ("pending", Json::from(i.pending)),
+                ("reserved_tokens", Json::from(i.reserved_tokens)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::from(true)),
+        ("kv_tokens_in_use", Json::from(l.view.kv_tokens_in_use)),
+        ("kv_token_budget", Json::from(l.view.kv_token_budget)),
+        ("prefill_queue", Json::from(l.view.prefill_queue)),
+        ("decode_active", Json::from(l.view.decode_active)),
+        ("arrival_rps", Json::num(l.view.arrival_rps)),
+        ("ttft_attainment_online", Json::num(l.ttft_attainment_online)),
+        ("tbt_attainment_online", Json::num(l.tbt_attainment_online)),
+        ("shards", Json::Arr(shards)),
+        ("instances", Json::Arr(instances)),
+    ])
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::from(false)), ("error", Json::from(msg))])
+}
+
+fn send(w: &mut TcpStream, j: &Json) -> std::io::Result<()> {
+    writeln!(w, "{j}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::TcpClient;
+
+    fn paced_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.realtime.pace = 50_000.0;
+        cfg
+    }
+
+    fn spawn_realtime(cfg: SystemConfig) -> (String, thread::JoinHandle<Summary>) {
+        let (btx, brx) = mpsc::channel();
+        let handle = thread::spawn(move || {
+            RealtimeServer::new(cfg)
+                .serve("127.0.0.1:0", move |a| {
+                    let _ = btx.send(a);
+                })
+                .unwrap()
+        });
+        (brx.recv().unwrap(), handle)
+    }
+
+    #[test]
+    fn streams_one_request_end_to_end() {
+        let (addr, handle) = spawn_realtime(paced_cfg());
+        let mut c = TcpClient::connect(&addr).unwrap();
+
+        let pong = c
+            .call(&Json::obj(vec![("op", Json::from("ping"))]))
+            .unwrap();
+        assert_eq!(pong.get("realtime").as_bool(), Some(true));
+
+        let ack = c
+            .call(&Json::obj(vec![
+                ("op", Json::from("submit")),
+                ("input_len", Json::from(64u64)),
+                ("output_len", Json::from(4u64)),
+                ("class", Json::from("online")),
+            ]))
+            .unwrap();
+        assert_eq!(ack.get("ok").as_bool(), Some(true), "{ack}");
+        let id = ack.get("id").as_u64().unwrap();
+
+        let mut seqs = Vec::new();
+        loop {
+            let j = c.read_line().unwrap();
+            assert_eq!(j.get("id").as_u64(), Some(id));
+            if j.get("done").as_bool() == Some(true) {
+                assert_eq!(j.get("output_len").as_u64(), Some(4));
+                break;
+            }
+            assert!(j.get("aborted").is_null(), "{j}");
+            seqs.push(j.get("seq").as_u64().unwrap());
+        }
+        assert!(!seqs.is_empty(), "at least the first token is streamed");
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "{seqs:?}");
+
+        let health = c
+            .call(&Json::obj(vec![("op", Json::from("health"))]))
+            .unwrap();
+        assert_eq!(health.get("completions").as_u64(), Some(1));
+        assert_eq!(health.get("client_aborts").as_u64(), Some(0));
+
+        c.call(&Json::obj(vec![("op", Json::from("shutdown"))])).unwrap();
+        let summary = handle.join().unwrap();
+        assert_eq!(summary.n_requests, 1);
+    }
+
+    #[test]
+    fn rejects_oversized_and_unknown_ops() {
+        let (addr, handle) = spawn_realtime(paced_cfg());
+        let mut c = TcpClient::connect(&addr).unwrap();
+        let reply = c
+            .call(&Json::obj(vec![
+                ("op", Json::from("submit")),
+                ("input_len", Json::from(1_000_000u64)),
+                ("output_len", Json::from(8u64)),
+            ]))
+            .unwrap();
+        assert_eq!(reply.get("ok").as_bool(), Some(false));
+        let bad = c
+            .call(&Json::obj(vec![("op", Json::from("no-such-op"))]))
+            .unwrap();
+        assert_eq!(bad.get("ok").as_bool(), Some(false));
+        c.call(&Json::obj(vec![("op", Json::from("shutdown"))])).unwrap();
+        handle.join().unwrap();
+    }
+}

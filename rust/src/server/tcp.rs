@@ -15,7 +15,10 @@
 //!
 //! The server replays accumulated arrivals through the configured system
 //! (a replay gateway: requests are stamped on receipt, scheduled exactly
-//! as the live arrival sequence).
+//! as the live arrival sequence). For wall-clock serving — tokens
+//! streamed as they are produced, `submit`/`health`/`loads` ops,
+//! disconnect-abort — see [`super::realtime::RealtimeServer`]
+//! (`bucketserve serve --realtime`).
 
 use super::gateway::Gateway;
 use crate::baselines::System;

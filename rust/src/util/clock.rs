@@ -1,0 +1,93 @@
+//! Injectable wall-clock abstraction.
+//!
+//! The gateway and the realtime server stamp arrivals and timeouts off a
+//! [`Clock`] instead of calling [`std::time::Instant`] directly, so unit
+//! tests drive time by hand ([`ManualClock`]) and never sleep, while
+//! production uses the monotonic wall clock ([`WallClock`]).
+
+use crate::Micros;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Microsecond clock with an arbitrary (per-instance) epoch.
+pub trait Clock: Send {
+    /// Microseconds elapsed since this clock's epoch. Monotone.
+    fn now_us(&self) -> Micros;
+}
+
+/// Monotonic wall clock; epoch = construction time.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> WallClock {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_us(&self) -> Micros {
+        self.epoch.elapsed().as_micros() as Micros
+    }
+}
+
+/// Hand-driven clock for deterministic tests: clones share the same
+/// time, so a test holds one handle and injects another.
+#[derive(Clone, Default)]
+pub struct ManualClock {
+    now: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn new() -> ManualClock {
+        ManualClock::default()
+    }
+
+    /// Jump to an absolute time (µs since epoch).
+    pub fn set(&self, us: Micros) {
+        self.now.store(us, Ordering::SeqCst);
+    }
+
+    /// Move forward by `us` microseconds.
+    pub fn advance(&self, us: Micros) {
+        self.now.fetch_add(us, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_us(&self) -> Micros {
+        self.now.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_is_shared_and_monotone_under_advance() {
+        let c = ManualClock::new();
+        let handle = c.clone();
+        assert_eq!(c.now_us(), 0);
+        handle.advance(250);
+        assert_eq!(c.now_us(), 250);
+        handle.set(1_000);
+        assert_eq!(c.now_us(), 1_000);
+    }
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let a = c.now_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now_us() > a);
+    }
+}

@@ -6,6 +6,7 @@
 //! are implemented here from scratch:
 //!
 //! * [`json`] — recursive-descent JSON parser + writer (manifest/config/IPC).
+//! * [`clock`] — injectable µs wall clock (manual in tests, monotonic in prod).
 //! * [`rng`] — PCG-family PRNG with the distributions the workload models
 //!   need (uniform, normal, log-normal, exponential, Pareto, Poisson).
 //! * [`stats`] — streaming mean/variance, percentile sketches, histograms.
@@ -14,6 +15,7 @@
 //! * [`prop`] — mini property-testing harness (seeded generators + shrink-lite).
 //! * [`bench`] — micro/throughput bench harness used by `cargo bench` targets.
 
+pub mod clock;
 pub mod json;
 pub mod rng;
 pub mod stats;

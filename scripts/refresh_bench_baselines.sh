@@ -13,6 +13,11 @@
 # plan_rounds / parallel_plans / plan_invalidations from the executor's
 # plan/commit protocol); planning wall-clock stays table-only.
 #
+# Exception: realtime_load rows are wall-clock by nature (the realtime
+# serving loop measures real sleeps and poll latency, pace-compressed),
+# so its snapshot is a reference capture, not a deterministic contract —
+# recapture on an idle machine and compare attainment shape, not digits.
+#
 # Usage: scripts/refresh_bench_baselines.sh [bench ...]
 #   (default: every bench with a snapshot file in benches/baselines/)
 set -euo pipefail
