@@ -51,6 +51,51 @@ impl CostModel {
         us as Micros + self.gpu.step_overhead_us
     }
 
+    /// FLOPs of prefilling token positions `[from, to)` of one sequence
+    /// whose full (padded) length reaches at least `to`: the dense term
+    /// is linear in the slice width, while causal attention charges the
+    /// quadratic *difference* — each new token attends over the whole
+    /// prefix, so later slices are dearer. Slices telescope exactly:
+    /// summing `[0,a) + [a,b) + ... + [z,s)` gives
+    /// [`CostModel::prefill_flops`]`(s)`.
+    pub fn prefill_flops_range(&self, from: u32, to: u32) -> f64 {
+        let (from, to) = (from as f64, to as f64);
+        let dense = 2.0 * self.model.n_params * (to - from);
+        let hidden = (self.model.n_heads * self.model.head_dim) as f64;
+        let attn =
+            4.0 * self.model.n_layers as f64 * hidden * (to * to - from * from);
+        dense + attn
+    }
+
+    /// Duration of one chunked-prefill slice: N sequences each advancing
+    /// token positions `[from, to)`. Identical rate model to
+    /// [`CostModel::prefill_time`]; each slice pays the fixed step
+    /// overhead, so an S-slice batch costs `(S − 1) · step_overhead_us`
+    /// more than its monolithic run — the chunking tax.
+    pub fn prefill_slice_time(&self, n: usize, from: u32, to: u32) -> Micros {
+        let flops = self.prefill_flops_range(from, to) * n as f64;
+        let rate = self.gpu.flops * self.gpu.compute_eff * self.tp as f64;
+        let us = flops / rate * 1e6;
+        us as Micros + self.gpu.step_overhead_us
+    }
+
+    /// Duration of a decode iteration run as a *hybrid batch* on an
+    /// instance already streaming a prefill slice's weight pass: the
+    /// bandwidth side drops the weight-read term (the slice pays it) and
+    /// reads only live KV; the compute side is unchanged.
+    pub fn hybrid_decode_step_time(&self, n: usize, total_ctx: u64) -> Micros {
+        if n == 0 {
+            return 0;
+        }
+        let kv_bytes = (total_ctx * self.model.kv_bytes_per_token()) as f64;
+        let t_mem =
+            kv_bytes / (self.gpu.membw * self.gpu.membw_eff * self.tp as f64);
+        let t_comp = 2.0 * self.model.n_params * n as f64
+            / (self.gpu.flops * self.gpu.compute_eff * self.tp as f64);
+        let us = t_mem.max(t_comp) * 1e6;
+        us as Micros + self.gpu.step_overhead_us
+    }
+
     /// Duration of one decode iteration over sequences with context lengths
     /// summing to `total_ctx` tokens (N = `n` sequences).
     ///
@@ -169,6 +214,70 @@ mod tests {
         let short = m.decode_step_time(16, 16 * 128);
         let long = m.decode_step_time(16, 16 * 4096);
         assert!(long > short);
+    }
+
+    #[test]
+    fn slice_flops_telescope_to_full_prefill() {
+        // Σ prefill_flops_range over a partition of [0, s) must equal
+        // prefill_flops(s) exactly (same f64 expression, telescoped), so
+        // chunking never changes total FLOPs — only adds per-slice
+        // launch overhead.
+        let m = cm();
+        let s = 4096u32;
+        let cuts = [0u32, 512, 1024, 2048, 3000, 4096];
+        let sum: f64 = cuts
+            .windows(2)
+            .map(|w| m.prefill_flops_range(w[0], w[1]))
+            .sum();
+        let full = m.prefill_flops(s);
+        assert!(
+            (sum - full).abs() / full < 1e-12,
+            "sliced {sum} vs full {full}"
+        );
+        // And a whole-range slice is exactly the monolithic prefill.
+        assert_eq!(m.prefill_slice_time(4, 0, s), m.prefill_time(4, s));
+    }
+
+    #[test]
+    fn sliced_prefill_costs_one_overhead_per_slice() {
+        // Duration side of the telescope: an S-slice run costs the
+        // monolithic duration plus (S − 1) launch overheads, up to
+        // per-slice µs truncation.
+        let m = cm();
+        let s = 4096u32;
+        let cuts = [0u32, 1024, 2048, 3072, 4096];
+        let sliced: Micros =
+            cuts.windows(2).map(|w| m.prefill_slice_time(2, w[0], w[1])).sum();
+        let full = m.prefill_time(2, s);
+        let expect = full + 3 * m.gpu.step_overhead_us;
+        let diff = sliced.abs_diff(expect);
+        assert!(diff <= 4, "sliced {sliced} vs expected {expect}");
+        // Later slices are dearer (causal attention over the prefix).
+        assert!(
+            m.prefill_slice_time(1, 3072, 4096)
+                > m.prefill_slice_time(1, 0, 1024)
+        );
+    }
+
+    #[test]
+    fn hybrid_decode_drops_the_weight_read() {
+        let m = cm();
+        // Bandwidth-bound regime: sharing the weight pass must be a
+        // large win (the weight read dominates a small batch's t_mem).
+        let plain = m.decode_step_time(1, 512);
+        let hybrid = m.hybrid_decode_step_time(1, 512);
+        assert!(
+            hybrid < plain / 2,
+            "hybrid {hybrid} vs plain {plain}: weight read not dropped"
+        );
+        // Never cheaper than the compute floor + overhead, never free.
+        assert!(hybrid > m.gpu.step_overhead_us);
+        assert_eq!(m.hybrid_decode_step_time(0, 0), 0);
+        // KV reads still scale with context.
+        assert!(
+            m.hybrid_decode_step_time(16, 16 * 4096)
+                > m.hybrid_decode_step_time(16, 16 * 128)
+        );
     }
 
     #[test]

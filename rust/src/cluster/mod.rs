@@ -117,8 +117,36 @@ pub trait Engine {
     /// Execute (or cost) one prefill batch; returns its duration.
     fn prefill(&mut self, batch: &PrefillBatch) -> anyhow::Result<Micros>;
 
+    /// Execute (or cost) one *slice* of a chunked prefill batch: token
+    /// positions `[from, to)` of every sequence in `batch` (causal
+    /// attention makes later slices dearer — they attend over the whole
+    /// prefix). Engines without slice pricing fall back to the full
+    /// batch cost per slice, which makes chunking strictly pessimal
+    /// there rather than silently wrong.
+    fn prefill_slice(
+        &mut self,
+        batch: &PrefillBatch,
+        from: u32,
+        to: u32,
+    ) -> anyhow::Result<Micros> {
+        let _ = (from, to);
+        self.prefill(batch)
+    }
+
     /// Execute (or cost) one decode iteration; returns its duration.
     fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros>;
+
+    /// Execute (or cost) one decode iteration that piggybacks on a
+    /// co-resident prefill slice as a hybrid batch: the slice's weight
+    /// pass is already streaming, so the iteration pays only for its KV
+    /// reads. Engines without hybrid pricing fall back to the plain
+    /// iteration cost (chunking's hybrid benefit simply vanishes).
+    fn hybrid_decode_step(
+        &mut self,
+        batch: &DecodeBatch,
+    ) -> anyhow::Result<Micros> {
+        self.decode_step(batch)
+    }
 
     /// Pure cost *projection* of one decode iteration over `n` sequences
     /// whose context lengths sum to `total_ctx` tokens — what the

@@ -85,10 +85,35 @@ impl Engine for RealtimeEngine {
         Ok(us)
     }
 
+    fn prefill_slice(
+        &mut self,
+        batch: &PrefillBatch,
+        from: u32,
+        to: u32,
+    ) -> anyhow::Result<Micros> {
+        // Same oracle as the simulator's sliced pricing, executed as a
+        // paced sleep — the realtime path inherits chunking for free.
+        let us = self.scaled(self.sim.prefill_slice(batch, from, to)?);
+        Self::block_for(us);
+        Ok(us)
+    }
+
     fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros> {
         let us = self.scaled(self.sim.decode_step(batch)?);
         Self::block_for(us);
         self.observed.lock().unwrap().observe(batch.total_ctx(), us);
+        Ok(us)
+    }
+
+    fn hybrid_decode_step(
+        &mut self,
+        batch: &DecodeBatch,
+    ) -> anyhow::Result<Micros> {
+        let us = self.scaled(self.sim.hybrid_decode_step(batch)?);
+        Self::block_for(us);
+        // Hybrid iterations are deliberately *not* fed to the observed
+        // EWMA: it projects plain-iteration cost for admission, and
+        // mixing in weight-sharing samples would bias it optimistic.
         Ok(us)
     }
 

@@ -44,9 +44,29 @@ impl Engine for SimEngine {
         Ok(self.cost.prefill_time(batch.n(), batch.padded_len))
     }
 
+    fn prefill_slice(
+        &mut self,
+        batch: &PrefillBatch,
+        from: u32,
+        to: u32,
+    ) -> anyhow::Result<Micros> {
+        // Each slice is its own kernel launch: counted like a prefill
+        // call, priced on the [from, to) range.
+        self.prefill_calls += 1;
+        Ok(self.cost.prefill_slice_time(batch.n(), from, to))
+    }
+
     fn decode_step(&mut self, batch: &DecodeBatch) -> anyhow::Result<Micros> {
         self.decode_calls += 1;
         Ok(self.cost.decode_step_time(batch.n(), batch.total_ctx()))
+    }
+
+    fn hybrid_decode_step(
+        &mut self,
+        batch: &DecodeBatch,
+    ) -> anyhow::Result<Micros> {
+        self.decode_calls += 1;
+        Ok(self.cost.hybrid_decode_step_time(batch.n(), batch.total_ctx()))
     }
 
     fn projected_decode_us(&self, n: usize, total_ctx: u64) -> Micros {
@@ -88,6 +108,27 @@ mod tests {
         let td = e.decode_step(&d).unwrap();
         assert_eq!(td, e.cost_model().decode_step_time(1, 128));
         assert_eq!(e.prefill_calls, 1);
+        assert_eq!(e.decode_calls, 1);
+    }
+
+    #[test]
+    fn slice_and_hybrid_delegate_to_cost_model() {
+        let cfg = SystemConfig::default();
+        let mut e = SimEngine::new(&cfg);
+        let b = PrefillBatch {
+            items: vec![
+                PrefillItem { id: 0, len: 2000, tokens: vec![] },
+                PrefillItem { id: 1, len: 2048, tokens: vec![] },
+            ],
+            padded_len: 2048,
+        };
+        let t = e.prefill_slice(&b, 512, 1024).unwrap();
+        assert_eq!(t, e.cost_model().prefill_slice_time(2, 512, 1024));
+        assert_eq!(e.prefill_calls, 1, "each slice is a kernel launch");
+        let d = DecodeBatch { seqs: vec![DecodeSeq { id: 9, ctx_len: 700 }] };
+        let h = e.hybrid_decode_step(&d).unwrap();
+        assert_eq!(h, e.cost_model().hybrid_decode_step_time(1, 700));
+        assert!(h < e.cost_model().decode_step_time(1, 700));
         assert_eq!(e.decode_calls, 1);
     }
 

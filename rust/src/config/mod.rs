@@ -383,6 +383,46 @@ impl Default for PrefixSpec {
     }
 }
 
+/// Chunked (sliced) prefill knobs: prefill batches whose padded token
+/// volume exceeds `slice_tokens` execute as a sequence of slices, each
+/// ending in a `PrefillSliceEnd` event, so urgent online work can
+/// interleave at slice boundaries and decode iterations can piggyback on
+/// prefill slices as hybrid batches (Slice-Level Scheduling,
+/// arxiv 2406.13511; consumed by the scheduler's sliced dispatch path).
+/// Off by default — with the master switch off the scheduler takes no
+/// slicing path at all and its output (including Summary JSON) is
+/// byte-identical to the pre-chunking system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkSpec {
+    /// Master switch; off = every prefill batch runs monolithically.
+    pub enabled: bool,
+    /// Per-slice token budget: a batch of N sequences advances
+    /// `max(1, slice_tokens / N)` positions per slice, so each slice
+    /// computes at most ~`slice_tokens` padded tokens. Batches that fit
+    /// in one slice run exactly as before.
+    pub slice_tokens: u32,
+    /// Price decode iterations that overlap a co-resident prefill slice
+    /// as hybrid batches (the slice's weight pass is shared, dropping
+    /// the decode iteration's weight-read term).
+    pub hybrid: bool,
+    /// Yield the prefill slot at a slice boundary when urgent online
+    /// work is queued on the owning shard (the sliced batch parks and
+    /// resumes from its cursor once the urgent work has dispatched).
+    /// False = slices run back-to-back (pure TBT/hybrid benefit).
+    pub interleave: bool,
+}
+
+impl Default for ChunkSpec {
+    fn default() -> Self {
+        ChunkSpec {
+            enabled: false,
+            slice_tokens: 2048,
+            hybrid: true,
+            interleave: true,
+        }
+    }
+}
+
 /// Parallel-executor knobs (consumed by
 /// [`crate::coordinator::executor`]): how many worker threads the serving
 /// loop fans decode-iteration boundaries out to. `threads = 1` (the
@@ -499,6 +539,7 @@ pub struct SystemConfig {
     pub preempt: PreemptSpec,
     pub admission: AdmissionSpec,
     pub prefix: PrefixSpec,
+    pub chunk: ChunkSpec,
     pub executor: ExecutorSpec,
     pub realtime: RealtimeSpec,
     pub seed: u64,
@@ -517,6 +558,7 @@ impl Default for SystemConfig {
             preempt: PreemptSpec::default(),
             admission: AdmissionSpec::default(),
             prefix: PrefixSpec::default(),
+            chunk: ChunkSpec::default(),
             executor: ExecutorSpec::default(),
             realtime: RealtimeSpec::default(),
             seed: 42,
@@ -629,6 +671,14 @@ impl SystemConfig {
             if let Some(v) = px.get("block").as_u64() { d.block = v as u32; }
             if let Some(v) = px.get("cache_frac").as_f64() { d.cache_frac = v; }
         }
+        let ch = j.get("chunk");
+        if !ch.is_null() {
+            let d = &mut c.chunk;
+            if let Some(v) = ch.get("enabled").as_bool() { d.enabled = v; }
+            if let Some(v) = ch.get("slice_tokens").as_u64() { d.slice_tokens = v as u32; }
+            if let Some(v) = ch.get("hybrid").as_bool() { d.hybrid = v; }
+            if let Some(v) = ch.get("interleave").as_bool() { d.interleave = v; }
+        }
         let ex = j.get("executor");
         if !ex.is_null() {
             if let Some(v) = ex.get("threads").as_u64() {
@@ -707,6 +757,12 @@ impl SystemConfig {
                 "prefix.enabled" => set_bool(&mut self.prefix.enabled, v),
                 "prefix.block" => set_u32(&mut self.prefix.block, v),
                 "prefix.cache_frac" => set_f64(&mut self.prefix.cache_frac, v),
+                "chunk.enabled" => set_bool(&mut self.chunk.enabled, v),
+                "chunk.slice_tokens" => {
+                    set_u32(&mut self.chunk.slice_tokens, v)
+                }
+                "chunk.hybrid" => set_bool(&mut self.chunk.hybrid, v),
+                "chunk.interleave" => set_bool(&mut self.chunk.interleave, v),
                 "executor.threads" => set_u32(&mut self.executor.threads, v),
                 "executor.plan_offload" => {
                     set_bool(&mut self.executor.plan_offload, v)
@@ -794,6 +850,12 @@ impl SystemConfig {
                 ("enabled", Json::from(self.prefix.enabled)),
                 ("block", Json::from(self.prefix.block as u64)),
                 ("cache_frac", Json::num(self.prefix.cache_frac)),
+            ])),
+            ("chunk", Json::obj(vec![
+                ("enabled", Json::from(self.chunk.enabled)),
+                ("slice_tokens", Json::from(self.chunk.slice_tokens as u64)),
+                ("hybrid", Json::from(self.chunk.hybrid)),
+                ("interleave", Json::from(self.chunk.interleave)),
             ])),
             ("executor", Json::obj(vec![
                 ("threads", Json::from(self.executor.threads as u64)),
@@ -1116,6 +1178,49 @@ mod tests {
         assert!(c.admission.defer);
         assert_eq!(c.admission.offline_tbt_factor, 8.0);
         assert_eq!(c.admission.max_evictions, 2);
+    }
+
+    #[test]
+    fn chunk_defaults_off_and_overridable() {
+        let c = SystemConfig::default();
+        assert!(!c.chunk.enabled, "chunked prefill must be opt-in");
+        assert!(c.chunk.slice_tokens >= 1);
+        assert!(c.chunk.hybrid && c.chunk.interleave);
+
+        let args = Args::parse(
+            ["--chunk.enabled", "on", "--chunk.slice_tokens", "512",
+             "--chunk.hybrid", "off", "--chunk.interleave", "false"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(c.chunk.enabled);
+        assert_eq!(c.chunk.slice_tokens, 512);
+        assert!(!c.chunk.hybrid);
+        assert!(!c.chunk.interleave);
+
+        // A typo'd boolean must not silently arm the subsystem.
+        let args = Args::parse(
+            ["--chunk.enabled", "yep"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert!(!c.chunk.enabled);
+    }
+
+    #[test]
+    fn chunk_json_block_parses() {
+        let j = Json::parse(
+            r#"{"chunk":{"enabled":true,"slice_tokens":1024}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert!(c.chunk.enabled);
+        assert_eq!(c.chunk.slice_tokens, 1024);
+        // Untouched fields keep defaults.
+        assert!(c.chunk.hybrid);
+        assert!(c.chunk.interleave);
     }
 
     #[test]

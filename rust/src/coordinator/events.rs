@@ -47,6 +47,15 @@ pub enum EventKind {
     Arrival,
     /// Prefill instance `instance` finishes its in-flight batch.
     PrefillDone { instance: usize },
+    /// Chunked prefill: instance `instance` finishes one *slice* of its
+    /// in-flight sliced batch (the final slice emits [`PrefillDone`]
+    /// instead). The handler charges the slice's work, then either
+    /// launches the next slice or yields the slot to urgent online work
+    /// (parking the batch on its owning shard). Only scheduled when
+    /// `chunk.enabled`.
+    ///
+    /// [`PrefillDone`]: EventKind::PrefillDone
+    PrefillSliceEnd { instance: usize },
     /// A KV hand-off becomes consumable on decode instance `decode`
     /// (wake-up for an idle instance; admission itself is state-driven).
     HandoffReady { decode: usize },

@@ -15,6 +15,47 @@ use super::prefix::PrefixStamp;
 use crate::workload::RequestClass;
 use crate::Micros;
 
+/// Progress of a chunked (sliced) prefill batch through its slices.
+/// `None` on [`InFlightPrefill::slice`] means the batch runs
+/// monolithically (chunking off, or it fits in one slice) and every
+/// pre-chunking code path applies unchanged.
+#[derive(Debug, Clone)]
+pub struct SliceState {
+    /// Token positions completed by *previous* slices (the current slice
+    /// covers `[cursor, min(cursor + width, padded_len))`).
+    pub cursor: u32,
+    /// Positions each sequence advances per slice
+    /// (`max(1, slice_tokens / n)`).
+    pub width: u32,
+    /// KV tokens reserved against the target decode instance so far —
+    /// reservation is incremental per slice, so headroom accounting
+    /// tracks KV actually being produced; sums to the batch's full
+    /// footprint exactly by the final slice.
+    pub reserved_so_far: u64,
+    /// Execution time already charged for *completed* slices (busy/
+    /// useful accounting happens per slice; the per-request
+    /// `exec_request_us` charge needs the total at completion).
+    pub exec_us: u64,
+}
+
+/// A sliced prefill batch parked at a slice boundary: the slot was
+/// yielded to urgent online work and the batch waits on its owning shard
+/// to resume from `cursor`. Parked batches hold their KV reservation
+/// (`reserved_so_far`) but no prefill slot, and are not preemption
+/// victims — there is nothing in flight to abort.
+#[derive(Debug, Clone)]
+pub struct ParkedPrefill {
+    pub formed: FormedBatch,
+    pub target_decode: usize,
+    /// Original first-slice start (TTFT/queue-wait accounting anchors
+    /// here across park/resume cycles).
+    pub started_at: Micros,
+    pub cursor: u32,
+    pub width: u32,
+    pub reserved_so_far: u64,
+    pub exec_us: u64,
+}
+
 /// A prefill batch in flight on a prefill instance.
 #[derive(Debug, Clone)]
 pub struct InFlightPrefill {
@@ -24,11 +65,16 @@ pub struct InFlightPrefill {
     /// Decode instance whose KV budget the batch was reserved against.
     pub target_decode: usize,
     /// When the batch started executing (progress/wasted-work accounting
-    /// for the preemption subsystem).
+    /// for the preemption subsystem). For a sliced batch this is the
+    /// original first-slice start; `done_at`/`duration` describe the
+    /// *current* slice.
     pub started_at: Micros,
     /// The scheduled `PrefillDone` completion event — tombstoned when the
-    /// batch is aborted mid-flight.
+    /// batch is aborted mid-flight. For a sliced batch this is the
+    /// current slice's `PrefillSliceEnd` (or the final `PrefillDone`).
     pub done_event: EventId,
+    /// Chunked-prefill progress; `None` = monolithic batch.
+    pub slice: Option<SliceState>,
 }
 
 /// The prefill side: per-instance busy slots.
@@ -243,6 +289,7 @@ mod tests {
             target_decode: target,
             started_at: 0,
             done_event: EventId::NONE,
+            slice: None,
         }
     }
 

@@ -399,6 +399,7 @@ mod tests {
             target_decode: 0,
             started_at,
             done_event: crate::coordinator::events::EventId::NONE,
+            slice: None,
         }
     }
 

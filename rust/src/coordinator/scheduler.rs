@@ -33,7 +33,10 @@ use super::executor::{
     self, BoundaryJob, BoundaryOutcome, ExecutorPool, PlanJob, PlanProposal,
     SyncKey,
 };
-use super::fleet::{DecodeFleet, DecodeSeqState, InFlightPrefill, PrefillFleet};
+use super::fleet::{
+    DecodeFleet, DecodeSeqState, InFlightPrefill, ParkedPrefill, PrefillFleet,
+    SliceState,
+};
 use super::live::{HealthInfo, InstanceLoad, LiveCmd, LiveState, LoadsInfo};
 use super::monitor::GlobalMonitor;
 use super::preempt::PreemptionEngine;
@@ -41,7 +44,7 @@ use super::prefix::{PrefixCache, PrefixStamp};
 use super::priority::PriorityScorer;
 use super::shard::ShardSet;
 use crate::cluster::{DecodeBatch, DecodeSeq, Engine, PrefillBatch, PrefillItem};
-use crate::config::{Placement, SystemConfig};
+use crate::config::{ChunkSpec, Placement, SystemConfig};
 use crate::workload::request::Completion;
 use crate::workload::{Request, RequestClass, Trace};
 use crate::workload::RequestId;
@@ -601,6 +604,28 @@ pub struct RunReport {
     /// Cache-resident KV tokens still held at run end (cache-charged, so
     /// the deduplicated per-request books balance against them).
     pub prefix_resident_tokens: u64,
+    /// Whether the chunked-prefill subsystem was armed for this run
+    /// (gates the Summary JSON block so disabled output stays
+    /// byte-identical).
+    pub chunk_enabled: bool,
+    /// Prefill batches that executed as a sequence of slices (padded
+    /// length spanned at least two slice widths).
+    pub chunk_sliced_batches: u64,
+    /// Prefill slices executed, final slices included — each is one
+    /// kernel launch paying one step overhead.
+    pub chunk_slices: u64,
+    /// Slice boundaries at which an in-flight sliced batch parked its
+    /// remainder (freeing the prefill slot) because urgent online work
+    /// was queued — the interleaving the subsystem exists for.
+    pub chunk_yields: u64,
+    /// Decode iterations priced as hybrid batches: the weight read was
+    /// shared with a co-resident prefill slice targeting the same
+    /// instance, so only the KV-stream term was charged.
+    pub chunk_hybrid_iters: u64,
+    /// Largest token volume (batch width × slice span) any single
+    /// executed slice carried — the bound `chunk.slice_tokens` is
+    /// meant to enforce, surfaced so tests can check it.
+    pub chunk_max_slice_tokens: u64,
     /// Resolved executor worker count (1 = the sequential serving loop).
     /// Executor counters live on the `RunReport` only — they are
     /// deliberately kept *out* of Summary JSON so the determinism
@@ -985,6 +1010,7 @@ impl PdScheduler {
                 preempt_enabled: self.cfg.preempt.enabled,
                 admission_enabled: admission_active,
                 prefix_enabled: self.cfg.prefix.enabled,
+                chunk_enabled: self.cfg.chunk.enabled,
                 executor_threads: if parallel { n_workers } else { 1 },
                 ..Default::default()
             },
@@ -1007,6 +1033,7 @@ impl PdScheduler {
             prefix_affinity: self.cfg.sharding.placement
                 == Placement::PrefixAffinity,
             live: None,
+            chunk: self.cfg.chunk.clone(),
         };
         if core.total > 0 {
             core.events.push(trace.requests[0].arrival, EventKind::Arrival);
@@ -1185,6 +1212,7 @@ impl PdScheduler {
                 preempt_enabled: self.cfg.preempt.enabled,
                 admission_enabled: admission_active,
                 prefix_enabled: self.cfg.prefix.enabled,
+                chunk_enabled: self.cfg.chunk.enabled,
                 executor_threads: 1,
                 realtime_enabled: true,
                 ..Default::default()
@@ -1210,6 +1238,7 @@ impl PdScheduler {
             prefix_affinity: self.cfg.sharding.placement
                 == Placement::PrefixAffinity,
             live: Some(LiveState::new(self.cfg.slo.clone())),
+            chunk: self.cfg.chunk.clone(),
         };
 
         let empty = Trace { requests: Vec::new() };
@@ -1435,6 +1464,10 @@ struct RunCore<'a> {
     /// short-circuits every live path to a single branch — trace runs
     /// stay byte-identical.
     live: Option<LiveState>,
+    /// Chunked-prefill knobs (`chunk.enabled` is the master switch;
+    /// false short-circuits every slicing path to a single branch — the
+    /// disabled byte-identity contract).
+    chunk: ChunkSpec,
 }
 
 impl<'a> RunCore<'a> {
@@ -1478,6 +1511,9 @@ impl<'a> RunCore<'a> {
         match ev.kind {
             EventKind::Arrival => self.on_arrival(trace),
             EventKind::PrefillDone { instance } => self.on_prefill_done(instance),
+            EventKind::PrefillSliceEnd { instance } => {
+                self.on_prefill_slice_end(instance)
+            }
             EventKind::DecodeIterEnd { decode } => {
                 // Sequential boundary: the same pure computation the
                 // executor's workers run, called inline — one pipeline,
@@ -1649,12 +1685,27 @@ impl<'a> RunCore<'a> {
         };
         self.report.prefill_batches += 1;
         self.report.peak_batch = self.report.peak_batch.max(p.formed.batch.n());
+        // For a sliced batch, `duration` is the *final* slice only —
+        // earlier slices charged busy/useful at their own boundaries
+        // ([`RunCore::on_prefill_slice_end`]); only the per-request
+        // execution charge spans the whole slice sequence.
         self.report.prefill_busy_us += p.duration;
         self.report.prefill_useful_us +=
             p.duration as f64 * p.formed.batch.efficiency();
+        let exec_us = match &p.slice {
+            Some(s) => s.exec_us + p.duration,
+            None => p.duration,
+        };
         self.report.prefill_exec_request_us +=
-            p.duration * p.formed.batch.n() as u64;
+            exec_us * p.formed.batch.n() as u64;
         self.monitor.on_batch_done(p.duration);
+        // When this batch left the queue: a sliced batch's final
+        // `done_at − duration` is mid-execution (and excludes parked
+        // time), so it uses the recorded first-slice start instead.
+        let dispatched_at = match &p.slice {
+            Some(_) => p.started_at,
+            None => p.done_at.saturating_sub(p.duration),
+        };
         let transfer = self.engine.kv_transfer(p.formed.batch.useful_tokens());
         let mut entered = 0usize;
         for r in &p.formed.reqs {
@@ -1705,10 +1756,8 @@ impl<'a> RunCore<'a> {
                     }
                 }
                 None => {
-                    self.report.queue_wait_us += p
-                        .done_at
-                        .saturating_sub(p.duration)
-                        .saturating_sub(r.arrival);
+                    self.report.queue_wait_us +=
+                        dispatched_at.saturating_sub(r.arrival);
                     DecodeSeqState {
                         id: r.id,
                         class: r.class,
@@ -1762,6 +1811,175 @@ impl<'a> RunCore<'a> {
             entered += 1;
         }
         self.monitor.on_decode_enter(entered);
+    }
+
+    /// Slice width (positions per sequence per slice) for a formed
+    /// batch, or `None` when the batch executes monolithically:
+    /// chunking off, or the padded length already fits in one slice.
+    /// Width is `max(1, slice_tokens / n)` so a slice's token volume
+    /// (width × n) stays within `chunk.slice_tokens` whenever the
+    /// batch itself is narrower than the slice budget.
+    fn slice_width(&self, formed: &FormedBatch) -> Option<u32> {
+        if !self.chunk.enabled {
+            return None;
+        }
+        let n = formed.batch.n().max(1) as u32;
+        let width = (self.chunk.slice_tokens / n).max(1);
+        (formed.batch.padded_len > width).then_some(width)
+    }
+
+    /// Launch one slice of a sliced prefill batch on instance `pi`:
+    /// reserve the slice's incremental KV share, price the `[from, to)`
+    /// position range through the engine, schedule its boundary event
+    /// (`PrefillSliceEnd`, or the final `PrefillDone` when the slice
+    /// reaches the padded length), and occupy the slot. Shared by the
+    /// initial sliced dispatch, the slice-to-slice continuation, and
+    /// the parked-batch resume, so the three paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    fn launch_slice(
+        &mut self,
+        pi: usize,
+        formed: FormedBatch,
+        target_decode: usize,
+        started_at: Micros,
+        cursor: u32,
+        width: u32,
+        reserved_so_far: u64,
+        exec_us: u64,
+    ) {
+        let padded = formed.batch.padded_len.max(1);
+        let from = cursor;
+        let to = (cursor + width).min(padded);
+        // Incremental KV reservation: the progress-proportional share
+        // of the batch's full footprint covered by [0, to), minus what
+        // previous slices already hold. The shares telescope to the
+        // exact footprint at the final slice (to == padded), so
+        // headroom accounting tracks the KV the slices have actually
+        // produced instead of charging the whole batch up front.
+        let total: u64 = formed.reqs.iter().map(QueuedReq::footprint).sum();
+        let covered =
+            (total as u128 * to as u128 / padded as u128) as u64;
+        let inc = covered.saturating_sub(reserved_so_far);
+        let si = self.shards.owner_of(target_decode);
+        self.decode.get_mut(target_decode).reserved_tokens += inc;
+        self.monitor.kv_reserve(si, inc);
+        let duration = self
+            .engine
+            .prefill_slice(&formed.batch, from, to)
+            .expect("prefill slice execution failed");
+        let done_at = if self.realtime {
+            self.wall_start.elapsed().as_micros() as Micros
+        } else {
+            self.clock + duration
+        };
+        let kind = if to >= padded {
+            EventKind::PrefillDone { instance: pi }
+        } else {
+            EventKind::PrefillSliceEnd { instance: pi }
+        };
+        let done_event = self.events.push_owned(done_at, kind, si);
+        self.report.chunk_slices += 1;
+        self.report.chunk_max_slice_tokens = self
+            .report
+            .chunk_max_slice_tokens
+            .max((to - from) as u64 * formed.batch.n() as u64);
+        self.prefill.dispatch(
+            pi,
+            InFlightPrefill {
+                formed,
+                done_at,
+                duration,
+                target_decode,
+                started_at,
+                done_event,
+                slice: Some(SliceState {
+                    cursor,
+                    width,
+                    reserved_so_far: reserved_so_far + inc,
+                    exec_us,
+                }),
+            },
+        );
+    }
+
+    /// A sliced prefill finished one non-final slice: charge the
+    /// completed slice's execution (at the same rates the monolithic
+    /// path charges at completion, so an abort after N slices wastes
+    /// only the partial slice it interrupts), advance the resume
+    /// cursor, then either continue with the next slice immediately
+    /// or — when urgent online work is queued and `chunk.interleave`
+    /// is on — park the remainder on the owning shard and free the
+    /// slot so that work can prefill first.
+    fn on_prefill_slice_end(&mut self, pi: usize) {
+        let Some(mut p) = self.prefill.take_done(pi, self.clock) else {
+            return; // stale: the batch was aborted in this same instant
+        };
+        let Some(mut slice) = p.slice.take() else {
+            // Unreachable by construction (only launch_slice schedules
+            // this event, and aborts tombstone it); reinstall rather
+            // than corrupt the slot if it ever fires anyway.
+            self.prefill.dispatch(pi, p);
+            return;
+        };
+        self.report.prefill_busy_us += p.duration;
+        self.report.prefill_useful_us +=
+            p.duration as f64 * p.formed.batch.efficiency();
+        self.monitor.on_batch_done(p.duration);
+        slice.exec_us += p.duration;
+        slice.cursor =
+            (slice.cursor + slice.width).min(p.formed.batch.padded_len);
+        // Interleave gate: park (freeing the slot) only when some shard
+        // actually has online work queued — the urgency this subsystem
+        // protects. Otherwise continue immediately; the slot has
+        // nothing better to do. The peek is guarded by `chunk.enabled`
+        // (we are inside a slice), so disabled runs never touch it.
+        let urgent = self.chunk.interleave
+            && (0..self.shards.n()).any(|si| {
+                self.shards.get_mut(si).planner.oldest_online().is_some()
+            });
+        if urgent {
+            self.report.chunk_yields += 1;
+            let si = self.shards.owner_of(p.target_decode);
+            self.shards.get_mut(si).parked.push(ParkedPrefill {
+                formed: p.formed,
+                target_decode: p.target_decode,
+                started_at: p.started_at,
+                cursor: slice.cursor,
+                width: slice.width,
+                reserved_so_far: slice.reserved_so_far,
+                exec_us: slice.exec_us,
+            });
+            return;
+        }
+        self.launch_slice(
+            pi,
+            p.formed,
+            p.target_decode,
+            p.started_at,
+            slice.cursor,
+            slice.width,
+            slice.reserved_so_far,
+            slice.exec_us,
+        );
+    }
+
+    /// Resume the oldest parked sliced batch of shard `si` on idle
+    /// prefill instance `pi`. Deliberately bypasses admission, prefix
+    /// acquisition, preemption bookkeeping, and the dispatch counters —
+    /// all of those were charged at the batch's original dispatch; a
+    /// resume is the continuation of that same batch, not a new one.
+    fn resume_parked(&mut self, pi: usize, si: usize) {
+        let pk = self.shards.get_mut(si).parked.remove(0);
+        self.launch_slice(
+            pi,
+            pk.formed,
+            pk.target_decode,
+            pk.started_at,
+            pk.cursor,
+            pk.width,
+            pk.reserved_so_far,
+            pk.exec_us,
+        );
     }
 
     /// Capture stage of a decode-iteration boundary: snapshot instance
@@ -1997,8 +2215,17 @@ impl<'a> RunCore<'a> {
                 .pick_prefill_victim(&cand, &running, self.clock)
                 .map(|pi| {
                     let p = running.iter().find(|(i, _)| *i == pi).unwrap().1;
-                    let freed: u64 =
-                        p.formed.reqs.iter().map(QueuedReq::footprint).sum();
+                    // A sliced victim only holds its incremental
+                    // reservation so far, not the full footprint.
+                    let freed: u64 = match &p.slice {
+                        Some(s) => s.reserved_so_far,
+                        None => p
+                            .formed
+                            .reqs
+                            .iter()
+                            .map(QueuedReq::footprint)
+                            .sum(),
+                    };
                     (pi, p.target_decode, freed)
                 })
         } else {
@@ -2123,23 +2350,53 @@ impl<'a> RunCore<'a> {
             return; // the batch completed in this same instant
         };
         self.events.cancel(p.done_event);
-        let elapsed = self.clock.saturating_sub(p.started_at).min(p.duration);
+        // Elapsed GPU time being discarded: for a sliced batch the
+        // current slice began at `done_at − duration` (earlier slices
+        // charged busy at their own boundaries, and `started_at` is the
+        // original first-slice start, which spans parked time); for a
+        // monolithic batch it is time since dispatch.
+        let elapsed = match &p.slice {
+            Some(_) => self
+                .clock
+                .saturating_sub(p.done_at.saturating_sub(p.duration))
+                .min(p.duration),
+            None => self.clock.saturating_sub(p.started_at).min(p.duration),
+        };
         self.report.prefill_busy_us += elapsed;
-        self.report.wasted_prefill_us += elapsed;
-        self.report.wasted_prefill_tokens += (p.formed.batch.padded_tokens()
-            as u128
-            * elapsed as u128
-            / p.duration.max(1) as u128) as u64;
+        // Waste: a monolithic abort discards the FLOP-proportional share
+        // of its padded tokens; a sliced abort additionally discards
+        // every *completed* slice (their busy time was already charged,
+        // but their output dies with the batch).
+        let (wasted_us, wasted_tokens) = match &p.slice {
+            Some(s) => {
+                let span = (s.cursor + s.width).min(p.formed.batch.padded_len)
+                    - s.cursor;
+                let n = p.formed.batch.n() as u128;
+                (
+                    s.exec_us + elapsed,
+                    (n * s.cursor as u128
+                        + n * span as u128 * elapsed as u128
+                            / p.duration.max(1) as u128)
+                        as u64,
+                )
+            }
+            None => (
+                elapsed,
+                (p.formed.batch.padded_tokens() as u128 * elapsed as u128
+                    / p.duration.max(1) as u128) as u64,
+            ),
+        };
+        self.report.wasted_prefill_us += wasted_us;
+        self.report.wasted_prefill_tokens += wasted_tokens;
         self.report.prefill_aborts += 1;
         // Release the deduplicated reservations dispatch charged; the
         // blocks the dispatch *inserted* stay resident on the cache's own
-        // books (still useful to whoever re-dispatches).
-        let footprint: u64 = p
-            .formed
-            .reqs
-            .iter()
-            .map(QueuedReq::footprint)
-            .sum();
+        // books (still useful to whoever re-dispatches). A sliced victim
+        // releases only what its slices reserved so far.
+        let footprint: u64 = match &p.slice {
+            Some(s) => s.reserved_so_far,
+            None => p.formed.reqs.iter().map(QueuedReq::footprint).sum(),
+        };
         let si = self.shards.owner_of(p.target_decode);
         let d = self.decode.get_mut(p.target_decode);
         d.reserved_tokens = d.reserved_tokens.saturating_sub(footprint);
@@ -2337,7 +2594,10 @@ impl<'a> RunCore<'a> {
                 return false;
             }
         }
-        (0..self.shards.n()).all(|si| self.shards.get(si).planner.queued() == 0)
+        (0..self.shards.n()).all(|si| {
+            let sh = self.shards.get(si);
+            sh.planner.queued() == 0 && sh.parked.is_empty()
+        })
     }
 
     /// The admission layer's trigger (b), run at `di`'s iteration
@@ -2646,6 +2906,34 @@ impl<'a> RunCore<'a> {
             if !self.prefill.is_idle(pi) {
                 continue;
             }
+            // Chunked prefill: a parked sliced batch resumes ahead of
+            // new planning once no shard has online work queued (the
+            // symmetric condition of the yield that parked it) — it is
+            // older than anything still waiting. Both peeks are guarded
+            // by `chunk.enabled`, so disabled runs pay one branch.
+            if self.chunk.enabled {
+                let parked_somewhere = (0..self.shards.n())
+                    .any(|si| !self.shards.get(si).parked.is_empty());
+                let online_somewhere = parked_somewhere
+                    && (0..self.shards.n()).any(|si| {
+                        self.shards.get_mut(si).planner.oldest_online().is_some()
+                    });
+                if parked_somewhere && !online_somewhere {
+                    let si = order
+                        .iter()
+                        .map(|&(si, _, _)| si)
+                        .find(|&si| !self.shards.get(si).parked.is_empty())
+                        .expect("parked shard missing from dispatch order");
+                    self.resume_parked(pi, si);
+                    self.shards.repair_dispatch_order(
+                        &mut order,
+                        si,
+                        &self.decode,
+                        self.per_decode_budget,
+                    );
+                    continue;
+                }
+            }
             // A prefill abort promised its slot to the preempting
             // candidate's shard; honor that before the headroom order —
             // as an iteration adapter (boosted entry first, then the
@@ -2703,6 +2991,28 @@ impl<'a> RunCore<'a> {
                 }
                 chosen = Some((si, ti, f));
                 break;
+            }
+            if chosen.is_none() && self.chunk.enabled {
+                // Nothing new formed (empty queues, exhausted headroom,
+                // or every shard deferred): resume a parked sliced
+                // batch even with online work still queued — a parked
+                // batch must never be able to stall the run, and the
+                // work it yielded to provably cannot dispatch right
+                // now anyway.
+                let parked = order
+                    .iter()
+                    .map(|&(si, _, _)| si)
+                    .find(|&si| !self.shards.get(si).parked.is_empty());
+                if let Some(si) = parked {
+                    self.resume_parked(pi, si);
+                    self.shards.repair_dispatch_order(
+                        &mut order,
+                        si,
+                        &self.decode,
+                        self.per_decode_budget,
+                    );
+                    continue;
+                }
             }
             if chosen.is_none() {
                 // Deadlock breaker: nothing anywhere in flight and a head
@@ -2790,42 +3100,55 @@ impl<'a> RunCore<'a> {
                     formed.batch = PrefillBatch { items, padded_len };
                 }
             }
-            let footprint: u64 = formed
-                .reqs
-                .iter()
-                .map(QueuedReq::footprint)
-                .sum();
-            self.decode.get_mut(ti).reserved_tokens += footprint;
-            self.monitor.kv_reserve(si, footprint);
-            self.monitor.on_prefill_dispatch(si, formed.reqs.len());
-            self.shards.get_mut(si).stats.batches += 1;
-            let duration = self
-                .engine
-                .prefill(&formed.batch)
-                .expect("prefill execution failed");
-            // Realtime engines block inside prefill(): completion is
-            // "now" on the wall clock. Virtual engines schedule ahead.
-            let done_at = if self.realtime {
-                self.wall_start.elapsed().as_micros() as Micros
+            if let Some(width) = self.slice_width(&formed) {
+                // Chunked path: no up-front footprint reservation —
+                // `launch_slice` reserves each slice's progress share
+                // as it executes, so headroom reflects KV actually
+                // produced. Dispatch-time bookkeeping still happens
+                // exactly once, here.
+                self.monitor.on_prefill_dispatch(si, formed.reqs.len());
+                self.shards.get_mut(si).stats.batches += 1;
+                self.report.chunk_sliced_batches += 1;
+                self.launch_slice(pi, formed, ti, self.clock, 0, width, 0, 0);
             } else {
-                self.clock + duration
-            };
-            let done_event = self.events.push_owned(
-                done_at,
-                EventKind::PrefillDone { instance: pi },
-                si,
-            );
-            self.prefill.dispatch(
-                pi,
-                InFlightPrefill {
-                    formed,
+                let footprint: u64 = formed
+                    .reqs
+                    .iter()
+                    .map(QueuedReq::footprint)
+                    .sum();
+                self.decode.get_mut(ti).reserved_tokens += footprint;
+                self.monitor.kv_reserve(si, footprint);
+                self.monitor.on_prefill_dispatch(si, formed.reqs.len());
+                self.shards.get_mut(si).stats.batches += 1;
+                let duration = self
+                    .engine
+                    .prefill(&formed.batch)
+                    .expect("prefill execution failed");
+                // Realtime engines block inside prefill(): completion is
+                // "now" on the wall clock. Virtual engines schedule ahead.
+                let done_at = if self.realtime {
+                    self.wall_start.elapsed().as_micros() as Micros
+                } else {
+                    self.clock + duration
+                };
+                let done_event = self.events.push_owned(
                     done_at,
-                    duration,
-                    target_decode: ti,
-                    started_at: self.clock,
-                    done_event,
-                },
-            );
+                    EventKind::PrefillDone { instance: pi },
+                    si,
+                );
+                self.prefill.dispatch(
+                    pi,
+                    InFlightPrefill {
+                        formed,
+                        done_at,
+                        duration,
+                        target_decode: ti,
+                        started_at: self.clock,
+                        done_event,
+                        slice: None,
+                    },
+                );
+            }
             // Commit bookkeeping. Any proposal still held for this shard
             // speculated over a queue that just changed — drop it
             // outright (commit-time validation alone could miss a
@@ -2866,10 +3189,27 @@ impl<'a> RunCore<'a> {
                     })
                     .collect(),
             };
-            let duration = self
-                .engine
-                .decode_step(&batch)
-                .expect("decode execution failed");
+            // Hybrid-batch pricing: while a prefill *slice* targeting
+            // this instance is in flight, the decode iteration
+            // piggybacks on its weight read — the engine charges only
+            // the KV-stream term. Monolithic prefills never qualify:
+            // without slice boundaries there is no co-scheduling seam.
+            let hybrid = self.chunk.enabled
+                && self.chunk.hybrid
+                && (0..self.prefill.n()).any(|pi| {
+                    self.prefill.get(pi).is_some_and(|p| {
+                        p.slice.is_some() && p.target_decode == di
+                    })
+                });
+            if hybrid {
+                self.report.chunk_hybrid_iters += 1;
+            }
+            let duration = if hybrid {
+                self.engine.hybrid_decode_step(&batch)
+            } else {
+                self.engine.decode_step(&batch)
+            }
+            .expect("decode execution failed");
             let end = if self.realtime {
                 self.wall_start.elapsed().as_micros() as Micros
             } else {
@@ -3709,6 +4049,140 @@ mod tests {
             "suffix-only prefill {} must undercut full prefill {}",
             on.prefill_busy_us,
             off.prefill_busy_us
+        );
+    }
+
+    #[test]
+    fn chunk_disabled_is_inert_and_enabled_bounds_slice_length() {
+        // Off by default: zero counters, flag off, and aggressive knobs
+        // behind the master switch change nothing. Armed: every request
+        // still completes exactly once, long prompts actually slice,
+        // and no executed slice ever exceeds the configured token
+        // budget.
+        let mut cfg = small_cfg();
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 30, 8.0, Dataset::LongBench, 20,
+            cfg.model.max_seq, 45,
+        );
+        let off = run_bucketserve(&cfg, &trace);
+        assert!(!off.chunk_enabled);
+        assert_eq!(off.chunk_sliced_batches, 0);
+        assert_eq!(off.chunk_slices, 0);
+        assert_eq!(off.chunk_yields, 0);
+        assert_eq!(off.chunk_hybrid_iters, 0);
+        assert_eq!(off.chunk_max_slice_tokens, 0);
+        cfg.chunk.slice_tokens = 64;
+        cfg.chunk.hybrid = false;
+        cfg.chunk.interleave = false;
+        let knobs = run_bucketserve(&cfg, &trace);
+        assert_eq!(off.makespan_us, knobs.makespan_us);
+        assert_eq!(off.prefill_batches, knobs.prefill_batches);
+        assert_eq!(off.decode_iters, knobs.decode_iters);
+        assert_eq!(off.prefill_busy_us, knobs.prefill_busy_us);
+        assert_eq!(knobs.chunk_slices, 0);
+
+        cfg.chunk = ChunkSpec { enabled: true, ..ChunkSpec::default() };
+        cfg.chunk.slice_tokens = 512;
+        let on = run_bucketserve(&cfg, &trace);
+        assert_eq!(on.completions.len(), trace.len());
+        assert!(on.error.is_none(), "{:?}", on.error);
+        let mut ids: Vec<_> = on.completions.iter().map(|c| c.id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "exactly-once completion");
+        assert!(on.chunk_enabled);
+        assert!(
+            on.chunk_sliced_batches > 0,
+            "LongBench prompts must span multiple 512-token slices"
+        );
+        // A sliced batch has ≥ 2 slices by definition.
+        assert!(on.chunk_slices >= 2 * on.chunk_sliced_batches);
+        assert!(
+            on.chunk_max_slice_tokens <= 512,
+            "slice bound violated: {} > 512 tokens",
+            on.chunk_max_slice_tokens
+        );
+    }
+
+    #[test]
+    fn chunking_protects_ttft_without_abort_waste() {
+        // The subsystem's acceptance scenario, sharing the preemption
+        // test's overload (same trace, seed, and TTFT budget): a
+        // LongBench offline backlog holds the single prefill instance
+        // for seconds while an online Alpaca stream arrives on top.
+        // Preemption rescues online TTFT by aborting offline waves —
+        // paying their burned FLOPs as waste. Chunking slices the waves
+        // instead: online work interleaves at slice boundaries, so the
+        // same protection costs zero discarded prefill work.
+        let mut cfg = small_cfg();
+        cfg.slo.ttft_us = 2_000_000;
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 40, 4.0, Dataset::LongBench, 40,
+            cfg.model.max_seq, 51,
+        );
+        let base = run_bucketserve(&cfg, &trace);
+        cfg.preempt.enabled = true;
+        cfg.preempt.urgency_threshold = 0.6;
+        let pre = run_bucketserve(&cfg, &trace);
+        cfg.preempt.enabled = false;
+        cfg.chunk.enabled = true;
+        cfg.chunk.slice_tokens = 512;
+        let chunk = run_bucketserve(&cfg, &trace);
+
+        // Conservation in all three schedules, aborted/parked work
+        // included.
+        for r in [&base, &pre, &chunk] {
+            assert_eq!(r.completions.len(), trace.len());
+            assert!(r.error.is_none(), "{:?}", r.error);
+            let mut ids: Vec<_> = r.completions.iter().map(|c| c.id).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), trace.len(), "exactly-once completion");
+        }
+        // The scenario must actually exercise both mechanisms.
+        assert!(chunk.chunk_sliced_batches > 0, "waves must slice");
+        assert!(
+            chunk.chunk_yields > 0,
+            "online arrivals must interleave at slice boundaries"
+        );
+        assert!(
+            pre.prefill_aborts + pre.decode_evictions > 0,
+            "the preemption arm must fire under this overload"
+        );
+
+        let attain = |r: &RunReport| {
+            r.slo_attainment_class(
+                RequestClass::Online, cfg.slo.ttft_us, cfg.slo.tbt_us,
+            )
+        };
+        // Chunking must protect online TTFT at least as well as
+        // abort-and-requeue…
+        let (ac, ap, ab) = (attain(&chunk), attain(&pre), attain(&base));
+        assert!(
+            ac >= ap,
+            "chunk online attainment {ac} < preemption's {ap}"
+        );
+        assert!(
+            ac > ab,
+            "chunking must strictly rescue attainment: {ac} vs base {ab}"
+        );
+        let tb = base.mean_ttft_class_us(RequestClass::Online);
+        let tc = chunk.mean_ttft_class_us(RequestClass::Online);
+        assert!(
+            tc < tb,
+            "chunk mean online TTFT {tc}µs not better than base {tb}µs"
+        );
+        // …at zero wasted prefill work, where preemption pays real
+        // waste for the same protection.
+        assert_eq!(chunk.prefill_aborts, 0);
+        assert_eq!(chunk.wasted_prefill_us, 0);
+        assert_eq!(chunk.wasted_prefill_tokens, 0);
+        assert!(
+            pre.wasted_prefill_tokens + pre.recompute_tokens > 0,
+            "preemption's protection is paid in discarded or replayed \
+             FLOPs here (aborts={}, evictions={})",
+            pre.prefill_aborts,
+            pre.decode_evictions
         );
     }
 

@@ -37,7 +37,7 @@
 //! state of their own.
 
 use super::balance::{self, Router, ShardLoad};
-use super::fleet::DecodeFleet;
+use super::fleet::{DecodeFleet, ParkedPrefill};
 use super::scheduler::PrefillPlanner;
 use crate::config::{Placement, ShardingSpec};
 use crate::workload::RequestId;
@@ -62,6 +62,10 @@ pub struct SchedulerShard {
     /// Decode instances this shard targets (stride partition of the
     /// fleet: instance `d` belongs to shard `d % n_shards`).
     pub owned: Vec<usize>,
+    /// Sliced prefill batches that yielded their slot at a slice
+    /// boundary (chunked prefill only; always empty otherwise). FIFO:
+    /// dispatch resumes the oldest parked batch first.
+    pub parked: Vec<ParkedPrefill>,
     pub stats: ShardStats,
 }
 
@@ -95,6 +99,7 @@ impl ShardSet {
             .map(|i| SchedulerShard {
                 planner: factory(),
                 owned: (0..n_decode).filter(|d| d % n == i).collect(),
+                parked: Vec::new(),
                 stats: ShardStats::default(),
             })
             .collect();

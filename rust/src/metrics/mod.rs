@@ -30,6 +30,9 @@
 //!   `prefix_misses`/`prefix_hit_tokens`, `prefix_evictions` +
 //!   `prefix_evicted_tokens`, `prefix_resident_tokens`) — only when
 //!   `prefix.enabled`.
+//! * the chunked-prefill block (`chunk_sliced_batches`, `chunk_slices`,
+//!   `chunk_yields`, `chunk_hybrid_iters`, `chunk_max_slice_tokens`) —
+//!   only when `chunk.enabled`.
 //! * the realtime block (`client_aborts`, `stream_drops`) — only for
 //!   runs driven by the realtime serving path
 //!   ([`crate::coordinator::PdScheduler::run_realtime`]); virtual-time
@@ -137,6 +140,19 @@ pub struct Summary {
     pub prefix_evicted_tokens: u64,
     /// Cache-resident KV tokens at run end.
     pub prefix_resident_tokens: u64,
+    /// Whether the chunked-prefill subsystem was armed (gates the chunk
+    /// JSON block so disabled runs stay byte-identical to legacy output).
+    pub chunk_enabled: bool,
+    /// Prefill batches executed as a sequence of slices.
+    pub chunk_sliced_batches: u64,
+    /// Prefill slices launched (each its own kernel, each one event).
+    pub chunk_slices: u64,
+    /// Slice boundaries where the batch parked to let online work run.
+    pub chunk_yields: u64,
+    /// Decode iterations priced as hybrid (co-resident with a slice).
+    pub chunk_hybrid_iters: u64,
+    /// Largest per-slice token volume (batch width × slice span).
+    pub chunk_max_slice_tokens: u64,
     /// Whether the run was driven by the realtime serving path (gates
     /// the realtime JSON block so replay runs stay byte-identical).
     pub realtime_enabled: bool,
@@ -250,6 +266,12 @@ impl Summary {
             prefix_evictions: r.prefix_evictions,
             prefix_evicted_tokens: r.prefix_evicted_tokens,
             prefix_resident_tokens: r.prefix_resident_tokens,
+            chunk_enabled: r.chunk_enabled,
+            chunk_sliced_batches: r.chunk_sliced_batches,
+            chunk_slices: r.chunk_slices,
+            chunk_yields: r.chunk_yields,
+            chunk_hybrid_iters: r.chunk_hybrid_iters,
+            chunk_max_slice_tokens: r.chunk_max_slice_tokens,
             realtime_enabled: r.realtime_enabled,
             client_aborts: r.client_aborts,
             stream_drops: r.stream_drops,
@@ -381,6 +403,25 @@ impl Summary {
             fields.push((
                 "prefix_resident_tokens",
                 Json::from(self.prefix_resident_tokens),
+            ));
+        }
+        // Chunked-prefill block only when the subsystem is armed: a
+        // default (chunk disabled) run's Summary JSON stays byte-identical
+        // to the pre-chunking scheduler's output.
+        if self.chunk_enabled {
+            fields.push((
+                "chunk_sliced_batches",
+                Json::from(self.chunk_sliced_batches),
+            ));
+            fields.push(("chunk_slices", Json::from(self.chunk_slices)));
+            fields.push(("chunk_yields", Json::from(self.chunk_yields)));
+            fields.push((
+                "chunk_hybrid_iters",
+                Json::from(self.chunk_hybrid_iters),
+            ));
+            fields.push((
+                "chunk_max_slice_tokens",
+                Json::from(self.chunk_max_slice_tokens),
             ));
         }
         // Realtime block only for runs driven by the live serving path:
@@ -560,6 +601,46 @@ mod tests {
         let hits = parsed.get("prefix_hits").as_u64().unwrap();
         assert!(hits > 0, "multi-turn sessions must hit the cache");
         assert!(s.prefix_hit_rate() > 0.0 && s.prefix_hit_rate() <= 1.0);
+    }
+
+    #[test]
+    fn chunk_block_only_when_enabled() {
+        let cfg = SystemConfig::default();
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 10, 6.0, Dataset::LongBench, 10, 4096, 19,
+        );
+        // Default config: chunking off → no chunk keys in the JSON, even
+        // on a trace with prompts well past any slice size.
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(!r.chunk_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let j = s.to_json();
+        assert!(j.get("chunk_sliced_batches").is_null());
+        assert!(j.get("chunk_slices").is_null());
+        assert!(j.get("chunk_yields").is_null());
+        assert!(j.get("chunk_hybrid_iters").is_null());
+        assert!(j.get("chunk_max_slice_tokens").is_null());
+        // Enabled run: the block appears (zeros included — "armed but
+        // never sliced" is a result worth reporting) and parses back,
+        // and on LongBench prompts the slicer actually fires.
+        let mut cfg = SystemConfig::default();
+        cfg.chunk.enabled = true;
+        cfg.chunk.slice_tokens = 512;
+        let r = System::BucketServe.run_sim(&cfg, &trace);
+        assert!(r.chunk_enabled);
+        let s = Summary::from_report("BucketServe", &r, &cfg.slo);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert!(!parsed.get("chunk_sliced_batches").is_null());
+        assert!(!parsed.get("chunk_yields").is_null());
+        assert!(!parsed.get("chunk_hybrid_iters").is_null());
+        let sliced = parsed.get("chunk_sliced_batches").as_u64().unwrap();
+        let slices = parsed.get("chunk_slices").as_u64().unwrap();
+        assert!(sliced > 0, "LongBench prompts must trigger slicing");
+        assert!(slices >= 2 * sliced, "a sliced batch has >= 2 slices");
+        assert!(
+            parsed.get("chunk_max_slice_tokens").as_u64().unwrap() <= 512,
+            "slice volume bounded by chunk.slice_tokens"
+        );
     }
 
     #[test]

@@ -135,7 +135,11 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
     // (the default) no cache is built, no stamp ever carries nonzero
     // cached/shared tokens, and no prefix key appears in the JSON — even
     // under the `prefix_affinity` placement (which falls back to
-    // join-shortest-KV) and aggressive block/frac knobs. bucket_overhead_ns
+    // join-shortest-KV) and aggressive block/frac knobs. Chunked prefill
+    // joins last: with `chunk.enabled = false` (the default) the slicer
+    // never fires, no batch parks, no decode iteration is hybrid-priced,
+    // and no chunk key appears in the JSON, however aggressive the
+    // slice/hybrid/interleave knobs behind the switch. bucket_overhead_ns
     // is the one wall-clock (hence nondeterministic) field and is
     // normalized before comparison; everything else (makespans, per-class
     // SLOs, counts) is virtual-time deterministic.
@@ -172,6 +176,13 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 && !baseline.contains("prefix_resident_tokens"),
             "prefix disabled must not grow the Summary JSON: {baseline}"
         );
+        assert!(
+            !baseline.contains("chunk_sliced_batches")
+                && !baseline.contains("chunk_slices")
+                && !baseline.contains("chunk_yields")
+                && !baseline.contains("chunk_hybrid_iters"),
+            "chunk disabled must not grow the Summary JSON: {baseline}"
+        );
         for placement in [
             Placement::LeastLoaded,
             Placement::JoinShortestKv,
@@ -195,6 +206,11 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 // And every prefix knob except its master switch.
                 cfg.prefix.block = 1;
                 cfg.prefix.cache_frac = 1.0;
+                // And every chunking knob except its master switch: a
+                // one-token slice would shred every prefill if armed.
+                cfg.chunk.slice_tokens = 1;
+                cfg.chunk.hybrid = false;
+                cfg.chunk.interleave = false;
                 // And the executor: with one shard, any thread count
                 // resolves to the sequential path, so `threads = 1`
                 // stays byte-identical to the pre-executor scheduler.
@@ -203,7 +219,7 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                     summary(system, &cfg),
                     baseline,
                     "{} diverged with shards=1 placement={} steal={steal} \
-                     preempt-admission-and-prefix-knobs-armed",
+                     preempt-admission-prefix-and-chunk-knobs-armed",
                     system.name(),
                     placement.name(),
                 );
@@ -225,22 +241,31 @@ fn executor_determinism_matrix_across_threads_and_features() {
     // stealing on. Prefix-armed rows run a multi-turn trace under the
     // affinity placement so dispatch acquisitions, pin releases, and LRU
     // evictions all actually fire — all of which mutate cache state on
-    // the merge loop and must be invisible to the thread count.
-    let features: [(bool, bool, bool, bool); 7] = [
-        (false, false, false, false),
-        (true, false, false, false),
-        (true, true, false, false),
-        (true, false, true, false),
-        (true, true, true, false),
-        (false, false, false, true),
-        (true, true, true, true),
+    // the merge loop and must be invisible to the thread count. Chunked
+    // prefill is the newest axis: sliced batches stretch one logical
+    // prefill across many events (each slice boundary a sync barrier for
+    // the workers), park/resume moves in-flight state between the shard
+    // and the fleet on the merge loop, and hybrid pricing keys off
+    // cross-fleet state — all of which must reproduce the sequential
+    // bytes under every thread count and planning mode.
+    let features: [(bool, bool, bool, bool, bool); 10] = [
+        (false, false, false, false, false),
+        (true, false, false, false, false),
+        (true, true, false, false, false),
+        (true, false, true, false, false),
+        (true, true, true, false, false),
+        (false, false, false, true, false),
+        (true, true, true, true, false),
+        (false, false, false, false, true),
+        (true, true, false, false, true),
+        (true, true, true, true, true),
     ];
     for seed in [33u64, 77] {
         let mixed = Trace::mixed_classes(
             Dataset::Alpaca, 30, 10.0, Dataset::LongBench, 15, 4096, seed,
         );
         let turns = Trace::multi_turn(Dataset::Alpaca, 8, 4, 12.0, 4096, seed);
-        for &(priority, preempt, admission, prefix) in &features {
+        for &(priority, preempt, admission, prefix, chunk) in &features {
             let trace = if prefix { &turns } else { &mixed };
             let mut base = SystemConfig::default();
             base.fleet.n_prefill = 2;
@@ -256,6 +281,8 @@ fn executor_determinism_matrix_across_threads_and_features() {
             base.preempt.enabled = preempt;
             base.admission.enabled = admission;
             base.prefix.enabled = prefix;
+            base.chunk.enabled = chunk;
+            base.chunk.slice_tokens = 512;
             // Tight budgets so the armed subsystems actually fire inside
             // the matrix (aborts, evictions, deferrals, cache churn), not
             // just idle. The small cache_frac forces LRU evictions.
@@ -296,7 +323,7 @@ fn executor_determinism_matrix_across_threads_and_features() {
                         "threads={threads} plan_offload={plan_offload} \
                          diverged from sequential (priority={priority} \
                          preempt={preempt} admission={admission} \
-                         prefix={prefix} seed={seed})"
+                         prefix={prefix} chunk={chunk} seed={seed})"
                     );
                 }
             }
@@ -329,6 +356,13 @@ fn prop_executor_determinism_under_cross_shard_stress() {
         cfg.preempt.urgency_threshold = g.f64_in(0.05, 1.0);
         cfg.admission.enabled = g.bool();
         cfg.admission.slack_margin = g.f64_in(0.0, 0.5);
+        // Random chunking specs: sliced prefills multiply the event count
+        // per batch, park/resume reorders dispatch, and hybrid pricing
+        // reads cross-fleet state — all must be thread-count-invisible.
+        cfg.chunk.enabled = g.bool();
+        cfg.chunk.slice_tokens = g.usize(64, 2048) as u32;
+        cfg.chunk.hybrid = g.bool();
+        cfg.chunk.interleave = g.bool();
         // Random parallel-planning mode: offloaded speculation and
         // inline planning must both reproduce the sequential schedule
         // (the sequential run below never consults this flag).
@@ -407,6 +441,10 @@ fn prop_executor_determinism_under_cross_shard_stress() {
         assert_eq!(par.makespan_us, seq_r.makespan_us);
         assert_eq!(par.decode_iters, seq_r.decode_iters);
         assert_eq!(par.prefill_batches, seq_r.prefill_batches);
+        assert_eq!(par.chunk_sliced_batches, seq_r.chunk_sliced_batches);
+        assert_eq!(par.chunk_slices, seq_r.chunk_slices);
+        assert_eq!(par.chunk_yields, seq_r.chunk_yields);
+        assert_eq!(par.chunk_hybrid_iters, seq_r.chunk_hybrid_iters);
         // Plan rounds are a function of the schedule, counted by the
         // consume stage both modes share — so they match exactly (unlike
         // invalidations, which only exist under eager speculation).
@@ -497,6 +535,15 @@ fn prop_sharded_serving_conserves_requests() {
         if cfg.prefix.enabled && g.bool() {
             cfg.sharding.placement = Placement::PrefixAffinity;
         }
+        // Chunked prefill must conserve too: random (often tiny) slice
+        // sizes shred long prefills into many slices, parking and
+        // resuming across the other subsystems' aborts and evictions —
+        // every sliced batch must still complete exactly once with its
+        // original token split.
+        cfg.chunk.enabled = g.bool();
+        cfg.chunk.slice_tokens = g.usize(32, 4096) as u32;
+        cfg.chunk.hybrid = g.bool();
+        cfg.chunk.interleave = g.bool();
         let n = g.usize(5, 60);
         let rps = g.f64_in(1.0, 40.0);
         let seed = g.u64(0, 1 << 30);
@@ -536,6 +583,17 @@ fn prop_sharded_serving_conserves_requests() {
         }
         if !cfg.admission.enabled {
             assert_eq!(r.admission_deferrals + r.tbt_evictions, 0);
+        }
+        if !cfg.chunk.enabled {
+            assert_eq!(
+                r.chunk_sliced_batches
+                    + r.chunk_slices
+                    + r.chunk_yields
+                    + r.chunk_hybrid_iters,
+                0,
+                "{} chunk counters must stay silent when disabled",
+                sys.name()
+            );
         }
         if cfg.prefix.enabled {
             // Every LRU eviction frees exactly one block: the token
