@@ -225,6 +225,57 @@ fn main() {
         time_it("  (manager clone baseline)", || mgr0.clone().total()).print();
     }
 
+    // Chunked-prefill park/resume hot path: the globally-oldest resume
+    // selection (min head `started_at` across shard FIFOs) plus the
+    // O(1) VecDeque pop — previously a Vec::remove(0) front shift —
+    // against a deep parked backlog. Runs once per dispatch round when
+    // chunking is on, so it must stay flat in backlog depth.
+    {
+        use bucketserve::cluster::PrefillBatch;
+        use bucketserve::config::ShardingSpec;
+        use bucketserve::coordinator::batcher::FormedBatch;
+        use bucketserve::coordinator::fleet::ParkedPrefill;
+        use bucketserve::coordinator::scheduler::BucketPlanner;
+        use bucketserve::coordinator::shard::ShardSet;
+        use bucketserve::coordinator::PrefillPlanner;
+
+        const SHARDS: usize = 8;
+        let spec =
+            ShardingSpec { shards: SHARDS as u32, ..Default::default() };
+        let mut set = ShardSet::new(&spec, SHARDS, || {
+            Box::new(BucketPlanner::new(&cfg)) as Box<dyn PrefillPlanner>
+        });
+        let parked = |t: u64| ParkedPrefill {
+            formed: FormedBatch {
+                batch: PrefillBatch { items: vec![], padded_len: 1 },
+                reqs: vec![],
+                bucket_up: 1,
+            },
+            target_decode: 0,
+            started_at: t,
+            cursor: 0,
+            width: 1,
+            reserved_so_far: 0,
+            exec_us: 0,
+        };
+        for si in 0..SHARDS {
+            for i in 0..64u64 {
+                let t = i * SHARDS as u64 + si as u64;
+                set.get_mut(si).parked.push_back(parked(t));
+            }
+        }
+        let mut next = (SHARDS * 64) as u64;
+        time_it("park/resume: oldest scan + pop_front (8×64 parked)", || {
+            let si = set.oldest_parked_shard().unwrap();
+            let p = set.get_mut(si).parked.pop_front().unwrap();
+            // Re-park at the tail to keep the backlog depth steady.
+            set.get_mut(si).parked.push_back(parked(next));
+            next += 1;
+            p.started_at
+        })
+        .print();
+    }
+
     // Executor sync points at 8 shards: one decode-iteration boundary
     // fan-out and one plan/commit speculation round, pool vs inline.
     // Job capture (buffer moves, planner clone_box snapshots) runs on

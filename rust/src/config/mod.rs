@@ -423,6 +423,75 @@ impl Default for ChunkSpec {
     }
 }
 
+/// Prefill-planner family: which queue discipline each scheduler shard
+/// runs behind the [`crate::coordinator::scheduler::PrefillPlanner`]
+/// trait. The choice changes only *how* batches form — sharding,
+/// work-stealing, preemption, admission, prefix caching, chunking, and
+/// the plan/commit parallel executor compose with any family unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerFamily {
+    /// Adaptive length-bucketing (Algorithm 1) — the paper's planner and
+    /// the default.
+    Bucket,
+    /// Plain arrival-order FIFO (the DistServe-style baseline planner).
+    Fcfs,
+    /// Deadline-lookahead: push each request toward its latest feasible
+    /// start and form batches backwards from the earliest deadline
+    /// ([`crate::coordinator::lookahead::LookaheadPlanner`]).
+    Lookahead,
+}
+
+impl PlannerFamily {
+    pub fn parse(s: &str) -> PlannerFamily {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => PlannerFamily::Fcfs,
+            "lookahead" | "deadline" => PlannerFamily::Lookahead,
+            _ => PlannerFamily::Bucket,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlannerFamily::Bucket => "bucket",
+            PlannerFamily::Fcfs => "fcfs",
+            PlannerFamily::Lookahead => "lookahead",
+        }
+    }
+}
+
+/// Planner-family selection plus the deadline-lookahead knobs (consumed
+/// by [`crate::coordinator::lookahead::LookaheadPlanner`]). The default
+/// family is `bucket`, under which every other knob here is inert —
+/// output (including Summary JSON) stays byte-identical to the
+/// pre-planner-block system.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannerSpec {
+    /// Which planner family each scheduler shard runs.
+    pub family: PlannerFamily,
+    /// Lookahead window: how many earliest-deadline candidates one plan
+    /// round examines (bounds per-dispatch work at O(window)).
+    pub window: u32,
+    /// Commit margin, µs: a batch whose *whole* window still has at
+    /// least this much slack before its latest feasible start is held
+    /// back so it can accumulate more members; smaller = more eager.
+    pub commit_margin_us: u64,
+    /// Aging horizon, µs, anchoring offline requests' synthetic
+    /// deadlines (`arrival + horizon`): offline work never waits more
+    /// than about this long before the planner treats it as due.
+    pub offline_horizon_us: u64,
+}
+
+impl Default for PlannerSpec {
+    fn default() -> Self {
+        PlannerSpec {
+            family: PlannerFamily::Bucket,
+            window: 32,
+            commit_margin_us: 50_000,
+            offline_horizon_us: 10_000_000,
+        }
+    }
+}
+
 /// Parallel-executor knobs (consumed by
 /// [`crate::coordinator::executor`]): how many worker threads the serving
 /// loop fans decode-iteration boundaries out to. `threads = 1` (the
@@ -540,6 +609,7 @@ pub struct SystemConfig {
     pub admission: AdmissionSpec,
     pub prefix: PrefixSpec,
     pub chunk: ChunkSpec,
+    pub planner: PlannerSpec,
     pub executor: ExecutorSpec,
     pub realtime: RealtimeSpec,
     pub seed: u64,
@@ -559,6 +629,7 @@ impl Default for SystemConfig {
             admission: AdmissionSpec::default(),
             prefix: PrefixSpec::default(),
             chunk: ChunkSpec::default(),
+            planner: PlannerSpec::default(),
             executor: ExecutorSpec::default(),
             realtime: RealtimeSpec::default(),
             seed: 42,
@@ -679,6 +750,14 @@ impl SystemConfig {
             if let Some(v) = ch.get("hybrid").as_bool() { d.hybrid = v; }
             if let Some(v) = ch.get("interleave").as_bool() { d.interleave = v; }
         }
+        let pl = j.get("planner");
+        if !pl.is_null() {
+            let d = &mut c.planner;
+            if let Some(v) = pl.get("family").as_str() { d.family = PlannerFamily::parse(v); }
+            if let Some(v) = pl.get("window").as_u64() { d.window = v as u32; }
+            if let Some(v) = pl.get("commit_margin_us").as_u64() { d.commit_margin_us = v; }
+            if let Some(v) = pl.get("offline_horizon_us").as_u64() { d.offline_horizon_us = v; }
+        }
         let ex = j.get("executor");
         if !ex.is_null() {
             if let Some(v) = ex.get("threads").as_u64() {
@@ -763,6 +842,16 @@ impl SystemConfig {
                 }
                 "chunk.hybrid" => set_bool(&mut self.chunk.hybrid, v),
                 "chunk.interleave" => set_bool(&mut self.chunk.interleave, v),
+                "planner.family" => {
+                    self.planner.family = PlannerFamily::parse(v)
+                }
+                "planner.window" => set_u32(&mut self.planner.window, v),
+                "planner.commit_margin_us" => {
+                    if let Ok(x) = v.parse() { self.planner.commit_margin_us = x; }
+                }
+                "planner.offline_horizon_us" => {
+                    if let Ok(x) = v.parse() { self.planner.offline_horizon_us = x; }
+                }
                 "executor.threads" => set_u32(&mut self.executor.threads, v),
                 "executor.plan_offload" => {
                     set_bool(&mut self.executor.plan_offload, v)
@@ -856,6 +945,12 @@ impl SystemConfig {
                 ("slice_tokens", Json::from(self.chunk.slice_tokens as u64)),
                 ("hybrid", Json::from(self.chunk.hybrid)),
                 ("interleave", Json::from(self.chunk.interleave)),
+            ])),
+            ("planner", Json::obj(vec![
+                ("family", Json::from(self.planner.family.name())),
+                ("window", Json::from(self.planner.window as u64)),
+                ("commit_margin_us", Json::from(self.planner.commit_margin_us)),
+                ("offline_horizon_us", Json::from(self.planner.offline_horizon_us)),
             ])),
             ("executor", Json::obj(vec![
                 ("threads", Json::from(self.executor.threads as u64)),
@@ -1221,6 +1316,69 @@ mod tests {
         // Untouched fields keep defaults.
         assert!(c.chunk.hybrid);
         assert!(c.chunk.interleave);
+    }
+
+    #[test]
+    fn planner_defaults_bucket_and_overridable() {
+        let c = SystemConfig::default();
+        assert_eq!(
+            c.planner.family,
+            PlannerFamily::Bucket,
+            "the paper's bucket planner stays the default"
+        );
+        assert!(c.planner.window >= 1);
+        assert!(c.planner.offline_horizon_us > c.planner.commit_margin_us);
+
+        let args = Args::parse(
+            ["--planner.family", "lookahead", "--planner.window", "8",
+             "--planner.commit_margin_us", "20000",
+             "--planner.offline_horizon_us", "5000000"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert_eq!(c.planner.family, PlannerFamily::Lookahead);
+        assert_eq!(c.planner.window, 8);
+        assert_eq!(c.planner.commit_margin_us, 20_000);
+        assert_eq!(c.planner.offline_horizon_us, 5_000_000);
+
+        // A typo'd family must not silently switch planners.
+        let args = Args::parse(
+            ["--planner.family", "lookahed"].iter().map(|s| s.to_string()),
+        );
+        let mut c = SystemConfig::default();
+        c.apply_overrides(&args);
+        assert_eq!(c.planner.family, PlannerFamily::Bucket);
+    }
+
+    #[test]
+    fn planner_json_block_parses() {
+        let j = Json::parse(
+            r#"{"planner":{"family":"fcfs","window":16}}"#,
+        )
+        .unwrap();
+        let c = SystemConfig::from_json(&j);
+        assert_eq!(c.planner.family, PlannerFamily::Fcfs);
+        assert_eq!(c.planner.window, 16);
+        // Untouched fields keep defaults.
+        assert_eq!(c.planner.commit_margin_us, 50_000);
+        assert_eq!(c.planner.offline_horizon_us, 10_000_000);
+    }
+
+    #[test]
+    fn planner_family_parse() {
+        assert_eq!(PlannerFamily::parse("LOOKAHEAD"), PlannerFamily::Lookahead);
+        assert_eq!(PlannerFamily::parse("deadline"), PlannerFamily::Lookahead);
+        assert_eq!(PlannerFamily::parse("fcfs"), PlannerFamily::Fcfs);
+        assert_eq!(PlannerFamily::parse("weird"), PlannerFamily::Bucket);
+        for f in [
+            PlannerFamily::Bucket,
+            PlannerFamily::Fcfs,
+            PlannerFamily::Lookahead,
+        ] {
+            assert_eq!(PlannerFamily::parse(f.name()), f, "name/parse round-trip");
+        }
     }
 
     #[test]

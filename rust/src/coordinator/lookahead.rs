@@ -1,0 +1,500 @@
+//! Deadline-lookahead prefill planning: push every request toward its
+//! *latest feasible start* and form batches backwards from the earliest
+//! deadline (ROADMAP open item #2; the memory-aware SLA-constrained
+//! batching line of work, arxiv 2503.05248).
+//!
+//! The bucket planner drains eagerly: whenever a prefill slot and KV
+//! headroom exist, it forms the best batch it can from whatever is
+//! queued *right now*. Under bursty traffic that fragments buckets and
+//! serves requests seconds ahead of their deadlines while the requests
+//! arriving just behind them form thin, padding-heavy batches.
+//! [`LookaheadPlanner`] inverts the decision:
+//!
+//! 1. Every queued request carries a **deadline** — online requests
+//!    their TTFT deadline (`arrival + slo.ttft_us`), offline requests a
+//!    synthetic aging anchor (`arrival + planner.offline_horizon_us`)
+//!    so throughput work can wait but never starve.
+//! 2. One plan round examines only the `planner.window` earliest
+//!    deadlines (the queue is kept deadline-sorted, so this is the
+//!    front; O(window) per dispatch round) and greedily admits them in
+//!    deadline order under the KV headroom and `scheduler.max_batch` —
+//!    the batch forms *backwards from the earliest deadline*, urgent
+//!    work first, fillers after.
+//! 3. The formed batch's **latest feasible start** is
+//!    `earliest member deadline − projected prefill time` (the analytic
+//!    [`CostModel`], same one the engine prices the batch with). While
+//!    `now + planner.commit_margin_us` is still earlier than that — and
+//!    the batch has absorbed the whole queue without saturating — the
+//!    planner *holds* (returns `None`): committing now would waste the
+//!    slack that lets later arrivals join and form a fuller, more
+//!    length-homogeneous batch. A batch that is saturated (headroom- or
+//!    `max_batch`-limited, or with work queued beyond the window)
+//!    commits immediately — holding could not make it better.
+//!
+//! Liveness needs no planner-side timer: the serving loop re-plans at
+//! every event, so the clock a held batch waits on is carried by
+//! whatever is in flight, and the scheduler's memory-deadlock breaker
+//! (`force_pop`, which here pops the earliest deadline) already covers
+//! the nothing-in-flight corner.
+//!
+//! Every decision is a pure function of `(queue, now, headroom)` over
+//! integer microseconds, so plan/commit speculation on executor worker
+//! threads stays byte-identical to inline planning; wall-clock
+//! (`Instant`) is read only to meter [`PrefillPlanner::overhead_ns`].
+//!
+//! Composition: sharding/work-stealing ([`PrefillPlanner::steal_tail`]
+//! surrenders the farthest-deadline tail, KV-capped), preemption
+//! ([`PrefillPlanner::drain_follows_urgency`] is `true` — the drain *is*
+//! deadline order), TBT admission (deferred batches
+//! [`PrefillPlanner::absorb`] back in deadline position), prefix caching
+//! ([`PrefillPlanner::lineage_summary`] walks the queue), and chunking
+//! (slices operate on formed batches, downstream of planning) all ride
+//! the trait surface unchanged.
+
+use super::batcher::FormedBatch;
+use super::bucket::QueuedReq;
+use super::prefix::PrefixStamp;
+use super::scheduler::{kv_capped_take, oldest_online_in, OnlinePeek, PrefillPlanner};
+use crate::cluster::gpu::CostModel;
+use crate::cluster::{PrefillBatch, PrefillItem};
+use crate::config::{PlannerSpec, SloSpec, SystemConfig};
+use crate::workload::{Request, RequestClass};
+use crate::Micros;
+use std::time::Instant;
+
+/// Deadline-lookahead planner (latest-feasible-start batch formation).
+///
+/// `Clone` is the snapshot stage of the executor's plan/commit protocol
+/// ([`PrefillPlanner::clone_box`]): all fields are owned data, so the
+/// derived clone is a complete deep copy.
+#[derive(Clone)]
+pub struct LookaheadPlanner {
+    /// Kept sorted ascending by `(deadline, arrival, id)` — the front is
+    /// always the most-due request, so one plan round's window is a
+    /// prefix slice and `force_pop` is the front.
+    queue: Vec<(Micros, QueuedReq)>,
+    cost: CostModel,
+    slo: SloSpec,
+    spec: PlannerSpec,
+    max_batch: usize,
+    overhead_ns: u64,
+    online_peek: OnlinePeek,
+}
+
+impl LookaheadPlanner {
+    pub fn new(cfg: &SystemConfig) -> LookaheadPlanner {
+        LookaheadPlanner {
+            queue: Vec::new(),
+            cost: CostModel::new(cfg.model.clone(), cfg.gpu.clone(), cfg.fleet.tp),
+            slo: cfg.slo.clone(),
+            spec: cfg.planner.clone(),
+            max_batch: if cfg.scheduler.max_batch == 0 {
+                usize::MAX
+            } else {
+                cfg.scheduler.max_batch as usize
+            },
+            overhead_ns: 0,
+            online_peek: OnlinePeek::new(),
+        }
+    }
+
+    /// The request's deadline: TTFT for online, the aging anchor for
+    /// offline — the single key the queue orders and batches anchor on.
+    fn deadline(&self, r: &QueuedReq) -> Micros {
+        match r.class {
+            RequestClass::Online => r.arrival.saturating_add(self.slo.ttft_us),
+            RequestClass::Offline => {
+                r.arrival.saturating_add(self.spec.offline_horizon_us)
+            }
+        }
+    }
+
+    /// Insert preserving the `(deadline, arrival, id)` sort.
+    fn insert(&mut self, r: QueuedReq) {
+        self.online_peek.note_insert(&r);
+        let dl = self.deadline(&r);
+        let key = (dl, r.arrival, r.id);
+        let pos = self
+            .queue
+            .partition_point(|(d, q)| (*d, q.arrival, q.id) <= key);
+        self.queue.insert(pos, (dl, r));
+    }
+}
+
+impl PrefillPlanner for LookaheadPlanner {
+    fn clone_box(&self) -> Box<dyn PrefillPlanner> {
+        Box::new(self.clone())
+    }
+
+    fn admit(&mut self, req: &Request, _now: Micros) {
+        let q = QueuedReq {
+            id: req.id,
+            len: req.input_len,
+            output_len: req.output_len,
+            arrival: req.arrival,
+            class: req.class,
+            tbt_us: req.tbt_deadline_us,
+            // Lineage + the router's resident-match hint; `shared_len`
+            // stays 0 until dispatch actually pins cache blocks. All-zero
+            // when the prefix subsystem is off, so nothing downstream
+            // changes.
+            prefix: PrefixStamp {
+                prefix_id: req.prefix_id,
+                prefix_len: req.prefix_len.min(req.input_len),
+                cached_len: req.prefix_cached_hint.min(req.input_len),
+                shared_len: 0,
+            },
+        };
+        self.insert(q);
+    }
+
+    fn plan(&mut self, now: Micros, headroom_tokens: u64) -> Option<FormedBatch> {
+        let t0 = Instant::now();
+        if self.queue.is_empty() {
+            self.overhead_ns += t0.elapsed().as_nanos() as u64;
+            return None;
+        }
+        // Backwards from the earliest deadline: admit window members in
+        // deadline order while they fit. A member whose footprint
+        // overflows the remaining headroom is *skipped*, not a barrier —
+        // the window exists so one oversized request cannot block the
+        // due work queued just behind it.
+        let window = (self.spec.window.max(1) as usize).min(self.queue.len());
+        let mut take_idx: Vec<usize> = Vec::new();
+        let mut acc = 0u64;
+        for i in 0..window {
+            if take_idx.len() >= self.max_batch {
+                break;
+            }
+            let footprint = self.queue[i].1.footprint();
+            if acc + footprint > headroom_tokens {
+                continue;
+            }
+            acc += footprint;
+            take_idx.push(i);
+        }
+        if take_idx.is_empty() {
+            self.overhead_ns += t0.elapsed().as_nanos() as u64;
+            return None;
+        }
+        // Hold-for-accumulation gate: only an *unsaturated* batch — one
+        // that absorbed the whole queue with batch-size room to spare —
+        // can get fuller by waiting, and it waits only while its whole
+        // window keeps `commit_margin_us` of slack before the latest
+        // feasible start. Saturated batches commit now.
+        let n = take_idx.len();
+        if n == self.queue.len() && n < self.max_batch {
+            let padded =
+                take_idx.iter().map(|&i| self.queue[i].1.len).max().unwrap_or(1);
+            let dur = self.cost.prefill_time(n, padded.max(1));
+            let latest_start = self.queue[take_idx[0]].0.saturating_sub(dur);
+            if now.saturating_add(self.spec.commit_margin_us) < latest_start {
+                self.overhead_ns += t0.elapsed().as_nanos() as u64;
+                return None;
+            }
+        }
+        // Drain the members (descending index so positions stay valid),
+        // then restore deadline order — the dispatch order downstream
+        // bookkeeping sees.
+        let mut reqs: Vec<QueuedReq> = Vec::with_capacity(n);
+        for &i in take_idx.iter().rev() {
+            reqs.push(self.queue.remove(i).1);
+        }
+        reqs.reverse();
+        self.online_peek.note_removed(reqs.iter());
+        let padded_len = reqs.iter().map(|r| r.len).max().unwrap_or(1).max(1);
+        let items = reqs
+            .iter()
+            .map(|r| PrefillItem { id: r.id, len: r.len, tokens: vec![] })
+            .collect();
+        self.overhead_ns += t0.elapsed().as_nanos() as u64;
+        Some(FormedBatch {
+            batch: PrefillBatch { items, padded_len },
+            reqs,
+            bucket_up: padded_len,
+        })
+    }
+
+    fn force_pop(&mut self, _now: Micros) -> Option<QueuedReq> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let (_, r) = self.queue.remove(0);
+        self.online_peek.note_removed(std::iter::once(&r));
+        Some(r)
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn queued_tokens(&self) -> u64 {
+        self.queue.iter().map(|(_, r)| r.footprint()).sum()
+    }
+
+    fn steal_tail(
+        &mut self,
+        max_n: usize,
+        max_tokens: u64,
+        _now: Micros,
+    ) -> Vec<QueuedReq> {
+        // The farthest-deadline tail is the least-urgent end by
+        // construction; cap at half the queue so the donor keeps the due
+        // head it would dispatch next, and at `max_tokens` of
+        // full-context footprint so the thief is never handed more than
+        // its KV headroom can admit.
+        let cap = max_n.min(self.queue.len() / 2);
+        let take = kv_capped_take(
+            self.queue.iter().rev().take(cap).map(|(_, r)| r),
+            max_tokens,
+        );
+        let stolen: Vec<QueuedReq> = self
+            .queue
+            .split_off(self.queue.len() - take)
+            .into_iter()
+            .map(|(_, r)| r)
+            .collect();
+        self.online_peek.note_removed(stolen.iter());
+        stolen
+    }
+
+    fn absorb(&mut self, reqs: Vec<QueuedReq>, _now: Micros) {
+        // Stolen/requeued work slots back in by deadline, as if admitted
+        // here originally.
+        for r in reqs {
+            self.insert(r);
+        }
+    }
+
+    fn oldest_online(&mut self) -> Option<QueuedReq> {
+        let queue = &self.queue;
+        self.online_peek
+            .get(|| oldest_online_in(queue.iter().map(|(_, r)| r)))
+    }
+
+    fn drain_follows_urgency(&self) -> bool {
+        // The drain order *is* deadline order: an urgent requeued
+        // request re-enters at the front and dispatches ahead of the
+        // work it preempted, so preemption buys real latency here.
+        true
+    }
+
+    fn overhead_ns(&self) -> u64 {
+        self.overhead_ns
+    }
+
+    fn lineage_summary(&self) -> Vec<(u64, u32)> {
+        // O(queued) walk, paid only when the prefix subsystem is armed
+        // and only at steal cadence (mirrors the bucket planner).
+        let mut out: Vec<(u64, u32)> = Vec::new();
+        for (_, r) in &self.queue {
+            if r.prefix.prefix_id == 0 {
+                continue;
+            }
+            let shareable = r.prefix.prefix_len.min(r.len);
+            match out.iter_mut().find(|(id, _)| *id == r.prefix.prefix_id) {
+                Some((_, len)) => *len = (*len).max(shareable),
+                None => out.push((r.prefix.prefix_id, shareable)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::sim::SimEngine;
+    use crate::config::PlannerFamily;
+    use crate::coordinator::scheduler::PdScheduler;
+    use crate::workload::{Dataset, Request, RequestClass, Trace};
+
+    fn req(id: u64, class: RequestClass, len: u32, arrival: Micros) -> Request {
+        Request::new(id, class, len, 10, arrival)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut cfg = SystemConfig::default();
+        cfg.planner.family = PlannerFamily::Lookahead;
+        let trace = Trace::mixed_classes(
+            Dataset::Alpaca, 40, 8.0, Dataset::LongBench, 20, cfg.model.max_seq,
+            7,
+        );
+        let mut engine = SimEngine::new(&cfg);
+        let mut sched =
+            PdScheduler::new(&cfg, || Box::new(LookaheadPlanner::new(&cfg)));
+        let report = sched.run(&trace, &mut engine);
+        assert!(report.error.is_none(), "{:?}", report.error);
+        assert_eq!(report.completions.len(), 60);
+    }
+
+    #[test]
+    fn drains_in_deadline_order_online_before_offline() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        // Offline arrived first but its aging anchor (10 s) is far
+        // beyond the online TTFT deadline (400 ms).
+        p.admit(&req(0, RequestClass::Offline, 100, 0), 0);
+        p.admit(&req(1, RequestClass::Online, 100, 1000), 1000);
+        p.admit(&req(2, RequestClass::Online, 100, 500), 1000);
+        let fb = p.plan(cfg.slo.ttft_us, u64::MAX / 4).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![2, 1, 0],
+            "earliest deadline first: online by arrival, offline last"
+        );
+        assert_eq!(p.queued(), 0);
+    }
+
+    #[test]
+    fn holds_unsaturated_batch_until_commit_margin() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        p.admit(&req(0, RequestClass::Online, 100, 0), 0);
+        // Deadline 400 ms, prefill of one 100-token request is a few ms:
+        // at t=0 the slack is far beyond the 50 ms commit margin.
+        assert!(
+            p.plan(0, u64::MAX / 4).is_none(),
+            "far-from-deadline singleton is held for accumulation"
+        );
+        assert_eq!(p.queued(), 1, "held, not dropped");
+        // At the deadline the batch must commit.
+        let fb = p.plan(cfg.slo.ttft_us, u64::MAX / 4).unwrap();
+        assert_eq!(fb.reqs.len(), 1);
+        // And a batch the queue saturates (here: max_batch) commits
+        // immediately even with slack to spare.
+        let mut cfg2 = SystemConfig::default();
+        cfg2.scheduler.max_batch = 2;
+        let mut p = LookaheadPlanner::new(&cfg2);
+        p.admit(&req(0, RequestClass::Online, 100, 0), 0);
+        p.admit(&req(1, RequestClass::Online, 100, 0), 0);
+        assert!(
+            p.plan(0, u64::MAX / 4).is_some(),
+            "max_batch-saturated batch commits at once"
+        );
+    }
+
+    #[test]
+    fn held_batch_accumulates_then_commits_fuller() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        p.admit(&req(0, RequestClass::Online, 100, 0), 0);
+        assert!(p.plan(0, u64::MAX / 4).is_none());
+        // Two more arrivals land while the first is held; the eventual
+        // commit carries all three in one batch.
+        p.admit(&req(1, RequestClass::Online, 120, 10_000), 10_000);
+        p.admit(&req(2, RequestClass::Online, 90, 20_000), 20_000);
+        let fb = p.plan(cfg.slo.ttft_us, u64::MAX / 4).unwrap();
+        assert_eq!(fb.reqs.len(), 3, "held batch accumulated arrivals");
+        assert_eq!(fb.batch.padded_len, 120);
+    }
+
+    #[test]
+    fn oversized_member_is_skipped_not_a_barrier() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        // Earliest deadline belongs to a request too big for the
+        // headroom; the two due requests behind it must still form.
+        p.admit(&req(0, RequestClass::Online, 4000, 0), 0);
+        p.admit(&req(1, RequestClass::Online, 100, 10), 0);
+        p.admit(&req(2, RequestClass::Online, 100, 20), 0);
+        let fb = p.plan(cfg.slo.ttft_us, 300).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![1, 2],
+            "oversized head skipped, due work behind it still forms"
+        );
+        assert_eq!(p.queued(), 1, "the oversized request stays queued");
+        assert_eq!(p.oldest_online().unwrap().id, 0);
+    }
+
+    #[test]
+    fn window_bounds_the_examination() {
+        let mut cfg = SystemConfig::default();
+        cfg.planner.window = 4;
+        let mut p = LookaheadPlanner::new(&cfg);
+        for i in 0..10u64 {
+            p.admit(&req(i, RequestClass::Online, 100, i), 0);
+        }
+        let fb = p.plan(cfg.slo.ttft_us, u64::MAX / 4).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "one round admits at most `window` members"
+        );
+        assert_eq!(p.queued(), 6);
+    }
+
+    #[test]
+    fn steal_tail_takes_farthest_deadlines_kv_capped() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        for i in 0..8u64 {
+            p.admit(&req(i, RequestClass::Online, 100, i * 100), 0);
+        }
+        assert_eq!(p.oldest_online().unwrap().id, 0);
+        // Footprint 110/request: a 250-token cap admits only 2 of the 4
+        // the half-queue rule would otherwise surrender.
+        let stolen = p.steal_tail(4, 250, 800);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![6, 7],
+            "farthest-deadline tail"
+        );
+        assert_eq!(p.queued(), 6);
+        assert_eq!(p.oldest_online().unwrap().id, 0, "head never stolen");
+        assert_eq!(p.queued_tokens(), 6 * 110);
+    }
+
+    #[test]
+    fn absorb_reinserts_in_deadline_order() {
+        let cfg = SystemConfig::default();
+        let mut victim = LookaheadPlanner::new(&cfg);
+        let mut thief = LookaheadPlanner::new(&cfg);
+        for i in 0..6u64 {
+            victim.admit(&req(i, RequestClass::Online, 100, i * 100), 0);
+        }
+        thief.admit(&req(99, RequestClass::Online, 100, 450), 0);
+        let stolen = victim.steal_tail(2, u64::MAX / 4, 800);
+        assert_eq!(
+            stolen.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+        thief.absorb(stolen, 800);
+        let fb = thief.plan(1_000_000, u64::MAX / 4).unwrap();
+        assert_eq!(
+            fb.reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![4, 99, 5],
+            "absorbed requests interleave by deadline"
+        );
+    }
+
+    #[test]
+    fn force_pop_is_the_earliest_deadline() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        p.admit(&req(0, RequestClass::Offline, 100, 0), 0);
+        p.admit(&req(1, RequestClass::Online, 100, 700), 0);
+        p.admit(&req(2, RequestClass::Online, 100, 300), 0);
+        assert_eq!(p.force_pop(0).unwrap().id, 2);
+        assert_eq!(p.force_pop(0).unwrap().id, 1);
+        assert_eq!(p.force_pop(0).unwrap().id, 0);
+        assert!(p.force_pop(0).is_none());
+    }
+
+    #[test]
+    fn lineage_summary_dedupes_by_prefix() {
+        let cfg = SystemConfig::default();
+        let mut p = LookaheadPlanner::new(&cfg);
+        let mut a = req(0, RequestClass::Online, 200, 0);
+        a.prefix_id = 7;
+        a.prefix_len = 64;
+        let mut b = req(1, RequestClass::Online, 200, 10);
+        b.prefix_id = 7;
+        b.prefix_len = 128;
+        p.admit(&a, 0);
+        p.admit(&b, 10);
+        assert_eq!(p.lineage_summary(), vec![(7, 128)]);
+    }
+}

@@ -25,6 +25,10 @@
 //!   decode instance: lineage chains of refcounted token blocks under a
 //!   budget, LRU-peeled; prefill is priced on the uncached suffix and
 //!   shared blocks reserve KV once (off by default, `PrefixSpec`-gated).
+//! * [`lookahead`] — the deadline-lookahead planner family
+//!   (`planner.family = lookahead`): deadline-sorted queue, batches
+//!   formed backwards from the earliest deadline over a bounded window,
+//!   held until their latest feasible start while slack allows.
 //! * [`shard`] — per-decode-instance scheduler shards: each owns its own
 //!   bucket queue, KV admission, and priority state; KV-aware
 //!   work-stealing pulls backlog onto idle shards at decode-iteration
@@ -111,6 +115,7 @@ pub mod events;
 pub mod executor;
 pub mod fleet;
 pub mod live;
+pub mod lookahead;
 pub mod monitor;
 pub mod preempt;
 pub mod prefix;
@@ -126,6 +131,7 @@ pub use events::{Event, EventId, EventKind, EventQueue};
 pub use executor::ExecutorPool;
 pub use fleet::{DecodeFleet, PrefillFleet};
 pub use live::{HealthInfo, LiveCmd, LoadsInfo, StreamMsg, StreamSink};
+pub use lookahead::LookaheadPlanner;
 pub use monitor::{GlobalMonitor, MonitorView, ShardView};
 pub use preempt::{PreemptionEngine, RestoreInfo};
 pub use prefix::{PrefixCache, PrefixStamp};
@@ -134,10 +140,10 @@ pub use scheduler::{PdScheduler, RunReport, PrefillPlanner};
 pub use shard::{SchedulerShard, ShardSet, ShardStats};
 
 use crate::cluster::Engine;
-use crate::config::SystemConfig;
+use crate::config::{PlannerFamily, SystemConfig};
 use crate::workload::Trace;
 
-/// The BucketServe system façade: bucket planner + P/D serving loop.
+/// The BucketServe system façade: planner family + P/D serving loop.
 pub struct BucketServe {
     cfg: SystemConfig,
 }
@@ -148,11 +154,21 @@ impl BucketServe {
     }
 
     /// Serve a trace on `engine`, returning the full run report. Each
-    /// scheduler shard gets its own bucket planner.
+    /// scheduler shard gets its own planner of the configured family
+    /// (`planner.family`; `bucket`, the default, is the paper's planner
+    /// and keeps output byte-identical to the pre-planner-block system).
     pub fn run(&self, trace: &Trace, engine: &mut dyn Engine) -> RunReport {
-        let mut sched = PdScheduler::new(&self.cfg, || {
-            Box::new(scheduler::BucketPlanner::new(&self.cfg))
-        });
+        let mut sched = match self.cfg.planner.family {
+            PlannerFamily::Bucket => PdScheduler::new(&self.cfg, || {
+                Box::new(scheduler::BucketPlanner::new(&self.cfg))
+            }),
+            PlannerFamily::Fcfs => PdScheduler::new(&self.cfg, || {
+                Box::new(crate::baselines::distserve::FcfsPlanner::new(&self.cfg))
+            }),
+            PlannerFamily::Lookahead => PdScheduler::new(&self.cfg, || {
+                Box::new(LookaheadPlanner::new(&self.cfg))
+            }),
+        };
         sched.run(trace, engine)
     }
 

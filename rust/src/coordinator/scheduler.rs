@@ -1940,7 +1940,7 @@ impl<'a> RunCore<'a> {
         if urgent {
             self.report.chunk_yields += 1;
             let si = self.shards.owner_of(p.target_decode);
-            self.shards.get_mut(si).parked.push(ParkedPrefill {
+            self.shards.get_mut(si).parked.push_back(ParkedPrefill {
                 formed: p.formed,
                 target_decode: p.target_decode,
                 started_at: p.started_at,
@@ -1969,7 +1969,12 @@ impl<'a> RunCore<'a> {
     /// all of those were charged at the batch's original dispatch; a
     /// resume is the continuation of that same batch, not a new one.
     fn resume_parked(&mut self, pi: usize, si: usize) {
-        let pk = self.shards.get_mut(si).parked.remove(0);
+        let pk = self
+            .shards
+            .get_mut(si)
+            .parked
+            .pop_front()
+            .expect("resume_parked on shard with empty parked queue");
         self.launch_slice(
             pi,
             pk.formed,
@@ -2909,21 +2914,21 @@ impl<'a> RunCore<'a> {
             // Chunked prefill: a parked sliced batch resumes ahead of
             // new planning once no shard has online work queued (the
             // symmetric condition of the yield that parked it) — it is
-            // older than anything still waiting. Both peeks are guarded
+            // older than anything still waiting. The *globally oldest*
+            // parked batch resumes first (minimum original-dispatch
+            // `started_at` across shard fronts), not the first parked
+            // shard in headroom order: a resume targets the batch's own
+            // original decode instance, so headroom preference buys
+            // nothing and would let a younger batch on a high-headroom
+            // shard jump an older one elsewhere. Both peeks are guarded
             // by `chunk.enabled`, so disabled runs pay one branch.
             if self.chunk.enabled {
-                let parked_somewhere = (0..self.shards.n())
-                    .any(|si| !self.shards.get(si).parked.is_empty());
-                let online_somewhere = parked_somewhere
+                let oldest_parked = self.shards.oldest_parked_shard();
+                let online_somewhere = oldest_parked.is_some()
                     && (0..self.shards.n()).any(|si| {
                         self.shards.get_mut(si).planner.oldest_online().is_some()
                     });
-                if parked_somewhere && !online_somewhere {
-                    let si = order
-                        .iter()
-                        .map(|&(si, _, _)| si)
-                        .find(|&si| !self.shards.get(si).parked.is_empty())
-                        .expect("parked shard missing from dispatch order");
+                if let (Some(si), false) = (oldest_parked, online_somewhere) {
                     self.resume_parked(pi, si);
                     self.shards.repair_dispatch_order(
                         &mut order,
@@ -2998,12 +3003,9 @@ impl<'a> RunCore<'a> {
                 // batch even with online work still queued — a parked
                 // batch must never be able to stall the run, and the
                 // work it yielded to provably cannot dispatch right
-                // now anyway.
-                let parked = order
-                    .iter()
-                    .map(|&(si, _, _)| si)
-                    .find(|&si| !self.shards.get(si).parked.is_empty());
-                if let Some(si) = parked {
+                // now anyway. Same oldest-first selection as the eager
+                // path above.
+                if let Some(si) = self.shards.oldest_parked_shard() {
                     self.resume_parked(pi, si);
                     self.shards.repair_dispatch_order(
                         &mut order,
@@ -3720,29 +3722,41 @@ mod tests {
     }
 
     #[test]
-    fn prop_oldest_online_cache_matches_full_scan() {
-        // The cached min-arrival peek (the ROADMAP's O(queued)-scan fix)
-        // must agree with a full scan after every queue mutation, for
-        // both planner families, across admits, drains, force-pops,
-        // steals, and absorbs.
+    fn prop_planner_contract_all_families() {
+        // The full PrefillPlanner contract, pinned once across all three
+        // families (bucket / fcfs / lookahead) instead of per-family:
+        // under any interleaving of admits, drains, force-pops,
+        // steal-then-absorb round trips, and clone_box replacements,
+        //   * the cached min-arrival online peek (the ROADMAP's
+        //     O(queued)-scan fix) agrees with a full scan of the queue,
+        //   * queued() matches the live request count,
+        //   * queued_tokens() matches the recomputed footprint sum,
+        //   * and every admitted request is drained exactly once (token
+        //     conservation) by a final far-future drain — far-future so
+        //     the lookahead family's hold gate has no slack left and
+        //     must commit.
         use crate::baselines::distserve::FcfsPlanner;
-        prop::check("cached online peek ≡ full scan", 50, |g| {
+        use crate::coordinator::lookahead::LookaheadPlanner;
+        prop::check("planner contract holds for all families", 50, |g| {
             let mut cfg = SystemConfig::default();
             cfg.priority.enabled = g.bool();
-            let mut planner: Box<dyn PrefillPlanner> = if g.bool() {
-                Box::new(BucketPlanner::new(&cfg))
-            } else {
-                Box::new(FcfsPlanner::new(&cfg))
+            let mut planner: Box<dyn PrefillPlanner> = match g.usize(0, 2) {
+                0 => Box::new(BucketPlanner::new(&cfg)),
+                1 => Box::new(FcfsPlanner::new(&cfg)),
+                _ => Box::new(LookaheadPlanner::new(&cfg)),
             };
             let mut alive: Vec<QueuedReq> = Vec::new();
+            let mut drained: Vec<u64> = Vec::new();
             let mut now: Micros = 0;
             let mut next_id = 0u64;
-            let remove_ids = |alive: &mut Vec<QueuedReq>, ids: &[u64]| {
-                alive.retain(|r| !ids.contains(&r.id));
-            };
+            let remove_ids =
+                |alive: &mut Vec<QueuedReq>, drained: &mut Vec<u64>, ids: &[u64]| {
+                    alive.retain(|r| !ids.contains(&r.id));
+                    drained.extend_from_slice(ids);
+                };
             for _ in 0..g.usize(1, 70) {
                 now += g.u64(0, 50_000);
-                match g.usize(0, 9) {
+                match g.usize(0, 10) {
                     0..=4 => {
                         let class = if g.bool() {
                             RequestClass::Online
@@ -3772,13 +3786,19 @@ mod tests {
                         if let Some(fb) = planner.plan(now, g.u64(0, 20_000)) {
                             let ids: Vec<u64> =
                                 fb.reqs.iter().map(|r| r.id).collect();
-                            remove_ids(&mut alive, &ids);
+                            remove_ids(&mut alive, &mut drained, &ids);
                         }
                     }
                     7 => {
                         if let Some(r) = planner.force_pop(now) {
-                            remove_ids(&mut alive, &[r.id]);
+                            remove_ids(&mut alive, &mut drained, &[r.id]);
                         }
+                    }
+                    8 => {
+                        // The executor snapshots planners with clone_box;
+                        // a replacement must carry the whole contract
+                        // (queue, caches, cost state) with it.
+                        planner = planner.clone_box();
                     }
                     _ => {
                         // Steal then absorb right back: net queue content
@@ -3797,30 +3817,59 @@ mod tests {
                     oldest_online_in(alive.iter()),
                     "cached peek diverged from full scan"
                 );
+                assert_eq!(planner.queued(), alive.len(), "queued() drifted");
+                assert_eq!(
+                    planner.queued_tokens(),
+                    alive.iter().map(QueuedReq::footprint).sum::<u64>(),
+                    "queued_tokens() diverged from recomputed sum"
+                );
             }
+            // Conservation: drain the remainder well past every deadline
+            // and aging horizon, then account for every admitted id.
+            now += 30_000_000;
+            while let Some(fb) = planner.plan(now, u64::MAX / 4) {
+                let ids: Vec<u64> = fb.reqs.iter().map(|r| r.id).collect();
+                remove_ids(&mut alive, &mut drained, &ids);
+                now += 1;
+            }
+            while let Some(r) = planner.force_pop(now) {
+                remove_ids(&mut alive, &mut drained, &[r.id]);
+            }
+            assert_eq!(planner.queued(), 0);
+            assert_eq!(planner.queued_tokens(), 0);
+            assert!(alive.is_empty());
+            drained.sort();
+            assert_eq!(
+                drained,
+                (0..next_id).collect::<Vec<_>>(),
+                "requests lost or duplicated"
+            );
         });
     }
 
     #[test]
     fn prop_plan_commit_speculate_matches_inline() {
-        // The plan/commit protocol's core equivalence, for both planner
-        // families: running `plan` on a worker-thread *snapshot* and
-        // committing the result (installing the speculated state) is
+        // The plan/commit protocol's core equivalence, for all three
+        // planner families: running `plan` on a worker-thread *snapshot*
+        // and committing the result (installing the speculated state) is
         // indistinguishable from planning inline on the live planner —
         // whatever traffic preceded the plan and however many rival
         // speculations from the same snapshot state were produced and
         // discarded in between (speculation is pure, so discards leave
-        // zero trace and any rival commits identically).
+        // zero trace and any rival commits identically). For lookahead
+        // this also covers held plans: a hold (`plan` → None) must hold
+        // identically on the snapshot and inline paths.
         use crate::baselines::distserve::FcfsPlanner;
+        use crate::coordinator::lookahead::LookaheadPlanner;
         prop::check("speculate-over-snapshot ≡ inline planning", 40, |g| {
             let mut cfg = SystemConfig::default();
             cfg.priority.enabled = g.bool();
-            let bucket = g.bool();
+            let family = g.usize(0, 2);
             let mk = |cfg: &SystemConfig| -> Box<dyn PrefillPlanner> {
-                if bucket {
-                    Box::new(BucketPlanner::new(cfg))
-                } else {
-                    Box::new(FcfsPlanner::new(cfg))
+                match family {
+                    0 => Box::new(BucketPlanner::new(cfg)),
+                    1 => Box::new(FcfsPlanner::new(cfg)),
+                    _ => Box::new(LookaheadPlanner::new(cfg)),
                 }
             };
             // `live` runs the sequential (inline) consume path; `spec`

@@ -42,6 +42,7 @@ use super::scheduler::PrefillPlanner;
 use crate::config::{Placement, ShardingSpec};
 use crate::workload::RequestId;
 use crate::Micros;
+use std::collections::VecDeque;
 
 /// Per-shard counters surfaced in `RunReport` / Summary JSON.
 #[derive(Debug, Clone, Copy, Default)]
@@ -63,9 +64,11 @@ pub struct SchedulerShard {
     /// fleet: instance `d` belongs to shard `d % n_shards`).
     pub owned: Vec<usize>,
     /// Sliced prefill batches that yielded their slot at a slice
-    /// boundary (chunked prefill only; always empty otherwise). FIFO:
-    /// dispatch resumes the oldest parked batch first.
-    pub parked: Vec<ParkedPrefill>,
+    /// boundary (chunked prefill only; always empty otherwise). FIFO
+    /// per shard, so the front is always this shard's oldest parked
+    /// batch (by original dispatch `started_at`); dispatch compares
+    /// fronts *across* shards and resumes the globally oldest first.
+    pub parked: VecDeque<ParkedPrefill>,
     pub stats: ShardStats,
 }
 
@@ -99,7 +102,7 @@ impl ShardSet {
             .map(|i| SchedulerShard {
                 planner: factory(),
                 owned: (0..n_decode).filter(|d| d % n == i).collect(),
-                parked: Vec::new(),
+                parked: VecDeque::new(),
                 stats: ShardStats::default(),
             })
             .collect();
@@ -268,6 +271,24 @@ impl ShardSet {
             h > headroom || (h == headroom && s < si)
         });
         order.insert(at, (si, ti, headroom));
+    }
+
+    /// Shard holding the globally oldest parked sliced batch: minimum
+    /// head `started_at` (the batch's original dispatch instant; each
+    /// shard's FIFO keeps its own front oldest), shard id breaking exact
+    /// ties deterministically. The scheduler's resume paths must pick
+    /// through this — not dispatch (headroom) order — or a younger
+    /// parked batch on a high-headroom shard resumes ahead of an older
+    /// one elsewhere, violating the oldest-first resume contract. A
+    /// resume targets the batch's own original decode instance anyway,
+    /// so headroom preference bought nothing there.
+    pub fn oldest_parked_shard(&self) -> Option<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter_map(|(si, s)| s.parked.front().map(|p| (p.started_at, si)))
+            .min()
+            .map(|(_, si)| si)
     }
 
     /// Work-stealing pass, run at decode-iteration boundaries: every
@@ -615,6 +636,81 @@ mod tests {
                 );
             }
         });
+    }
+
+    /// A minimal parked sliced batch: only `started_at` matters to
+    /// resume-order selection.
+    fn parked_at(started_at: Micros) -> ParkedPrefill {
+        use crate::cluster::PrefillBatch;
+        use crate::coordinator::batcher::FormedBatch;
+        ParkedPrefill {
+            formed: FormedBatch {
+                batch: PrefillBatch { items: vec![], padded_len: 1 },
+                reqs: vec![],
+                bucket_up: 1,
+            },
+            target_decode: 0,
+            started_at,
+            cursor: 0,
+            width: 1,
+            reserved_so_far: 0,
+            exec_us: 0,
+        }
+    }
+
+    #[test]
+    fn parked_resume_picks_globally_oldest_across_shards() {
+        // Regression: the resume paths used to walk shards in dispatch
+        // (headroom) order and take the first one with anything parked.
+        // Park two batches in age-inverted headroom order — the *younger*
+        // batch on the shard dispatch order visits first — and assert
+        // selection still lands on the older batch's shard.
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec { shards: 0, ..Default::default() };
+        let mut set = ShardSet::new(&spec, 2, || planner(&cfg));
+        let mut decode = DecodeFleet::new(2);
+        // Shard 0 fronts the roomier decode instance...
+        decode.get_mut(0).reserved_tokens = 100;
+        decode.get_mut(1).reserved_tokens = 900;
+        let order = set.dispatch_order(&decode, 1000);
+        assert_eq!(
+            order[0].0, 0,
+            "setup: dispatch order must visit shard 0 first for the \
+             inversion to be exercised"
+        );
+        // ...but holds the younger parked batch. The buggy first-in-
+        // dispatch-order scan would resume shard 0's batch here.
+        set.get_mut(0).parked.push_back(parked_at(2_000));
+        set.get_mut(1).parked.push_back(parked_at(1_000));
+        assert_eq!(set.oldest_parked_shard(), Some(1), "older batch wins");
+        // Once the older batch is gone the younger one is next.
+        set.get_mut(1).parked.pop_front();
+        assert_eq!(set.oldest_parked_shard(), Some(0));
+        set.get_mut(0).parked.pop_front();
+        assert_eq!(set.oldest_parked_shard(), None, "nothing parked");
+        // Exact started_at ties break on shard id, deterministically.
+        set.get_mut(0).parked.push_back(parked_at(5_000));
+        set.get_mut(1).parked.push_back(parked_at(5_000));
+        assert_eq!(set.oldest_parked_shard(), Some(0));
+    }
+
+    #[test]
+    fn parked_fifo_front_is_per_shard_oldest() {
+        // Within one shard, parks happen in dispatch order, so the
+        // VecDeque front (what `oldest_parked_shard` inspects and
+        // `resume_parked` pops) is always that shard's oldest batch.
+        let cfg = SystemConfig::default();
+        let spec = ShardingSpec::default();
+        let mut set = ShardSet::new(&spec, 1, || planner(&cfg));
+        for t in [100, 200, 300] {
+            set.get_mut(0).parked.push_back(parked_at(t));
+        }
+        let front = set.get(0).parked.front().unwrap().started_at;
+        assert_eq!(front, 100);
+        assert_eq!(set.get_mut(0).parked.pop_front().unwrap().started_at, 100);
+        assert_eq!(set.get_mut(0).parked.pop_front().unwrap().started_at, 200);
+        assert_eq!(set.get_mut(0).parked.pop_front().unwrap().started_at, 300);
+        assert!(set.get(0).parked.is_empty());
     }
 
     #[test]

@@ -358,6 +358,9 @@ Config overrides: --scheduler.theta 0.5 --scheduler.policy sjf|ljf|fcfs
                   --admission.enabled on|off --admission.defer on|off
                   --admission.evict on|off --admission.slack_margin 0.1
                   --admission.offline_tbt_factor 8 --admission.max_evictions 2
+                  --planner.family bucket|fcfs|lookahead (prefill planner)
+                  --planner.window 32 --planner.commit_margin_us 50000
+                  --planner.offline_horizon_us 10000000
                   --executor.threads 1|N|0 (0 = one worker per shard;
                       parallel output is byte-identical to sequential)
                   --realtime.stream_buf 64 --realtime.ewma_alpha 0.2

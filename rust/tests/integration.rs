@@ -2,7 +2,7 @@
 //! system comparisons, and cross-module invariants.
 
 use bucketserve::baselines::System;
-use bucketserve::config::{Placement, Policy, SystemConfig};
+use bucketserve::config::{Placement, PlannerFamily, Policy, SystemConfig};
 use bucketserve::coordinator::RunReport;
 use bucketserve::metrics::Summary;
 use bucketserve::util::prop;
@@ -139,10 +139,14 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
     // joins last: with `chunk.enabled = false` (the default) the slicer
     // never fires, no batch parks, no decode iteration is hybrid-priced,
     // and no chunk key appears in the JSON, however aggressive the
-    // slice/hybrid/interleave knobs behind the switch. bucket_overhead_ns
-    // is the one wall-clock (hence nondeterministic) field and is
-    // normalized before comparison; everything else (makespans, per-class
-    // SLOs, counts) is virtual-time deterministic.
+    // slice/hybrid/interleave knobs behind the switch. The planner block
+    // joins the same contract from the other side: its master switch is
+    // `planner.family`, and with the default `bucket` family the
+    // lookahead-only knobs (window, commit margin, offline horizon) are
+    // inert however aggressively armed. bucket_overhead_ns is the one
+    // wall-clock (hence nondeterministic) field and is normalized before
+    // comparison; everything else (makespans, per-class SLOs, counts) is
+    // virtual-time deterministic.
     let trace = Trace::mixed_classes(
         Dataset::Alpaca, 40, 8.0, Dataset::LongBench, 20, 4096, 33,
     );
@@ -211,6 +215,13 @@ fn shards_1_summary_json_is_byte_identical_to_legacy() {
                 cfg.chunk.slice_tokens = 1;
                 cfg.chunk.hybrid = false;
                 cfg.chunk.interleave = false;
+                // And every lookahead knob except the family selector
+                // (the planner block's master switch): under the default
+                // bucket family the window/margin/horizon values must
+                // never be consulted.
+                cfg.planner.window = 1;
+                cfg.planner.commit_margin_us = 1;
+                cfg.planner.offline_horizon_us = 123_456;
                 // And the executor: with one shard, any thread count
                 // resolves to the sequential path, so `threads = 1`
                 // stays byte-identical to the pre-executor scheduler.
@@ -242,30 +253,41 @@ fn executor_determinism_matrix_across_threads_and_features() {
     // affinity placement so dispatch acquisitions, pin releases, and LRU
     // evictions all actually fire — all of which mutate cache state on
     // the merge loop and must be invisible to the thread count. Chunked
-    // prefill is the newest axis: sliced batches stretch one logical
-    // prefill across many events (each slice boundary a sync barrier for
-    // the workers), park/resume moves in-flight state between the shard
-    // and the fleet on the merge loop, and hybrid pricing keys off
-    // cross-fleet state — all of which must reproduce the sequential
-    // bytes under every thread count and planning mode.
-    let features: [(bool, bool, bool, bool, bool); 10] = [
-        (false, false, false, false, false),
-        (true, false, false, false, false),
-        (true, true, false, false, false),
-        (true, false, true, false, false),
-        (true, true, true, false, false),
-        (false, false, false, true, false),
-        (true, true, true, true, false),
-        (false, false, false, false, true),
-        (true, true, false, false, true),
-        (true, true, true, true, true),
+    // prefill stretches one logical prefill across many events (each
+    // slice boundary a sync barrier for the workers), park/resume moves
+    // in-flight state between the shard and the fleet on the merge loop,
+    // and hybrid pricing keys off cross-fleet state. The planner family
+    // is the newest axis: lookahead rows swap every shard's planner for
+    // the deadline-sorted hold-capable one, whose held plans (plan →
+    // None with a non-empty queue) and deadline-order drains must
+    // reproduce the sequential bytes under every thread count and
+    // planning mode — speculated hold decisions are pure functions of
+    // (snapshot, now, headroom), so offloaded planning may not perturb
+    // them. Feature tuples: (priority, preempt, admission, prefix,
+    // chunk, lookahead).
+    let features: [(bool, bool, bool, bool, bool, bool); 13] = [
+        (false, false, false, false, false, false),
+        (true, false, false, false, false, false),
+        (true, true, false, false, false, false),
+        (true, false, true, false, false, false),
+        (true, true, true, false, false, false),
+        (false, false, false, true, false, false),
+        (true, true, true, true, false, false),
+        (false, false, false, false, true, false),
+        (true, true, false, false, true, false),
+        (true, true, true, true, true, false),
+        (false, false, false, false, false, true),
+        (false, false, false, false, true, true),
+        (true, true, true, true, true, true),
     ];
     for seed in [33u64, 77] {
         let mixed = Trace::mixed_classes(
             Dataset::Alpaca, 30, 10.0, Dataset::LongBench, 15, 4096, seed,
         );
         let turns = Trace::multi_turn(Dataset::Alpaca, 8, 4, 12.0, 4096, seed);
-        for &(priority, preempt, admission, prefix, chunk) in &features {
+        for &(priority, preempt, admission, prefix, chunk, lookahead) in
+            &features
+        {
             let trace = if prefix { &turns } else { &mixed };
             let mut base = SystemConfig::default();
             base.fleet.n_prefill = 2;
@@ -283,6 +305,13 @@ fn executor_determinism_matrix_across_threads_and_features() {
             base.prefix.enabled = prefix;
             base.chunk.enabled = chunk;
             base.chunk.slice_tokens = 512;
+            if lookahead {
+                base.planner.family = PlannerFamily::Lookahead;
+                // A small window and short margin keep both branches of
+                // the hold gate live on these traces.
+                base.planner.window = 8;
+                base.planner.commit_margin_us = 20_000;
+            }
             // Tight budgets so the armed subsystems actually fire inside
             // the matrix (aborts, evictions, deferrals, cache churn), not
             // just idle. The small cache_frac forces LRU evictions.
@@ -323,7 +352,8 @@ fn executor_determinism_matrix_across_threads_and_features() {
                         "threads={threads} plan_offload={plan_offload} \
                          diverged from sequential (priority={priority} \
                          preempt={preempt} admission={admission} \
-                         prefix={prefix} chunk={chunk} seed={seed})"
+                         prefix={prefix} chunk={chunk} \
+                         lookahead={lookahead} seed={seed})"
                     );
                 }
             }
